@@ -1,0 +1,36 @@
+"""Fig. 9: AoPI + accuracy vs wireless bandwidth, all methods."""
+from repro.core import baselines, lbcd, profiles
+
+from .common import emit
+
+METHODS = ("LBCD", "MIN", "DOS", "JCAB")
+
+
+def _run_method(name, system, slots):
+    if name == "LBCD":
+        return lbcd.LBCDController(system, v=10.0, p_min=0.7).run(slots)
+    return baselines.make(name, system).run(slots)
+
+
+def sweep(param_name, values, sys_kw_fn, slots):
+    rows = []
+    for val in values:
+        for m in METHODS:
+            system = profiles.EdgeSystem(**sys_kw_fn(val))
+            s = _run_method(m, system, slots)
+            rows.append([param_name, float(val), m, s.mean_aopi,
+                         s.mean_acc])
+    return rows
+
+
+def run(full: bool = False):
+    slots = 30 if full else 15
+    vals = (10e6, 20e6, 30e6, 40e6, 50e6) if full else (10e6, 30e6, 50e6)
+    rows = sweep(
+        "bandwidth_hz", vals,
+        lambda v: dict(n_cameras=30, n_servers=3, n_slots=slots,
+                       mean_bandwidth_hz=v, mean_compute_flops=50e12),
+        slots)
+    emit("fig9_bandwidth", rows,
+         ["param", "value", "method", "mean_aopi", "mean_acc"])
+    return rows

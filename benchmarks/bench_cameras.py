@@ -1,0 +1,16 @@
+"""Fig. 11: AoPI + accuracy vs camera count, all methods."""
+from .bench_bandwidth import sweep
+from .common import emit
+
+
+def run(full: bool = False):
+    slots = 30 if full else 15
+    vals = (10, 20, 30, 40, 50) if full else (10, 30, 50)
+    rows = sweep(
+        "n_cameras", vals,
+        lambda v: dict(n_cameras=int(v), n_servers=3, n_slots=slots,
+                       mean_bandwidth_hz=30e6, mean_compute_flops=50e12),
+        slots)
+    emit("fig11_cameras", rows,
+         ["param", "value", "method", "mean_aopi", "mean_acc"])
+    return rows

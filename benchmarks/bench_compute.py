@@ -1,0 +1,17 @@
+"""Fig. 10: AoPI + accuracy vs computation capacity, all methods."""
+from .bench_bandwidth import sweep
+from .common import emit
+
+
+def run(full: bool = False):
+    slots = 30 if full else 15
+    vals = (20e12, 30e12, 40e12, 50e12, 60e12) if full else \
+        (20e12, 40e12, 60e12)
+    rows = sweep(
+        "compute_flops", vals,
+        lambda v: dict(n_cameras=30, n_servers=3, n_slots=slots,
+                       mean_bandwidth_hz=30e6, mean_compute_flops=v),
+        slots)
+    emit("fig10_compute", rows,
+         ["param", "value", "method", "mean_aopi", "mean_acc"])
+    return rows

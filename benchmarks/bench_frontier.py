@@ -1,0 +1,22 @@
+"""Figs. 3 + 5: minimum transmission/computation rate for AoPI <= target."""
+import numpy as np
+
+from repro.core import aopi
+
+from .common import emit
+
+
+def run(full: bool = False):
+    rows = []
+    target, p = 0.5, 0.8
+    pts = 16 if full else 8
+    for pol, name in ((0, "fcfs"), (1, "lcfsp")):
+        for mu in np.linspace(4.0, 40.0, pts):
+            lam_min = float(aopi.min_lam_for_target(target, mu, p, pol))
+            rows.append([name, "min_lam", float(mu), lam_min])
+        for lam in np.linspace(3.0, 30.0, pts):
+            mu_min = float(aopi.min_mu_for_target(target, lam, p, pol))
+            rows.append([name, "min_mu", float(lam), mu_min])
+    emit("fig3_5_frontier", rows, ["policy", "kind", "given_rate",
+                                   "min_rate"])
+    return rows

@@ -1,0 +1,28 @@
+"""Figs. 7-8: P_min and V sweeps for LBCD."""
+from repro.core import lbcd, profiles
+
+from .common import emit
+
+
+def _sys(seed=0):
+    return profiles.EdgeSystem(n_cameras=18, n_servers=3, n_slots=40,
+                               seed=seed, mean_bandwidth_hz=15e6,
+                               mean_compute_flops=20e12)
+
+
+def run(full: bool = False):
+    slots = 60 if full else 30
+    rows = []
+    for p_min in (0.3, 0.5, 0.7, 0.9):
+        s = lbcd.LBCDController(_sys(), v=10.0, p_min=p_min).run(slots)
+        rows.append(["p_min", p_min, s.mean_aopi, s.mean_acc,
+                     float(s.acc_series[-5:].mean()),
+                     float(s.q_series[-1])])
+    for v in (1.0, 10.0, 100.0):
+        s = lbcd.LBCDController(_sys(), v=v, p_min=0.7).run(slots)
+        rows.append(["V", v, s.mean_aopi, s.mean_acc,
+                     float(s.acc_series[-5:].mean()),
+                     float(s.q_series[-1])])
+    emit("fig7_8_hyperparams", rows,
+         ["param", "value", "mean_aopi", "mean_acc", "tail_acc", "q_end"])
+    return rows

@@ -1,0 +1,32 @@
+"""Fig. 12: controller execution time + memory vs camera count.
+
+Also demonstrates §Scale-out: the vectorized per-slot solve stays in
+milliseconds for thousands of streams.
+"""
+import tracemalloc
+
+from repro.core import baselines, lbcd, profiles
+
+from .common import emit, timer
+
+
+def run(full: bool = False):
+    counts = (10, 20, 50, 200, 1000, 10000) if full else (10, 20, 100, 1000)
+    rows = []
+    for n in counts:
+        system = profiles.EdgeSystem(n_cameras=n, n_servers=3, n_slots=4)
+        for name in ("LBCD", "DOS", "JCAB"):
+            if name == "LBCD":
+                ctrl = lbcd.LBCDController(system, v=10.0, p_min=0.7)
+            else:
+                ctrl = baselines.make(name, system)
+            ctrl.step(0)                     # jit warmup
+            tracemalloc.start()
+            with timer() as t:
+                ctrl.step(1)
+            _, peak = tracemalloc.get_traced_memory()
+            tracemalloc.stop()
+            rows.append([n, name, t.elapsed, peak / 2**20])
+    emit("fig12_overhead", rows,
+         ["n_cameras", "method", "seconds_per_slot", "peak_mib"])
+    return rows

@@ -1,0 +1,25 @@
+"""Fig. 6: optimal-policy phase diagram over (load rho, accuracy p)."""
+import numpy as np
+
+from repro.core import aopi
+
+from .common import emit
+
+
+def run(full: bool = False):
+    rows = []
+    mu = 10.0
+    grid = 17 if full else 9
+    for rho in np.linspace(0.1, 1.5, grid):
+        thr = float(aopi.policy_threshold(rho))
+        for p in np.linspace(0.1, 0.95, grid):
+            pol = int(aopi.optimal_policy(rho * mu, mu, p))
+            # cross-check against direct evaluation
+            af = float(aopi.aopi_fcfs(rho * mu, mu, p))
+            al = float(aopi.aopi_lcfsp(rho * mu, mu, p))
+            direct = int(al <= af)
+            assert pol == direct, (rho, p)
+            rows.append([float(rho), float(p), pol, thr])
+    emit("fig6_policy_phase", rows, ["rho", "p", "optimal_policy",
+                                     "threshold_p"])
+    return rows

@@ -1,0 +1,30 @@
+"""Figs. 14-15: theoretical vs simulated AoPI, FCFS/LCFSP, exp + testbed
+(uniform) delay regimes, CPU-like (slow mu) and GPU-like (fast mu) servers."""
+from repro.core import aopi, queues
+
+from .common import emit
+
+
+def run(full: bool = False):
+    n = 400_000 if full else 120_000
+    rows = []
+    # (regime, mu): CPU-like edge server vs GPU-like (paper §VI-C1).
+    for server, mu in (("cpu", 8.0), ("gpu", 40.0)):
+        for lam in (2.0, 5.0, 7.0) if mu == 8.0 else (5.0, 15.0, 30.0):
+            for p in (0.6, 0.8):
+                for pol, name in ((0, "fcfs"), (1, "lcfsp")):
+                    if pol == 0 and lam >= mu:
+                        continue
+                    th = float(aopi.aopi(lam, mu, p, pol))
+                    s_exp = queues.simulate(lam, mu, p, pol,
+                                            n_frames=n).mean_aopi
+                    s_uni = queues.simulate(
+                        lam, mu, p, pol, n_frames=n,
+                        t_sampler=queues.uniform_sampler(1 / lam),
+                        o_sampler=queues.uniform_sampler(1 / mu)).mean_aopi
+                    rows.append([server, name, lam, mu, p, th, s_exp,
+                                 abs(s_exp - th) / th, s_uni])
+    emit("fig14_15_validation", rows,
+         ["server", "policy", "lam", "mu", "p", "theory", "sim_exp",
+          "rel_err_exp", "sim_uniform"])
+    return rows

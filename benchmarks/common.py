@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: timing, CSV rows, result persistence."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
+
+
+def emit(name: str, rows: list, header: list):
+    """Print CSV to stdout and persist JSON under results/bench."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    print(f"## {name}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(f"{v:.6g}" if isinstance(v, float) else str(v)
+                       for v in r))
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump({"header": header, "rows": rows}, f, indent=1,
+                  default=float)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0

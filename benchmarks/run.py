@@ -1,0 +1,44 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Emits CSV blocks per figure and persists JSON under results/bench/.
+"""
+import argparse
+import sys
+import time
+
+from . import (bench_bandwidth, bench_cameras, bench_compute,
+               bench_energy, bench_frontier, bench_hyperparams,
+               bench_overhead, bench_policy, bench_validation)
+
+ALL = {
+    "fig14_15_validation": bench_validation.run,
+    "fig6_policy_phase": bench_policy.run,
+    "fig3_5_frontier": bench_frontier.run,
+    "fig7_8_hyperparams": bench_hyperparams.run,
+    "fig9_bandwidth": bench_bandwidth.run,
+    "fig10_compute": bench_compute.run,
+    "fig11_cameras": bench_cameras.run,
+    "fig12_overhead": bench_overhead.run,
+    "beyond_energy": bench_energy.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    t0 = time.time()
+    for name, fn in ALL.items():
+        if args.only and args.only not in name:
+            continue
+        t = time.time()
+        fn(full=args.full)
+        print(f"[{name}: {time.time()-t:.1f}s]\n", flush=True)
+    print(f"total {time.time()-t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

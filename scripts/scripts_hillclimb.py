@@ -1,0 +1,59 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys; sys.path.insert(0, "src")
+import dataclasses, json
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import measure_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import terms_from_record
+
+mesh = make_production_mesh(multi_pod=False)
+out_dir = "results/hillclimb"
+
+RUNS = [
+    # Cell A: yi-34b train_4k — worst train roofline (heads 56 unshardable)
+    ("A_yi34b_train__baseline", configs.get("yi-34b"), "train_4k", {}),
+    ("A_yi34b_train__pad_heads64",
+     dataclasses.replace(configs.get("yi-34b"), pad_heads_to=64),
+     "train_4k", {}),
+    ("A_yi34b_train__pad_heads64_remat_dots",
+     dataclasses.replace(configs.get("yi-34b"), pad_heads_to=64,
+                         remat="dots"),
+     "train_4k", {}),
+    # Cell B: xlstm prefill_32k — quadratic mLSTM parallel form
+    ("B_xlstm_prefill__baseline", configs.get("xlstm-1.3b"),
+     "prefill_32k", {}),
+    ("B_xlstm_prefill__chunkwise", configs.get("xlstm-1.3b"),
+     "prefill_32k", {"mlstm_impl": "chunkwise"}),
+    # Cell C: dbrx decode_32k — collective-bound MoE serving cell
+    ("C_dbrx_decode__baseline", configs.get("dbrx-132b"), "decode_32k", {}),
+    ("C_dbrx_decode__no_fsdp", configs.get("dbrx-132b"), "decode_32k",
+     {"rule_overrides": {"embed": None}}),
+]
+
+name_filter = sys.argv[1] if len(sys.argv) > 1 else ""
+for name, cfg, shape_name, kw in RUNS:
+    if name_filter and name_filter not in name:
+        continue
+    path = f"{out_dir}/{name}.json"
+    if os.path.exists(path):
+        print("skip (exists)", name); continue
+    try:
+        rec = measure_cell(cfg, SHAPES[shape_name], mesh, **kw)
+        rec["mesh_name"] = "single"
+        rec["variant"] = name
+        t = terms_from_record(rec)
+        rec["terms"] = t
+        print(f"{name}: flops={rec['extrapolated']['flops']:.3e} "
+              f"coll={rec['extrapolated']['coll']:.3e} "
+              f"tC={t['t_compute_s']:.3e} tM={t['t_memory_s']:.3e} "
+              f"tX={t['t_collective_s']:.3e} dom={t['dominant']} "
+              f"frac={t['roofline_fraction']:.3f}", flush=True)
+    except Exception as e:
+        import traceback
+        rec = {"variant": name, "error": str(e),
+               "traceback": traceback.format_exc()}
+        print(f"{name}: FAIL {e}", flush=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)

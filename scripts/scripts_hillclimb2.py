@@ -1,0 +1,49 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys; sys.path.insert(0, "src")
+import dataclasses, json
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import measure_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import terms_from_record
+
+mesh = make_production_mesh(multi_pod=False)
+out_dir = "results/hillclimb"
+
+RUNS = [
+    # A iter 3: hoist the FSDP all-gather out of the microbatch loop.
+    ("A_yi34b_train__pad64_dots_hoist",
+     dataclasses.replace(configs.get("yi-34b"), pad_heads_to=64,
+                         remat="dots"),
+     "train_4k", {"hoist_fsdp_gather": True}),
+    # B iter 2: chunkwise + TP-only weights at inference (no per-layer
+    # FSDP gathers inside the period scan).
+    ("B_xlstm_prefill__chunk_nofsdp", configs.get("xlstm-1.3b"),
+     "prefill_32k",
+     {"mlstm_impl": "chunkwise", "rule_overrides": {"embed": None}}),
+    # C iter 2: split-KV decode attention constraints (+ TP-only weights).
+    ("C_dbrx_decode__splitkv", configs.get("dbrx-132b"), "decode_32k",
+     {"rule_overrides": {"embed": None}}),
+]
+
+for name, cfg, shape_name, kw in RUNS:
+    path = f"{out_dir}/{name}.json"
+    try:
+        rec = measure_cell(cfg, SHAPES[shape_name], mesh, **kw)
+        rec["mesh_name"] = "single"
+        rec["variant"] = name
+        t = terms_from_record(rec)
+        rec["terms"] = t
+        print(f"{name}: flops={rec['extrapolated']['flops']:.3e} "
+              f"coll={rec['extrapolated']['coll']:.3e} "
+              f"tC={t['t_compute_s']:.3e} tM={t['t_memory_s']:.3e} "
+              f"tX={t['t_collective_s']:.3e} dom={t['dominant']} "
+              f"frac={t['roofline_fraction']:.3f}", flush=True)
+    except Exception as e:
+        import traceback
+        rec = {"variant": name, "error": str(e),
+               "traceback": traceback.format_exc()}
+        print(f"{name}: FAIL {e}", flush=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)

@@ -1,0 +1,53 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys; sys.path.insert(0, "src")
+import dataclasses, json
+import jax
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch.dryrun import measure_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import terms_from_record
+
+mesh = make_production_mesh(multi_pod=False)
+island = jax.make_mesh((16, 1), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+out_dir = "results/hillclimb"
+
+yi = dataclasses.replace(configs.get("yi-34b"), pad_heads_to=64,
+                         remat="dots")
+RUNS = [
+    # A iter 4: measure per-microbatch collective slope at nm=1 vs nm=2
+    # (unrolled) with and without the hoisted gather.
+    ("A_yi34b_train__pad64_dots_nm2", yi, "train_4k",
+     {"n_microbatches": 2}, mesh),
+    ("A_yi34b_train__pad64_dots_nm2_hoist", yi, "train_4k",
+     {"n_microbatches": 2, "hoist_fsdp_gather": True}, mesh),
+    # A iter 5: sequence-parallel residual.
+    ("A_yi34b_train__pad64_dots_sp", yi, "train_4k",
+     {"rule_overrides": {"act_seq": "model"}}, mesh),
+    # B iter 3: island serving — one (16,1) replica; aggregate = 16x.
+    ("B_xlstm_prefill__chunk_island", configs.get("xlstm-1.3b"),
+     "prefill_32k", {"mlstm_impl": "chunkwise"}, island),
+]
+
+for name, cfg, shape_name, kw, m in RUNS:
+    path = f"{out_dir}/{name}.json"
+    try:
+        rec = measure_cell(cfg, SHAPES[shape_name], m, **kw)
+        rec["mesh_name"] = "island" if m is island else "single"
+        rec["variant"] = name
+        t = terms_from_record(rec)
+        rec["terms"] = t
+        print(f"{name}: flops={rec['extrapolated']['flops']:.3e} "
+              f"coll={rec['extrapolated']['coll']:.3e} "
+              f"tC={t['t_compute_s']:.3e} tM={t['t_memory_s']:.3e} "
+              f"tX={t['t_collective_s']:.3e} dom={t['dominant']} "
+              f"frac={t['roofline_fraction']:.3f}", flush=True)
+    except Exception as e:
+        import traceback
+        rec = {"variant": name, "error": str(e),
+               "traceback": traceback.format_exc()}
+        print(f"{name}: FAIL {e}", flush=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)

@@ -1,0 +1,27 @@
+"""Assigned-architecture configs (--arch <id>) + the paper's edge profile."""
+from . import base
+from .base import (ALL_SHAPES, SHAPES, InputShape, ModelConfig,
+                   shape_supported, smoke_shape)
+
+from .llama_3_2_vision_11b import CONFIG as LLAMA_32_VISION_11B
+from .dbrx_132b import CONFIG as DBRX_132B
+from .qwen2_moe_a2_7b import CONFIG as QWEN2_MOE_A27B
+from .yi_34b import CONFIG as YI_34B
+from .qwen2_5_3b import CONFIG as QWEN25_3B
+from .yi_6b import CONFIG as YI_6B
+from .minicpm3_4b import CONFIG as MINICPM3_4B
+from .xlstm_1_3b import CONFIG as XLSTM_13B
+from .jamba_1_5_large_398b import CONFIG as JAMBA_15_LARGE_398B
+from .seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
+
+ARCHS = {c.name: c for c in [
+    LLAMA_32_VISION_11B, DBRX_132B, QWEN2_MOE_A27B, YI_34B, QWEN25_3B,
+    YI_6B, MINICPM3_4B, XLSTM_13B, JAMBA_15_LARGE_398B,
+    SEAMLESS_M4T_LARGE_V2,
+]}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,12 @@
+"""Core implementation of the paper's contribution.
+
+AoPI closed forms (Theorems 1-3), discrete-event oracles, the Lyapunov
+virtual-queue framework, Algorithm 1 (BCD over configuration + allocation),
+Algorithm 2 (first-fit server selection), Algorithm 3 (the LBCD controller),
+and the DOS/JCAB/MIN baselines.
+"""
+from . import (allocate, aopi, baselines, bcd, binpack, energy, lbcd,
+               lyapunov, profiles, queues)
+
+__all__ = ["allocate", "aopi", "baselines", "bcd", "binpack", "energy",
+           "lbcd", "lyapunov", "profiles", "queues"]

@@ -1,0 +1,305 @@
+"""Bandwidth / computation resource allocators (Algorithm 1, lines 4-5).
+
+Given fixed video configurations, problems (53)/(54) are separable convex
+programs with one simplex (budget) constraint per edge server:
+
+    min_b  sum_n A_n(lam_n(b_n), mu_n)   s.t.  sum_{n in s} b_n <= B_s
+    min_c  sum_n A_n(lam_n, mu_n(c_n))   s.t.  sum_{n in s} c_n <= C_s
+
+with lam_n = b_n * eff_n / size_n  (Eqs. 1-2) and mu_n = c_n / xi_n (Eq. 3).
+
+Two solvers are provided:
+
+  * ``waterfill_bandwidth`` / ``waterfill_compute`` — **beyond-paper** exact
+    KKT water-filling. The per-camera marginal-value functions h_n are
+    monotone, so the per-server dual nu_s is found by (log-domain) bisection
+    and each camera's allocation by a closed form (LCFSP) or an inner
+    bisection (FCFS). Fully vectorized over cameras and servers, jit-safe.
+
+  * ``interior_point`` — the **paper-faithful** log-barrier damped-Newton
+    interior-point method. The objective is separable, so the KKT system has
+    a diagonal Hessian plus one dual variable per server and solves in
+    closed form per iteration.
+
+Both operate in normalized per-server units (x = allocation / budget) so all
+quantities are O(1) in float32. Tests assert the two agree to <0.1%.
+
+Constraint (10) (FCFS stability lam < mu) appears as an upper cap on
+bandwidth (lam <= lam* < mu, the interior minimizer of the convex A_F) and a
+lower floor on compute (mu >= lam * (1 + margin)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import aopi
+
+_LOG_NU_LO = -34.0   # dual-variable search window (log domain)
+_LOG_NU_HI = 34.0
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Marginal value functions  h = -dA/dx  in normalized allocation units.
+# ---------------------------------------------------------------------------
+
+def _h_bandwidth(u, lam_scale, mu, p, pol):
+    """-dA/du at normalized bandwidth u (lam = lam_scale * u), >= 0 on the
+    decreasing branch of A."""
+    lam = jnp.maximum(lam_scale * u, _EPS)
+    d_l = aopi.d_aopi_lcfsp_dlam(lam, mu, p)
+    d_f = aopi.d_aopi_fcfs_dlam(jnp.minimum(lam, 0.999 * mu), mu, p)
+    d = jnp.where(pol == aopi.LCFSP, d_l, d_f)
+    return jnp.maximum(-d * lam_scale, 0.0)
+
+
+def _h_compute(v, mu_scale, lam, p, pol):
+    """-dA/dv at normalized compute v (mu = mu_scale * v), always >= 0."""
+    mu = jnp.maximum(mu_scale * v, _EPS)
+    d_l = aopi.d_aopi_lcfsp_dmu(lam, mu, p)
+    d_f = aopi.d_aopi_fcfs_dmu(jnp.minimum(lam, 0.999 * mu), mu, p)
+    d = jnp.where(pol == aopi.LCFSP, d_l, d_f)
+    return jnp.maximum(-d * mu_scale, 0.0)
+
+
+def _solve_h_equals_nu(h_fn, nu, lo, hi, iters: int = 48):
+    """Per-camera inner bisection: largest x in [lo, hi] with h(x) >= nu.
+
+    ``h_fn`` is elementwise-monotone decreasing in x; vectorized over
+    cameras. Returns hi where h(hi) >= nu and lo where h(lo) <= nu.
+    """
+    def body(_, state):
+        a, b = state
+        mid = 0.5 * (a + b)
+        go_up = h_fn(mid) >= nu
+        return jnp.where(go_up, mid, a), jnp.where(go_up, b, mid)
+
+    a, b = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (a + b)
+
+
+def _waterfill(h_fn, closed_form, lo, hi, server_id, n_servers,
+               outer_iters: int = 54, inner_iters: int = 40):
+    """Generic per-server water-filling.
+
+    Finds per-server duals nu_s such that sum_{n in s} x_n(nu_s) = 1 (in
+    normalized units), where x_n(nu) = clip(solution of h_n(x)=nu, lo, hi).
+    ``closed_form(nu)`` gives the exact solution where available (LCFSP);
+    cameras with ``closed_form`` returning nan fall back to bisection.
+    """
+    def alloc_at(log_nu_s):
+        nu = jnp.exp(log_nu_s)[server_id]
+        x_cf = closed_form(nu)
+        x_bi = _solve_h_equals_nu(h_fn, nu, lo, hi, inner_iters)
+        x = jnp.where(jnp.isnan(x_cf), x_bi, x_cf)
+        return jnp.clip(x, lo, hi)
+
+    def fill(log_nu_s):
+        x = alloc_at(log_nu_s)
+        return jax.ops.segment_sum(x, server_id, num_segments=n_servers)
+
+    def body(_, state):
+        a, b = state
+        mid = 0.5 * (a + b)
+        over = fill(mid) > 1.0     # still over budget -> raise the price
+        return jnp.where(over, mid, a), jnp.where(over, b, mid)
+
+    a0 = jnp.full((n_servers,), _LOG_NU_LO)
+    b0 = jnp.full((n_servers,), _LOG_NU_HI)
+    a, b = jax.lax.fori_loop(0, outer_iters, body, (a0, b0))
+    log_nu = 0.5 * (a + b)
+    x = alloc_at(log_nu)
+    # If the total cap is below budget the constraint is slack: keep caps.
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("n_servers",))
+def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers):
+    """Allocate bandwidth b[n] (Hz) per server budget.
+
+    Args:
+      k: lam-per-Hz coefficient, eff_n / size_n  [frames/s/Hz].
+      p, pol, mu: per-camera accuracy, policy, fixed computation rate.
+      server_id: int[n] in [0, n_servers).
+      budgets: float[n_servers] available Hz per server.
+    """
+    B = budgets[server_id]
+    lam_scale = k * B                    # lam at full budget
+    # FCFS cap: interior minimizer lam* of A_F; LCFSP cap: the full budget.
+    lam_star = aopi.argmin_lam_fcfs(mu, p)
+    hi = jnp.where(pol == aopi.LCFSP, 1.0,
+                   jnp.minimum(lam_star / jnp.maximum(lam_scale, _EPS), 1.0))
+    lo = jnp.full_like(hi, 1e-9)
+
+    def h_fn(u):
+        return _h_bandwidth(u, lam_scale, mu, p, pol)
+
+    def closed_form(nu):
+        # LCFSP: (1+1/p) * lam_scale / (lam_scale*u)^2 = nu
+        u = jnp.sqrt((1.0 + 1.0 / p) / jnp.maximum(lam_scale * nu, _EPS))
+        return jnp.where(pol == aopi.LCFSP, u, jnp.nan)
+
+    u = _waterfill(h_fn, closed_form, lo, hi, server_id, n_servers)
+    return u * B
+
+
+@functools.partial(jax.jit, static_argnames=("n_servers",))
+def waterfill_compute(inv_xi, p, pol, lam, server_id, budgets, n_servers,
+                      stability_margin: float = 1.05):
+    """Allocate computation c[n] (FLOPS) per server budget.
+
+    Args:
+      inv_xi: mu-per-FLOPS coefficient, 1 / xi(r, m)  [frames/s/FLOPS].
+      lam: fixed per-camera transmission rates.
+    """
+    C = budgets[server_id]
+    mu_scale = inv_xi * C
+    floor = jnp.where(pol == aopi.FCFS,
+                      stability_margin * lam / jnp.maximum(mu_scale, _EPS),
+                      1e-9)
+    # Best effort if FCFS floors alone exceed a server's budget.
+    floor_tot = jax.ops.segment_sum(floor, server_id, num_segments=n_servers)
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(floor_tot, _EPS))[server_id]
+    floor = floor * scale
+    lo = jnp.clip(floor, 1e-9, 1.0)
+    hi = jnp.ones_like(lo)
+
+    def h_fn(v):
+        return _h_compute(v, mu_scale, lam, p, pol)
+
+    def closed_form(nu):
+        # LCFSP: mu_scale / (p * (mu_scale*v)^2) = nu
+        v = jnp.sqrt(1.0 / jnp.maximum(p * mu_scale * nu, _EPS))
+        return jnp.where(pol == aopi.LCFSP, v, jnp.nan)
+
+    v = _waterfill(h_fn, closed_form, lo, hi, server_id, n_servers)
+    return v * C
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful interior-point method (log-barrier + damped Newton).
+# ---------------------------------------------------------------------------
+
+def _kkt_step(g, h, x, server_id, n_servers, target_fill):
+    """Equality-constrained Newton step with diagonal Hessian.
+
+    Solves  [diag(h)  W^T; W  0] [dx; nu] = [-g; r]  where W is the
+    camera->server indicator and r the budget residual.
+    """
+    h = jnp.maximum(h, 1e-8)
+    inv_h = 1.0 / h
+    g_over_h = jax.ops.segment_sum(g * inv_h, server_id,
+                                   num_segments=n_servers)
+    inv_sum = jax.ops.segment_sum(inv_h, server_id, num_segments=n_servers)
+    fill = jax.ops.segment_sum(x, server_id, num_segments=n_servers)
+    r = target_fill - fill
+    nu = (-g_over_h - r) / jnp.maximum(inv_sum, 1e-8)
+    dx = -(g + nu[server_id]) * inv_h
+    return dx
+
+
+def interior_point(score_elem, x0, lo, hi, server_id, budgets, n_servers,
+                   t0: float = 4.0, t_mult: float = 6.0, n_outer: int = 7,
+                   n_inner: int = 14):
+    """Minimize sum_n score_elem(x_n, n) s.t. per-server sum == budget,
+    lo <= x <= hi. The paper's Algorithm-1 interior-point step.
+
+    ``score_elem(x, idx)`` must be per-element (separable) and convex in x.
+    ``x0`` must be strictly feasible. All arguments in normalized units.
+    """
+    def phi_elem(x, idx, t):
+        s = score_elem(x, idx)
+        barrier = -jnp.log(jnp.maximum(x - lo[idx], _EPS)) \
+                  -jnp.log(jnp.maximum(hi[idx] - x, _EPS))
+        return t * s + barrier
+
+    d1 = jax.vmap(jax.grad(phi_elem), in_axes=(0, 0, None))
+    d2 = jax.vmap(jax.grad(jax.grad(phi_elem)), in_axes=(0, 0, None))
+    idxs = jnp.arange(x0.shape[0])
+    # The budget is an inequality; when the per-camera caps sum below it the
+    # equality target is the (slightly interior) cap total instead.
+    cap_tot = jax.ops.segment_sum(hi, server_id, num_segments=n_servers)
+    target_fill = jnp.minimum(jnp.ones((n_servers,)), 0.999 * cap_tot)
+
+    def total_phi(x, t):
+        return jnp.sum(jax.vmap(phi_elem, in_axes=(0, 0, None))(x, idxs, t))
+
+    def inner(x, t):
+        def step(_, x):
+            g = d1(x, idxs, t)
+            h = d2(x, idxs, t)
+            dx = _kkt_step(g, h, x, server_id, n_servers, target_fill)
+            # Damped step: largest alpha in a geometric ladder that stays
+            # strictly inside the box and does not increase phi.
+            alphas = 2.0 ** -jnp.arange(8.0)
+            cand = x[None, :] + alphas[:, None] * dx[None, :]
+            feas = jnp.all((cand > lo[None, :] + _EPS) &
+                           (cand < hi[None, :] - _EPS), axis=1)
+            vals = jax.vmap(total_phi, in_axes=(0, None))(cand, t)
+            vals = jnp.where(feas, vals, jnp.inf)
+            best = jnp.argmin(vals)
+            improved = vals[best] < total_phi(x, t)
+            return jnp.where(improved, cand[best], x)
+        return jax.lax.fori_loop(0, n_inner, step, x)
+
+    def outer(i, x):
+        t = t0 * t_mult ** i.astype(jnp.float32)
+        return inner(x, t)
+
+    return jax.lax.fori_loop(0, n_outer, outer, x0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_servers",))
+def interior_point_bandwidth(k, p, pol, mu, server_id, budgets, n_servers):
+    """Problem (53) via the paper's interior-point method."""
+    B = budgets[server_id]
+    lam_scale = k * B
+    hi = jnp.where(pol == aopi.LCFSP, 1.0,
+                   jnp.minimum(0.995 * mu / jnp.maximum(lam_scale, _EPS), 1.0))
+    lo = jnp.full_like(hi, 1e-7)
+    counts = jax.ops.segment_sum(jnp.ones_like(k), server_id,
+                                 num_segments=n_servers)
+    x0 = jnp.clip((1.0 / jnp.maximum(counts, 1.0))[server_id], lo + 1e-6,
+                  hi - 1e-6)
+
+    def score(x, idx):
+        lam = lam_scale[idx] * x
+        a_l = aopi.aopi_lcfsp(lam, mu[idx], p[idx])
+        lam_c = jnp.minimum(lam, 0.999 * mu[idx])
+        a_f = aopi.aopi_fcfs(lam_c, mu[idx], p[idx])
+        return jnp.where(pol[idx] == aopi.LCFSP, a_l, a_f)
+
+    u = interior_point(score, x0, lo, hi, server_id, budgets, n_servers)
+    return u * B
+
+
+@functools.partial(jax.jit, static_argnames=("n_servers",))
+def interior_point_compute(inv_xi, p, pol, lam, server_id, budgets,
+                           n_servers, stability_margin: float = 1.05):
+    """Problem (54) via the paper's interior-point method."""
+    C = budgets[server_id]
+    mu_scale = inv_xi * C
+    floor = jnp.where(pol == aopi.FCFS,
+                      stability_margin * lam / jnp.maximum(mu_scale, _EPS),
+                      1e-7)
+    floor_tot = jax.ops.segment_sum(floor, server_id, num_segments=n_servers)
+    scale = jnp.minimum(1.0, 1.0 / jnp.maximum(floor_tot, _EPS))[server_id]
+    lo = jnp.clip(floor * scale, 1e-7, 1.0 - 1e-6)
+    hi = jnp.ones_like(lo)
+    counts = jax.ops.segment_sum(jnp.ones_like(lam), server_id,
+                                 num_segments=n_servers)
+    x0 = jnp.clip((1.0 / jnp.maximum(counts, 1.0))[server_id], lo + 1e-6,
+                  hi - 1e-6)
+
+    def score(x, idx):
+        mu = mu_scale[idx] * x
+        a_l = aopi.aopi_lcfsp(lam[idx], mu, p[idx])
+        mu_c = jnp.maximum(mu, lam[idx] / 0.999)
+        a_f = aopi.aopi_fcfs(lam[idx], mu_c, p[idx])
+        return jnp.where(pol[idx] == aopi.LCFSP, a_l, a_f)
+
+    v = interior_point(score, x0, lo, hi, server_id, budgets, n_servers)
+    return v * C

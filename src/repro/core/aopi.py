@@ -1,0 +1,186 @@
+"""Closed-form Age-of-Processed-Information (AoPI) expressions.
+
+Implements Theorems 1-3 of "Towards Timely Video Analytics Services at the
+Network Edge" as vectorized, differentiable JAX functions.
+
+Notation (per-slot, per-camera; subscripts dropped as in the paper §IV):
+    lam : average transmission (frame upload) rate, 1/E[T]   [frames/s]
+    mu  : average computation (recognition) rate, 1/E[O]     [frames/s]
+    p   : per-frame recognition accuracy in (0, 1]
+
+Both transmission and computation delays are modeled exponential. The FCFS
+form (Theorem 1) is only finite in the stable region ``lam < mu``; outside it
+we return +inf so that optimizers naturally avoid the unstable region
+(constraint (10) of problem (P1)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FCFS = 0
+LCFSP = 1
+
+_BIG = jnp.inf
+
+
+def aopi_fcfs(lam, mu, p):
+    """Average AoPI under the FCFS policy (Theorem 1, Eq. 11).
+
+    A_F = (1 + 1/p)/lam + 1/mu + (2 lam^3 + lam mu^2 - mu lam^2)
+                                  / (mu^4 - mu^2 lam^2)
+
+    Returns +inf where the M/M/1 queue is unstable (lam >= mu).
+    """
+    lam, mu, p = jnp.asarray(lam, jnp.float64 if jax.config.jax_enable_x64
+                             else jnp.float32), jnp.asarray(mu), jnp.asarray(p)
+    stable = lam < mu
+    # Evaluate on a clamped-safe lam to avoid nan grads from the masked branch.
+    lam_s = jnp.where(stable, lam, 0.5 * mu)
+    queue = (2.0 * lam_s**3 + lam_s * mu**2 - mu * lam_s**2) / (
+        mu**4 - mu**2 * lam_s**2)
+    a = (1.0 + 1.0 / p) / lam_s + 1.0 / mu + queue
+    return jnp.where(stable, a, _BIG)
+
+
+def aopi_lcfsp(lam, mu, p):
+    """Average AoPI under the LCFSP policy (Theorem 2, Eq. 23).
+
+    A_L = (1 + 1/p)/lam + 1/(p mu).   Finite for all lam, mu > 0.
+    """
+    return (1.0 + 1.0 / p) / lam + 1.0 / (p * mu)
+
+
+def aopi(lam, mu, p, policy):
+    """Policy-dispatched AoPI. ``policy`` is 0 (FCFS) or 1 (LCFSP), may be an
+    array (vectorized over cameras)."""
+    policy = jnp.asarray(policy)
+    return jnp.where(policy == LCFSP, aopi_lcfsp(lam, mu, p),
+                     aopi_fcfs(lam, mu, p))
+
+
+def policy_threshold(rho):
+    """Theorem 3 (Eq. 43): FCFS AoPI exceeds LCFSP iff
+    ``p >= (1 - rho^2) / (2 rho^3 - 2 rho^2 + rho + 1)`` with rho = lam/mu.
+
+    For rho >= 1 FCFS is unstable, so the threshold is 0 (LCFSP always wins).
+    """
+    rho = jnp.asarray(rho)
+    thr = (1.0 - rho**2) / (2.0 * rho**3 - 2.0 * rho**2 + rho + 1.0)
+    return jnp.where(rho < 1.0, thr, 0.0)
+
+
+def optimal_policy(lam, mu, p):
+    """Per Theorem 3: returns LCFSP (1) where it achieves lower AoPI."""
+    rho = lam / mu
+    return jnp.where(p >= policy_threshold(rho), LCFSP, FCFS).astype(jnp.int32)
+
+
+def aopi_best(lam, mu, p):
+    """AoPI under the per-point optimal policy (envelope of Thm 1 and 2)."""
+    return jnp.minimum(aopi_fcfs(lam, mu, p), aopi_lcfsp(lam, mu, p))
+
+
+# ---------------------------------------------------------------------------
+# Analytic derivatives (used by allocator tests and for fast Newton steps;
+# jax.grad of the functions above agrees — asserted in tests).
+# ---------------------------------------------------------------------------
+
+def d_aopi_lcfsp_dlam(lam, mu, p):
+    return -(1.0 + 1.0 / p) / lam**2
+
+
+def d_aopi_lcfsp_dmu(lam, mu, p):
+    return -1.0 / (p * mu**2)
+
+
+def d_aopi_fcfs_dlam(lam, mu, p):
+    """dA_F/dlam, valid for lam < mu."""
+    lam = jnp.asarray(lam)
+    # d/dlam of queue term  q(lam) = (2 lam^3 + lam mu^2 - mu lam^2) /
+    #                                (mu^4 - mu^2 lam^2)
+    num = 2.0 * lam**3 + lam * mu**2 - mu * lam**2
+    den = mu**4 - mu**2 * lam**2
+    dnum = 6.0 * lam**2 + mu**2 - 2.0 * mu * lam
+    dden = -2.0 * mu**2 * lam
+    dq = (dnum * den - num * dden) / den**2
+    return -(1.0 + 1.0 / p) / lam**2 + dq
+
+
+def d_aopi_fcfs_dmu(lam, mu, p):
+    mu = jnp.asarray(mu)
+    num = 2.0 * lam**3 + lam * mu**2 - mu * lam**2
+    den = mu**4 - mu**2 * lam**2
+    dnum = 2.0 * lam * mu - lam**2
+    dden = 4.0 * mu**3 - 2.0 * mu * lam**2
+    dq = (dnum * den - num * dden) / den**2
+    return -1.0 / mu**2 + dq
+
+
+# ---------------------------------------------------------------------------
+# Rate frontiers (Figs. 3 and 5): minimum lam (resp. mu) needed to meet an
+# average-AoPI target given the other rate. Solved by bisection under jit.
+# ---------------------------------------------------------------------------
+
+def _bisect(fn, lo, hi, iters: int = 60):
+    """Find root of monotone-decreasing ``fn`` on [lo, hi] by bisection."""
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        below = fn(mid) > 0.0  # still above target -> need larger rate
+        return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+    lo, hi = jax.lax.fori_loop(0, iters, body, (jnp.asarray(lo), jnp.asarray(hi)))
+    return 0.5 * (lo + hi)
+
+
+def min_lam_for_target(target, mu, p, policy, hi: float = 1e6):
+    """Minimum transmission rate s.t. AoPI(lam, mu, p, policy) <= target.
+
+    Under FCFS, AoPI is convex in lam (Corollary 4.1) — the *left* branch is
+    decreasing, so we bisect on it up to the interior minimizer.
+    """
+    policy = jnp.asarray(policy)
+
+    def gap_l(lam):
+        return aopi_lcfsp(lam, mu, p) - target
+
+    def gap_f(lam):
+        return aopi_fcfs(lam, mu, p) - target
+
+    lam_star = argmin_lam_fcfs(mu, p)  # interior minimizer of the convex A_F
+    lcfsp = _bisect(gap_l, 1e-9, hi)
+    fcfs = _bisect(gap_f, 1e-9, lam_star)
+    feasible_f = aopi_fcfs(lam_star, mu, p) <= target
+    fcfs = jnp.where(feasible_f, fcfs, jnp.inf)
+    return jnp.where(policy == LCFSP, lcfsp, fcfs)
+
+
+def min_mu_for_target(target, lam, p, policy, hi: float = 1e6):
+    """Minimum computation rate s.t. AoPI <= target (A is decreasing in mu)."""
+    policy = jnp.asarray(policy)
+
+    def gap(mu):
+        return aopi(lam, mu, p, policy) - target
+
+    feasible = aopi(lam, jnp.asarray(hi), p, policy) <= target
+    return jnp.where(feasible, _bisect(gap, 1e-9, hi), jnp.inf)
+
+
+def argmin_lam_fcfs(mu, p, iters: int = 60):
+    """Interior minimizer lam* of the convex A_F(lam) on (0, mu).
+
+    Found by bisection on the (increasing) derivative. Corollary 4.1
+    guarantees a unique interior minimum; lam* decreases with p.
+    """
+    mu = jnp.asarray(mu)
+    lo = jnp.full(jnp.shape(mu), 1e-9)
+    hi = 0.999999 * mu
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        neg = d_aopi_fcfs_dlam(mid, mu, p) < 0.0
+        return jnp.where(neg, mid, lo), jnp.where(neg, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)

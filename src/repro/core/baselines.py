@@ -1,0 +1,196 @@
+"""State-of-the-art baselines (paper §VI-A): DOS, JCAB, MIN.
+
+All baselines share LBCD's profiling substrate and (per the paper) the
+computation policy and model are chosen via Theorem 3 given their own
+resolution / allocation decisions; DOS additionally shares LBCD's server
+selection. Evaluation (per-camera AoPI/accuracy) uses the same closed forms,
+so comparisons isolate the *decision* quality.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import aopi, bcd, binpack
+from .lbcd import RunSummary, SlotRecord
+from .profiles import EdgeSystem
+
+
+def _evaluate(lam, mu, p, pol):
+    lam = np.maximum(lam, 1e-9)
+    mu = np.maximum(mu, 1e-9)
+    a = np.where(pol == aopi.LCFSP,
+                 np.asarray(aopi.aopi_lcfsp(lam, mu, p)),
+                 np.asarray(aopi.aopi_fcfs(lam, mu, p)))
+    return a
+
+
+def _thm3_policy(lam, mu, p):
+    return np.asarray(aopi.optimal_policy(lam, mu, p))
+
+
+@dataclasses.dataclass
+class BaselineController:
+    system: EdgeSystem
+    name: str = "base"
+
+    def run(self, n_slots: int) -> RunSummary:
+        records = [self.step(t) for t in range(n_slots)]
+        return RunSummary(records, v=0.0, p_min=0.0)
+
+
+class MINController(BaselineController):
+    """Lower bound: one virtual server, no accuracy requirement (q == 0)."""
+
+    def __init__(self, system: EdgeSystem, v: float = 10.0, **kw):
+        super().__init__(system, name="MIN")
+        self.v = v
+        self.kw = kw
+
+    def step(self, t: int, tables=None) -> SlotRecord:
+        sys = self.system
+        budgets_b, budgets_c = sys.capacities(t)
+        tables = tables if tables is not None else sys.tables(t)
+        n = tables.n_cameras
+        dec = bcd.solve_slot_np(
+            tables, np.zeros(n, np.int32), np.array([budgets_b.sum()]),
+            np.array([budgets_c.sum()]), 0.0, self.v, n_servers=1, **self.kw)
+        return SlotRecord(t=t, aopi=dec.aopi, acc=dec.acc, q=0.0,
+                          assign=np.zeros(n, np.int32), decision=dec)
+
+
+class DOSController(BaselineController):
+    """DOS [47]: maximize (accuracy - latency).
+
+    Per camera it picks the (r, m) maximizing ``zeta - (1/lam + 1/mu)`` under
+    an equal split, then allocates resources to minimize total expected
+    latency (sqrt water-filling — latency-optimal but AoPI-blind, which is
+    exactly the behaviour §VI-B2 reports: it collapses to the lightest
+    configuration). Server selection is shared with LBCD (first-fit on its
+    demands), per §VI-A.
+    """
+
+    def __init__(self, system: EdgeSystem, weight: float = 1.0):
+        super().__init__(system, name="DOS")
+        self.weight = weight
+
+    def step(self, t: int, tables=None) -> SlotRecord:
+        sys = self.system
+        budgets_b, budgets_c = sys.capacities(t)
+        tables = tables if tables is not None else sys.tables(t)
+        n, m_count, r_count = tables.acc.shape
+
+        # Equal-split provisional rates.
+        b0 = budgets_b.sum() / n
+        c0 = budgets_c.sum() / n
+        lam0 = b0 * tables.eff[:, None, None] / tables.size[None, None, :]
+        mu0 = c0 / tables.xi[None, :, :]
+        latency = 1.0 / np.maximum(lam0, 1e-9) + 1.0 / np.maximum(mu0, 1e-9)
+        score = tables.acc - self.weight * latency
+        flat = score.reshape(n, -1)
+        best = flat.argmax(1)
+        m_idx = (best // r_count).astype(np.int32)
+        r_idx = (best % r_count).astype(np.int32)
+
+        # Latency-minimizing allocation: b ~ sqrt(size/eff), c ~ sqrt(xi).
+        size_n = tables.size[r_idx]
+        xi_n = tables.xi[m_idx, r_idx]
+        w_b = np.sqrt(size_n / tables.eff)
+        w_c = np.sqrt(xi_n)
+        assign = binpack.first_fit(w_b / w_b.sum() * budgets_b.sum(),
+                                   w_c / w_c.sum() * budgets_c.sum(),
+                                   budgets_b, budgets_c)
+        b = np.zeros(n)
+        c = np.zeros(n)
+        for s in range(len(budgets_b)):
+            mask = assign == s
+            if not mask.any():
+                continue
+            b[mask] = budgets_b[s] * w_b[mask] / w_b[mask].sum()
+            c[mask] = budgets_c[s] * w_c[mask] / w_c[mask].sum()
+
+        lam = b * tables.eff / size_n
+        mu = c / xi_n
+        p = tables.acc[np.arange(n), m_idx, r_idx]
+        pol = _thm3_policy(lam, mu, p)
+        a = _evaluate(lam, mu, p, pol)
+        dec = bcd.SlotDecision(r_idx, m_idx, pol, b, c, lam, mu, p, a,
+                               np.float32(a.mean()))
+        return SlotRecord(t=t, aopi=a, acc=p, q=0.0, assign=assign,
+                          decision=dec)
+
+
+class JCABController(BaselineController):
+    """JCAB [3]: maximize accuracy s.t. total latency <= latency_cap, with
+    computation allocated proportional to the configuration's xi [48]."""
+
+    def __init__(self, system: EdgeSystem, latency_cap: float = 0.5,
+                 n_rounds: int = 3):
+        super().__init__(system, name="JCAB")
+        self.latency_cap = latency_cap
+        self.n_rounds = n_rounds
+
+    def step(self, t: int, tables=None) -> SlotRecord:
+        sys = self.system
+        budgets_b, budgets_c = sys.capacities(t)
+        tables = tables if tables is not None else sys.tables(t)
+        n, m_count, r_count = tables.acc.shape
+        assign = np.asarray([i % len(budgets_b) for i in range(n)], np.int32)
+
+        b = np.zeros(n)
+        c = np.zeros(n)
+        for s in range(len(budgets_b)):
+            mask = assign == s
+            b[mask] = budgets_b[s] / max(mask.sum(), 1)
+            c[mask] = budgets_c[s] / max(mask.sum(), 1)
+
+        m_idx = np.zeros(n, np.int32)
+        r_idx = np.zeros(n, np.int32)
+        for _ in range(self.n_rounds):
+            # Highest-accuracy config meeting the latency cap.
+            lam = b[:, None, None] * tables.eff[:, None, None] / \
+                tables.size[None, None, :]
+            mu = c[:, None, None] / tables.xi[None, :, :]
+            latency = 1.0 / np.maximum(lam, 1e-9) + 1.0 / np.maximum(mu, 1e-9)
+            ok = latency <= self.latency_cap
+            score = np.where(ok, tables.acc, -np.inf)
+            flat = score.reshape(n, -1)
+            best = flat.argmax(1)
+            none_ok = ~ok.reshape(n, -1).any(1)
+            # If nothing meets the cap, take the min-latency config.
+            fallback = latency.reshape(n, -1).argmin(1)
+            best = np.where(none_ok, fallback, best)
+            m_idx = (best // r_count).astype(np.int32)
+            r_idx = (best % r_count).astype(np.int32)
+            # Re-allocate: bandwidth ~ frame size (equalizes lam), compute
+            # ~ xi (per [48]).
+            size_n = tables.size[r_idx]
+            xi_n = tables.xi[m_idx, r_idx]
+            for s in range(len(budgets_b)):
+                mask = assign == s
+                if not mask.any():
+                    continue
+                b[mask] = budgets_b[s] * size_n[mask] / size_n[mask].sum()
+                c[mask] = budgets_c[s] * xi_n[mask] / xi_n[mask].sum()
+
+        lam = b * tables.eff / tables.size[r_idx]
+        mu = c / tables.xi[m_idx, r_idx]
+        p = tables.acc[np.arange(n), m_idx, r_idx]
+        pol = _thm3_policy(lam, mu, p)
+        a = _evaluate(lam, mu, p, pol)
+        dec = bcd.SlotDecision(r_idx, m_idx, pol, b, c, lam, mu, p, a,
+                               np.float32(a.mean()))
+        return SlotRecord(t=t, aopi=a, acc=p, q=0.0, assign=assign,
+                          decision=dec)
+
+
+def make(name: str, system: EdgeSystem, **kw):
+    name = name.upper()
+    if name == "MIN":
+        return MINController(system, **kw)
+    if name == "DOS":
+        return DOSController(system, **kw)
+    if name == "JCAB":
+        return JCABController(system, **kw)
+    raise ValueError(f"unknown baseline {name!r}")

@@ -1,0 +1,139 @@
+"""Algorithm 1 — block coordinate descent over the one-slot problem (P2).
+
+Three blocks, iterated M times (paper §V-B):
+
+  line 3: video configuration (r, x, m)  — vectorized exhaustive search over
+          the (model x resolution x policy) grid, per camera;
+  line 4: bandwidth allocation b         — convex, via water-filling or the
+          paper's interior-point method (repro.core.allocate);
+  line 5: computation allocation c       — same.
+
+Everything is jit-compiled with static (N, M, R, S); the whole solve runs in
+a few hundred microseconds for N=30 on CPU (benchmarks/bench_overhead.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import allocate, aopi
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SlotDecision:
+    """Output of one Algorithm-1 solve (all per-camera arrays)."""
+    r_idx: jnp.ndarray        # resolution index into tables.size
+    m_idx: jnp.ndarray        # model index
+    pol: jnp.ndarray          # 0 FCFS / 1 LCFSP
+    b: jnp.ndarray            # Hz
+    c: jnp.ndarray            # FLOPS
+    lam: jnp.ndarray          # frames/s
+    mu: jnp.ndarray           # frames/s
+    acc: jnp.ndarray          # recognition accuracy p_{n,t}
+    aopi: jnp.ndarray         # closed-form per-camera AoPI
+    score: jnp.ndarray        # scalar drift-plus-penalty value
+
+    def as_numpy(self) -> "SlotDecision":
+        return SlotDecision(*(np.asarray(v) for v in dataclasses.astuple(self)))
+
+
+def _rates(b, c, r_idx, m_idx, eff, size, xi):
+    lam = b * eff / size[r_idx]                       # Eqs. (1)-(2)
+    mu = c / xi[m_idx, r_idx]                         # Eq. (3)
+    return lam, mu
+
+
+def _config_step(b, c, acc, xi, size, eff, q, V, n):
+    """Algorithm 1 line 3: exhaustive search over (m, r, policy)."""
+    # lam[n, r]: resolution changes frame size; mu[n, m, r]: both change xi.
+    lam = (b * eff)[:, None] / size[None, :]
+    mu = c[:, None, None] / xi[None, :, :]
+    lam_b = lam[:, None, :]                            # [n, 1, r]
+    a_f = aopi.aopi_fcfs(jnp.broadcast_to(lam_b, mu.shape), mu,
+                         jnp.maximum(acc, 1e-3))
+    a_l = aopi.aopi_lcfsp(jnp.broadcast_to(lam_b, mu.shape), mu,
+                          jnp.maximum(acc, 1e-3))
+    a = jnp.stack([a_f, a_l], axis=-1)                 # [n, m, r, 2]
+    score = (V * a - q * acc[..., None]) / n
+    flat = score.reshape(score.shape[0], -1)
+    best = jnp.argmin(flat, axis=1)
+    n_m, n_r = xi.shape
+    m_idx = best // (n_r * 2)
+    r_idx = (best // 2) % n_r
+    pol = (best % 2).astype(jnp.int32)
+    return r_idx, m_idx, pol
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_servers", "n_iters", "method"))
+def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
+               n_servers: int, n_iters: int = 4,
+               method: Literal["waterfill", "interior"] = "waterfill"):
+    """Run Algorithm 1 and return a SlotDecision (of jnp arrays).
+
+    Args:
+      acc:  [N, M, R] profiled accuracy zeta_n^t(r, m).
+      xi:   [M, R]    FLOPs per frame.
+      size: [R]       bits per frame.
+      eff:  [N]       link spectral efficiency (bits/s/Hz).
+      server_id: [N]  camera -> server assignment (Algorithm 2's output).
+      budgets_b/_c: [n_servers] available Hz / FLOPS.
+      q, V: Lyapunov queue value and penalty weight.
+    """
+    n = acc.shape[0]
+    counts = jax.ops.segment_sum(jnp.ones((n,)), server_id,
+                                 num_segments=n_servers)
+    share = (1.0 / jnp.maximum(counts, 1.0))[server_id]
+    b = budgets_b[server_id] * share
+    c = budgets_c[server_id] * share
+
+    if method == "waterfill":
+        fb, fc = allocate.waterfill_bandwidth, allocate.waterfill_compute
+    else:
+        fb = allocate.interior_point_bandwidth
+        fc = allocate.interior_point_compute
+
+    def body(_, state):
+        b, c, r_idx, m_idx, pol = state
+        r_idx, m_idx, pol = _config_step(b, c, acc, xi, size, eff, q, V, n)
+        p = acc[jnp.arange(n), m_idx, r_idx]
+        # line 4: bandwidth given (r, x, m, c).
+        k = eff / size[r_idx]
+        mu = c / xi[m_idx, r_idx]
+        b = fb(k, p, pol, mu, server_id, budgets_b, n_servers)
+        # line 5: compute given (r, x, m, b).
+        lam = b * k
+        inv_xi = 1.0 / xi[m_idx, r_idx]
+        c = fc(inv_xi, p, pol, lam, server_id, budgets_c, n_servers)
+        return b, c, r_idx, m_idx, pol
+
+    z = jnp.zeros((n,), jnp.int32)
+    b, c, r_idx, m_idx, pol = jax.lax.fori_loop(
+        0, n_iters, body, (b, c, z, z, z))
+
+    lam, mu = _rates(b, c, r_idx, m_idx, eff, size, xi)
+    p = acc[jnp.arange(n), m_idx, r_idx]
+    a = aopi.aopi(lam, mu, p, pol)
+    score = -q * jnp.mean(p) + V * jnp.mean(a)
+    return SlotDecision(r_idx, m_idx, pol, b, c, lam, mu, p, a, score)
+
+
+def solve_slot_np(tables, server_id, budgets_b, budgets_c, q, V,
+                  n_servers, **kw) -> SlotDecision:
+    """Convenience wrapper taking a profiles.SlotTables, returning numpy."""
+    dec = solve_slot(jnp.asarray(tables.acc, jnp.float32),
+                     jnp.asarray(tables.xi, jnp.float32),
+                     jnp.asarray(tables.size, jnp.float32),
+                     jnp.asarray(tables.eff, jnp.float32),
+                     jnp.asarray(server_id, jnp.int32),
+                     jnp.asarray(budgets_b, jnp.float32),
+                     jnp.asarray(budgets_c, jnp.float32),
+                     jnp.float32(q), jnp.float32(V),
+                     n_servers=int(n_servers), **kw)
+    return dec.as_numpy()

@@ -1,0 +1,75 @@
+"""Algorithm 2 — edge-server selection as 2D first-fit bin packing.
+
+Given the *virtual-server* resource demands (Algorithm 2 lines 1-2), cameras
+are sized by Eq. (56), servers by Eq. (57), both sorted descending, and each
+camera goes to the first server with enough remaining bandwidth AND compute;
+if none fits, to the server with most remaining volume (lines 4-9).
+
+Host-side numpy: placement is O(N S) with tiny constants and runs once per
+slot; it does not belong on the accelerator.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def first_fit(b_hat: np.ndarray, c_hat: np.ndarray, budgets_b: np.ndarray,
+              budgets_c: np.ndarray) -> np.ndarray:
+    """Assign cameras to servers. Returns int[N] server ids.
+
+    Args:
+      b_hat, c_hat: ideal (virtual-server) per-camera demands, Alg. 2 line 2.
+      budgets_b, budgets_c: per-server capacities B_t^s, C_t^s.
+    """
+    b_hat = np.asarray(b_hat, np.float64)
+    c_hat = np.asarray(c_hat, np.float64)
+    budgets_b = np.asarray(budgets_b, np.float64)
+    budgets_c = np.asarray(budgets_c, np.float64)
+    tot_b, tot_c = budgets_b.sum(), budgets_c.sum()
+
+    phi = b_hat / tot_b + c_hat / tot_c                  # Eq. (56)
+    psi = budgets_b / tot_b + budgets_c / tot_c          # Eq. (57)
+
+    cam_order = np.argsort(-phi)                         # largest first
+    srv_order = np.argsort(-psi)
+    rem_b = budgets_b.copy()
+    rem_c = budgets_c.copy()
+    assign = np.zeros(b_hat.shape[0], np.int32)
+
+    for n in cam_order:
+        placed = False
+        for s in srv_order:
+            if rem_b[s] >= b_hat[n] and rem_c[s] >= c_hat[n]:
+                assign[n] = s
+                rem_b[s] -= b_hat[n]
+                rem_c[s] -= c_hat[n]
+                placed = True
+                break
+        if not placed:                                    # lines 6-8
+            rem_vol = rem_b / tot_b + rem_c / tot_c
+            s = int(np.argmax(rem_vol))
+            assign[n] = s
+            rem_b[s] = max(rem_b[s] - b_hat[n], 0.0)
+            rem_c[s] = max(rem_c[s] - c_hat[n], 0.0)
+    return assign
+
+
+def hierarchical_first_fit(b_hat, c_hat, pod_budgets_b, pod_budgets_c,
+                           islands_per_pod: int) -> np.ndarray:
+    """Multi-pod variant (beyond paper, §Scale-out): first-fit over pods,
+    then over islands inside the chosen pod. Island capacity = pod capacity /
+    islands_per_pod. Returns global island ids ``pod * islands_per_pod + i``.
+    """
+    pod_budgets_b = np.asarray(pod_budgets_b, np.float64)
+    pod_budgets_c = np.asarray(pod_budgets_c, np.float64)
+    pods = first_fit(b_hat, c_hat, pod_budgets_b, pod_budgets_c)
+    out = np.zeros_like(pods)
+    for pod in range(pod_budgets_b.shape[0]):
+        mask = pods == pod
+        if not mask.any():
+            continue
+        ib = np.full(islands_per_pod, pod_budgets_b[pod] / islands_per_pod)
+        ic = np.full(islands_per_pod, pod_budgets_c[pod] / islands_per_pod)
+        local = first_fit(b_hat[mask], c_hat[mask], ib, ic)
+        out[mask] = pod * islands_per_pod + local
+    return out

@@ -1,0 +1,114 @@
+"""Algorithm 3 — the LBCD online controller.
+
+Per slot t (paper §V-D):
+  1. observe capacities (B_t^s, C_t^s) and profile zeta_n^t;
+  2. solve (P2): Algorithm 2 (virtual server -> Algorithm 1 -> first-fit ->
+     Algorithm 1 per real server);
+  3. update the virtual accuracy queue q(t+1) (Eq. 44).
+
+The controller is model-free w.r.t. the future (Lyapunov), and its per-slot
+cost is dominated by two jitted Algorithm-1 solves (see
+benchmarks/bench_overhead.py for the Fig.-12 analog).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from . import bcd, binpack
+from .lyapunov import VirtualQueue
+from .profiles import EdgeSystem
+
+
+@dataclasses.dataclass
+class SlotRecord:
+    t: int
+    aopi: np.ndarray          # per-camera closed-form AoPI
+    acc: np.ndarray           # per-camera accuracy
+    q: float
+    assign: np.ndarray        # camera -> server
+    decision: bcd.SlotDecision
+
+    @property
+    def mean_aopi(self) -> float:
+        return float(np.mean(self.aopi))
+
+    @property
+    def mean_acc(self) -> float:
+        return float(np.mean(self.acc))
+
+
+@dataclasses.dataclass
+class RunSummary:
+    records: list
+    v: float
+    p_min: float
+
+    @property
+    def mean_aopi(self) -> float:
+        return float(np.mean([r.mean_aopi for r in self.records]))
+
+    @property
+    def mean_acc(self) -> float:
+        return float(np.mean([r.mean_acc for r in self.records]))
+
+    @property
+    def aopi_series(self) -> np.ndarray:
+        return np.array([r.mean_aopi for r in self.records])
+
+    @property
+    def acc_series(self) -> np.ndarray:
+        return np.array([r.mean_acc for r in self.records])
+
+    @property
+    def q_series(self) -> np.ndarray:
+        return np.array([r.q for r in self.records])
+
+
+class LBCDController:
+    """The paper's controller; also reused as the serving-runtime planner
+    (repro.serving.service) and the island-failover mechanism
+    (repro.training.failure)."""
+
+    def __init__(self, system: EdgeSystem, v: float = 10.0,
+                 p_min: float = 0.7, n_bcd_iters: int = 4,
+                 method: str = "waterfill",
+                 assign_fn: Optional[Callable] = None):
+        self.system = system
+        self.v = v
+        self.queue = VirtualQueue(p_min=p_min)
+        self.n_bcd_iters = n_bcd_iters
+        self.method = method
+        self.assign_fn = assign_fn or binpack.first_fit
+
+    def step(self, t: int, tables=None) -> SlotRecord:
+        sys = self.system
+        budgets_b, budgets_c = sys.capacities(t)          # Alg. 3 line 2
+        tables = tables if tables is not None else sys.tables(t)  # line 3
+        n = tables.n_cameras
+
+        # --- Algorithm 2 line 1-2: virtual server ideal demands.
+        virt = bcd.solve_slot_np(
+            tables, np.zeros(n, np.int32),
+            np.array([budgets_b.sum()]), np.array([budgets_c.sum()]),
+            self.queue.q, self.v, n_servers=1, n_iters=self.n_bcd_iters,
+            method=self.method)
+
+        # --- Algorithm 2 lines 3-9: first-fit placement.
+        assign = self.assign_fn(virt.b, virt.c, budgets_b, budgets_c)
+
+        # --- Algorithm 2 line 10: re-solve per real server.
+        dec = bcd.solve_slot_np(
+            tables, assign, budgets_b, budgets_c, self.queue.q, self.v,
+            n_servers=len(budgets_b), n_iters=self.n_bcd_iters,
+            method=self.method)
+
+        q = self.queue.update(float(np.mean(dec.acc)))    # Alg. 3 line 5
+        return SlotRecord(t=t, aopi=dec.aopi, acc=dec.acc, q=q,
+                          assign=assign, decision=dec)
+
+    def run(self, n_slots: int) -> RunSummary:
+        records = [self.step(t) for t in range(n_slots)]
+        return RunSummary(records, self.v, self.queue.p_min)

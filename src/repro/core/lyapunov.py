@@ -1,0 +1,56 @@
+"""Lyapunov framework for the long-term accuracy constraint (paper §V-A).
+
+The long-term constraint (9) ``avg_t avg_n p_{n,t} >= P_min`` is handled by a
+virtual accuracy-debt queue
+
+    q(t+1) = max(q(t) - Pbar_t + P_min, 0),                 (Eq. 44)
+
+and each slot solves the drift-plus-penalty surrogate (problem (P2))
+
+    min  -q(t) * Pbar_t + V * Abar_t.                        (Eq. 51)
+
+Theorem 4 gives the O(1/V) optimality gap and the accuracy bound; the
+benchmarks sweep V / P_min to reproduce Figs. 7-8.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class VirtualQueue:
+    """Host-side accuracy-debt queue q(t) (Eq. 44)."""
+    p_min: float
+    q: float = 0.0
+
+    def update(self, p_bar: float) -> float:
+        self.q = max(self.q - float(p_bar) + self.p_min, 0.0)
+        return self.q
+
+
+def queue_update(q, p_bar, p_min):
+    """Functional (jit-safe) form of Eq. 44."""
+    return jnp.maximum(q - p_bar + p_min, 0.0)
+
+
+def drift_plus_penalty(aopi, acc, q, V):
+    """Per-slot objective of problem (P2), Eq. (51).
+
+    ``aopi``/``acc`` are per-camera arrays; returns the scalar
+    ``-q * mean(acc) + V * mean(aopi)``.
+    """
+    return -q * jnp.mean(acc) + V * jnp.mean(aopi)
+
+
+def per_camera_score(aopi, acc, q, V, n):
+    """Separable per-camera contribution to Eq. (51): the config-selection
+    step of Algorithm 1 minimizes this independently per camera."""
+    return (-q * acc + V * aopi) / n
+
+
+def drift_bound(q, p_bar, p_min):
+    """RHS of Lemma 1: 1/2 + q * (P_min - Pbar). Used by tests to check the
+    implemented queue never violates the drift inequality in expectation."""
+    return 0.5 + q * (p_min - p_bar)

@@ -1,0 +1,190 @@
+"""Accuracy / complexity / workload profiles (paper §III + §VI-A).
+
+Provides the substrate the controller consumes each slot:
+  * zeta(r, m)  — concave, monotone-increasing recognition-accuracy profile
+                  per (resolution, model), with per-slot content drift
+                  (the paper profiles zeta at the start of every slot);
+  * xi(r, m)    — convex FLOPs-per-frame profile, proportional to model size;
+  * frame size  — alpha * r^2 bits (H.264-style, Eq. before Eq. 2);
+  * Shannon-rate link model (Eq. 1) and linear pod-link model;
+  * bandwidth / compute capacity traces shaped like the Ghent LTE and
+    Bitbrains datacenter traces used in §VI-A (lognormal AR(1) modulation).
+
+Two candidate pools ship out of the box:
+  * ``paper_pool()``  — the paper's own ladder (YOLOv5n..x, FPN, U-Net,
+    YOLACT, Mask R-CNN) with public FLOPs/params numbers;
+  * ``lm_pool()``     — the assigned LM-architecture ladder, where a
+    "frame" is a patch/token bundle and resolution maps to patch count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+RESOLUTIONS = (384, 512, 640, 768, 896, 1024)
+ALPHA_BITS_PER_PIXEL = 1.2          # frame size = alpha * r^2 bits
+REF_RESOLUTION = 640
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCandidate:
+    """One selectable recognition model (the paper's m in M)."""
+    name: str
+    params_m: float          # millions of parameters
+    gflops_ref: float        # GFLOPs per frame at REF_RESOLUTION
+    p_max: float             # asymptotic accuracy at infinite resolution
+    r_knee: float            # resolution scale of the accuracy saturation
+    task: str = "detection"
+
+    def xi(self, r: np.ndarray) -> np.ndarray:
+        """FLOPs per frame — convex (quadratic) in resolution, proportional
+        to model cost (§III-B)."""
+        return self.gflops_ref * 1e9 * (np.asarray(r, np.float64) /
+                                        REF_RESOLUTION) ** 2
+
+    def zeta(self, r: np.ndarray, drift: float = 1.0) -> np.ndarray:
+        """Accuracy — concave, monotone increasing in r, scaled by a content
+        drift factor in (0, 1]."""
+        r = np.asarray(r, np.float64)
+        base = self.p_max * (1.0 - np.exp(-r / self.r_knee))
+        return np.clip(base * drift, 1e-3, 1.0)
+
+
+def paper_pool() -> list[ModelCandidate]:
+    """The paper's §VI-A candidates; FLOPs/params from the public model zoo
+    (YOLOv5 release table @640, torchvision/paper numbers for the rest).
+    The ladder spans ~50x compute, matching §III-B."""
+    return [
+        ModelCandidate("yolov5n", 1.9, 4.5, 0.62, 190.0),
+        ModelCandidate("yolov5s", 7.2, 16.5, 0.72, 200.0),
+        ModelCandidate("yolov5m", 21.2, 49.0, 0.80, 210.0),
+        ModelCandidate("yolov5l", 46.5, 109.1, 0.85, 220.0),
+        ModelCandidate("yolov5x", 86.7, 205.7, 0.88, 230.0),
+        ModelCandidate("fpn", 23.0, 90.0, 0.82, 215.0, task="segmentation"),
+        ModelCandidate("unet", 31.0, 120.0, 0.84, 220.0, task="segmentation"),
+        ModelCandidate("yolact", 34.7, 61.6, 0.78, 210.0, task="instance"),
+        ModelCandidate("mask_rcnn", 44.2, 134.0, 0.86, 225.0, task="instance"),
+    ]
+
+
+def lm_pool() -> list[ModelCandidate]:
+    """Assigned-architecture ladder for pod-scale serving. xi is calibrated
+    as 2 * N_active * tokens(r), tokens(r) = (r/16)^2 vision patches; the
+    gflops_ref column folds that in at r=640 (1600 patches)."""
+    def g(n_active_b):  # GFLOPs per frame at 640p (1600 tokens)
+        return 2.0 * n_active_b * 1e9 * (640 / 16) ** 2 / 1e9
+
+    return [
+        ModelCandidate("qwen2.5-3b", 3_000, g(3.0), 0.74, 205.0, task="lm"),
+        ModelCandidate("yi-6b", 6_000, g(6.0), 0.78, 210.0, task="lm"),
+        ModelCandidate("minicpm3-4b", 4_000, g(4.0), 0.76, 208.0, task="lm"),
+        ModelCandidate("qwen2-moe-a2.7b", 14_000, g(2.7), 0.75, 206.0,
+                       task="lm"),
+        ModelCandidate("llama-3.2-vision-11b", 11_000, g(11.0), 0.82, 215.0,
+                       task="vlm"),
+        ModelCandidate("yi-34b", 34_000, g(34.0), 0.87, 222.0, task="lm"),
+        ModelCandidate("dbrx-132b", 132_000, g(36.0), 0.89, 226.0, task="lm"),
+        ModelCandidate("jamba-1.5-large-398b", 398_000, g(98.0), 0.91, 230.0,
+                       task="lm"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Link models
+# ---------------------------------------------------------------------------
+
+def shannon_efficiency(snr_db: np.ndarray) -> np.ndarray:
+    """bits/s/Hz from Eq. (1): log2(1 + E*G/sigma)."""
+    return np.log2(1.0 + 10.0 ** (np.asarray(snr_db, np.float64) / 10.0))
+
+
+@dataclasses.dataclass
+class SlotTables:
+    """Everything the per-slot optimizer needs, as dense arrays.
+
+    Shapes: N cameras, M models, R resolutions.
+      acc[n, m, r]   accuracy zeta_n^t
+      xi[m, r]       FLOPs per frame
+      size[r]        bits per frame
+      eff[n]         link spectral efficiency (bits/s/Hz); lam = b*eff/size
+    """
+    acc: np.ndarray
+    xi: np.ndarray
+    size: np.ndarray
+    eff: np.ndarray
+
+    @property
+    def n_cameras(self) -> int:
+        return self.acc.shape[0]
+
+
+@dataclasses.dataclass
+class EdgeSystem:
+    """Scenario container: cameras, servers, traces, profiles (§VI-A)."""
+    n_cameras: int = 30
+    n_servers: int = 3
+    n_slots: int = 200
+    mean_bandwidth_hz: float = 30e6          # per server
+    mean_compute_flops: float = 50e12        # per server
+    pool: Sequence[ModelCandidate] = dataclasses.field(
+        default_factory=paper_pool)
+    resolutions: Sequence[int] = RESOLUTIONS
+    alpha: float = ALPHA_BITS_PER_PIXEL
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # Camera SNRs: 12..22 dB (spectral efficiency ~4..7.3 bits/s/Hz).
+        self.snr_db = rng.uniform(12.0, 22.0, size=self.n_cameras)
+        # Per-camera content difficulty baseline + AR(1) drift (Cityscapes
+        # profiling analog: accuracy functions vary per camera and per slot).
+        self._difficulty = rng.uniform(0.88, 1.0, size=self.n_cameras)
+        self._drift_state = np.ones(self.n_cameras)
+        self._drift_rng = np.random.default_rng(self.seed + 1)
+        self.bandwidth_trace = self._trace(
+            rng, self.mean_bandwidth_hz, (self.n_slots, self.n_servers))
+        self.compute_trace = self._trace(
+            rng, self.mean_compute_flops, (self.n_slots, self.n_servers))
+
+    @staticmethod
+    def _trace(rng: np.random.Generator, mean: float,
+               shape: tuple[int, int], rho: float = 0.85,
+               sigma: float = 0.25) -> np.ndarray:
+        """Lognormal AR(1) capacity trace (Ghent LTE / Bitbrains shape)."""
+        t_len, s = shape
+        x = np.zeros(shape)
+        x[0] = rng.normal(0, sigma, s)
+        for t in range(1, t_len):
+            x[t] = rho * x[t - 1] + np.sqrt(1 - rho**2) * rng.normal(
+                0, sigma, s)
+        return mean * np.exp(x - 0.5 * sigma**2)
+
+    def advance_drift(self) -> np.ndarray:
+        """One AR(1) step of per-camera content drift in [0.75, 1.0]."""
+        noise = self._drift_rng.normal(0.0, 0.03, self.n_cameras)
+        self._drift_state = np.clip(
+            0.9 * self._drift_state + 0.1 * 1.0 + noise, 0.75, 1.0)
+        return self._drift_state
+
+    def tables(self, t: int, drift: np.ndarray | None = None) -> SlotTables:
+        """Profile zeta/xi for slot t (Algorithm 3 line 3)."""
+        if drift is None:
+            drift = self.advance_drift()
+        res = np.asarray(self.resolutions, np.float64)
+        m_count = len(self.pool)
+        acc = np.zeros((self.n_cameras, m_count, len(res)))
+        xi = np.zeros((m_count, len(res)))
+        for j, m in enumerate(self.pool):
+            xi[j] = m.xi(res)
+            zr = m.zeta(res)
+            acc[:, j, :] = (self._difficulty * drift)[:, None] * zr[None, :]
+        size = self.alpha * res**2
+        eff = shannon_efficiency(self.snr_db)
+        return SlotTables(acc=np.clip(acc, 1e-3, 1.0), xi=xi, size=size,
+                          eff=eff)
+
+    def capacities(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        t = t % self.n_slots
+        return self.bandwidth_trace[t], self.compute_trace[t]

@@ -1,0 +1,3 @@
+from .pipeline import PipelineConfig, TokenPipeline, batch_for
+
+__all__ = ["PipelineConfig", "TokenPipeline", "batch_for"]

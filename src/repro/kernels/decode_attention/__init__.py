@@ -1,0 +1,5 @@
+from .ops import decode_attention
+from .ref import decode_ref
+from .kernel import flash_decode
+
+__all__ = ["decode_attention", "decode_ref", "flash_decode"]

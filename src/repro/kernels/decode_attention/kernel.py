@@ -1,0 +1,100 @@
+"""Pallas TPU flash-decode: one query token vs a long KV cache.
+
+Decode is memory-bound (the roofline term is the cache read), so the kernel
+streams KV tiles HBM->VMEM once, keeping partial max/denominator/accumulator
+in VMEM scratch across the sequential cache-block grid axis. All q heads of
+one KV group are processed together (shape [g, d], g = h/kvh) so each cache
+tile is read exactly once — the TPU analogue of flash-decoding's KV-split,
+with the split mapped onto the sequential grid instead of SM blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, block_k: int, kv_blocks: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[pl.program_id(0)]
+    base = ki * block_k
+    run = base < kv_len
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale     # [g, d]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)             # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)             # [bk, d]
+        v_row = base + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(v_row < kv_len, v, 0.0)   # padded-tail garbage guard
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, kv_len, *, block_k: int = 512,
+                 interpret: bool = False):
+    """q: [b, h, d]; caches: [b, t, kvh, d]; kv_len: int32 [b] -> [b, h, d]."""
+    b, h, d = q.shape
+    t, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = d ** -0.5
+    block_k = min(block_k, t)
+    kv_blocks = pl.cdiv(t, block_k)
+    q4 = q.reshape(b, kvh, g, d)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               kv_blocks=kv_blocks)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, kv_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # kv_len (prefetch)
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ki: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, ki: (bi, ki, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, ki: (bi, ki, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, hi, ki: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, q4, k_cache, v_cache)
+    return out.reshape(b, h, d)

@@ -1,0 +1,13 @@
+"""Dispatch for decode attention: pallas | interpret | ref."""
+from __future__ import annotations
+
+from . import kernel, ref
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, impl: str = "ref",
+                     block_k: int = 512):
+    if impl == "ref":
+        return ref.decode_ref(q, k_cache, v_cache, kv_len)
+    return kernel.flash_decode(q, k_cache, v_cache, kv_len,
+                               block_k=block_k,
+                               interpret=(impl == "interpret"))

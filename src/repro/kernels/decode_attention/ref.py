@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache.
+
+Same repeat-KV formulation as flash_attention.ref (GSPMD head sharding);
+when kv_heads cannot shard over the model axis the cache is sequence-
+sharded instead and the softmax reduction becomes a split-KV partial
+reduction — exactly the flash-decoding schedule, inserted by GSPMD.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...sharding import ctx
+
+NEG_INF = -1e30
+
+
+def _seq_sharded(t: int) -> bool:
+    rules = ctx.current()
+    if not rules:
+        return False
+    from ...sharding.spec import spec_dims
+    return spec_dims((t,), ("cache_seq",), rules)[0] is not None
+
+
+def decode_ref(q, k_cache, v_cache, kv_len):
+    """q: [b, h, d]; caches: [b, t, kvh, d]; kv_len: [b] valid lengths.
+
+    Returns [b, h, dv]. Keys at index >= kv_len are masked.
+
+    When the cache is sequence-sharded (kv_heads < TP archs) the compute is
+    explicitly split-KV: every model-rank scores its cache shard for ALL
+    heads and the softmax reduces partials across ranks — tiny [b, h(, d)]
+    collectives. Without these constraints GSPMD keeps q heads-sharded and
+    all-gathers the whole f32 cache per layer (~2 GiB/layer at 32k —
+    EXPERIMENTS.md §Perf cell C iteration 2).
+    """
+    b, h, d = q.shape
+    t, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = d ** -0.5
+    split_kv = _seq_sharded(t)
+    q_axes = ("batch", None, None) if split_kv else ("batch", "heads", None)
+    q = ctx.constrain(q, q_axes)
+    cache_axes = ("batch", "cache_seq", "kv_heads", None)
+    k_cache = ctx.constrain(k_cache, cache_axes)
+    v_cache = ctx.constrain(v_cache, cache_axes)
+    if g > 1:
+        k_cache = jnp.repeat(k_cache, g, axis=2)
+        v_cache = jnp.repeat(v_cache, g, axis=2)
+    scores = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32) * scale,
+                        k_cache.astype(jnp.float32))
+    if split_kv:
+        scores = ctx.constrain(scores, ("batch", None, "cache_seq"))
+    valid = jnp.arange(t)[None, :] < kv_len[:, None]       # [b, t]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bht,bthd->bhd", probs,
+                     v_cache.astype(jnp.float32))
+    return ctx.constrain(out.astype(q.dtype), q_axes)

@@ -1,0 +1,5 @@
+from .ops import attention
+from .ref import mha_ref
+from .kernel import flash_attention
+
+__all__ = ["attention", "mha_ref", "flash_attention"]

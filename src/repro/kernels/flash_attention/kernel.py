@@ -1,0 +1,123 @@
+"""Pallas TPU flash attention (training / prefill).
+
+TPU-native adaptation: online-softmax tiling with explicit VMEM BlockSpecs.
+Grid = (batch, q_heads, q_blocks, kv_blocks); the kv_blocks axis is the
+innermost (sequential on TPU), so the running max / denominator / output
+accumulator live in VMEM scratch that persists across kv steps — the
+canonical MXU-friendly flash schedule (block sizes are multiples of 128 to
+match the 128x128 systolic array; accumulation in f32).
+
+GQA is handled in the index map (kv head = q head // group) so KV tiles are
+fetched once per group from HBM, never materialized repeated.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, block_q: int, block_k: int,
+                 kv_blocks: int, q_offset: int, kv_total: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    run = True
+    if causal:
+        # Skip fully-masked kv blocks (upper triangle).
+        run = (ki * block_k) <= (qi * block_q + q_offset + block_q - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        # Mask padded kv rows (when t % block_k != 0 the tail block reads
+        # garbage — without the select, 0 * NaN poisons the accumulator).
+        kv_valid = k_pos < kv_total
+        s = jnp.where(kv_valid, s, NEG_INF)
+        if causal:
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        v_row = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, v.shape, 0)
+        v = jnp.where(v_row < kv_total, v, 0.0)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "scale",
+                     "q_offset"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: float | None = None, q_offset: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [b, s, h, d]; k, v: [b, t, kvh, d] -> [b, s, h, d]."""
+    b, s, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    q_offset = (t - s) if q_offset is None else q_offset
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    q_blocks = pl.cdiv(s, block_q)
+    kv_blocks = pl.cdiv(t, block_k)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, kv_blocks=kv_blocks, q_offset=q_offset,
+        kv_total=t)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, qi, ki, g=g: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, qi, ki, g=g: (bi, ki, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),    # running max
+            pltpu.VMEM((block_q,), jnp.float32),    # denominator
+            pltpu.VMEM((block_q, d), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,28 @@
+"""Jit'd dispatch for attention: pallas | interpret | ref.
+
+``ref`` (grouped-einsum jnp) is the GSPMD path used for CPU runs and the
+multi-pod dry-run; ``pallas`` targets TPU; ``interpret`` executes the Pallas
+kernel body in Python on CPU (correctness validation, used by tests).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import kernel, ref
+
+_IMPLS = ("ref", "pallas", "interpret")
+
+
+def attention(q, k, v, *, causal: bool = True, scale=None, q_offset=None,
+              kv_len=None, impl: str = "ref", block_q: int = 128,
+              block_k: int = 128):
+    """Unified attention entry point. See ref.mha_ref for semantics."""
+    if impl not in _IMPLS:
+        raise ValueError(f"impl={impl!r} not in {_IMPLS}")
+    if impl == "ref" or kv_len is not None:
+        # Ragged kv_len is only supported on the ref path (serving engine).
+        return ref.mha_ref(q, k, v, causal=causal, scale=scale,
+                           q_offset=q_offset, kv_len=kv_len)
+    return kernel.flash_attention(
+        q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=(impl == "interpret"))

@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for (grouped-query) causal attention.
+
+This is also the GSPMD path used by the multi-pod dry-run. KV heads are
+broadcast to the full head count before the score einsum: the broadcast is
+free under XLA fusion, and it keeps a clean ``heads`` dim that GSPMD can
+shard 16-way end-to-end (the grouped-reshape formulation loses the head
+sharding through the (h -> kvh, g) split and silently replicates attention
+across the model axis — found via the dry-run FLOP audit, EXPERIMENTS.md
+§Perf iteration 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...sharding import ctx
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k, h):
+    kvh = k.shape[2]
+    if kvh == h:
+        return k
+    g = h // kvh
+    k = jnp.repeat(k, g, axis=2)
+    return k
+
+
+def mha_ref(q, k, v, *, causal: bool = True, scale: float | None = None,
+            q_offset: int | jnp.ndarray | None = None,
+            kv_len: jnp.ndarray | None = None):
+    """Grouped-query attention.
+
+    Args:
+      q: [b, s, h, d];  k, v: [b, t, kvh, d]  (h % kvh == 0).
+      causal: apply a causal mask with q positions offset by ``q_offset``
+        (default t - s, the prefill/decode-with-cache convention).
+      kv_len: optional [b] valid cache lengths; keys at index >= kv_len are
+        masked out (ragged decode batches).
+    Returns: [b, s, h, dv] in q.dtype.
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+
+    act = ("batch", None, "heads", None)
+    q = ctx.constrain(q, act)
+    k = ctx.constrain(_expand_kv(k, h), act)
+    v = ctx.constrain(_expand_kv(v, h), act)
+
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    scores = ctx.constrain(scores, ("batch", "heads", None, None))
+
+    if causal:
+        off = (t - s) if q_offset is None else q_offset
+        q_pos = jnp.arange(s)[:, None] + off               # [s, 1]
+        k_pos = jnp.arange(t)[None, :]                     # [1, t]
+        scores = jnp.where(q_pos >= k_pos, scores, NEG_INF)
+    if kv_len is not None:
+        valid = jnp.arange(t)[None, :] < kv_len[:, None]   # [b, t]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return ctx.constrain(out.astype(q.dtype), act)

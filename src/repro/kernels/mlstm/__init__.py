@@ -1,0 +1,6 @@
+from .ops import mlstm, mlstm_step
+from .ref import mlstm_chunkwise_xla, mlstm_parallel_ref
+from .kernel import mlstm_chunkwise
+
+__all__ = ["mlstm", "mlstm_step", "mlstm_parallel_ref", "mlstm_chunkwise",
+           "mlstm_chunkwise_xla"]

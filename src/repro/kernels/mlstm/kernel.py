@@ -1,0 +1,123 @@
+"""Pallas TPU chunkwise mLSTM kernel.
+
+Same VMEM-tiled online schedule as flash attention, with softmax replaced by
+the xLSTM exponential-gating decay: the running statistic is the row max of
+the decay matrix D~ (not of the scores), the denominator is a *signed* sum
+of decayed scores (clamped at e^{-m}), and cumulative forget-gate sums F are
+precomputed outside the kernel (one cheap cumsum) so each tile's decay is
+F_t - F_s + logi_s — a rank-1 broadcast in VMEM. Grid and scratch layout
+are identical to kernels/flash_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel_impl(q_ref, k_ref, v_ref, fq_ref, fk_ref, i_ref, o_ref,
+                       m_ref, den_ref, acc_ref, *, block_q: int,
+                       block_k: int, kv_blocks: int, scale: float,
+                       kv_total: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (ki * block_k) <= (qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _step():
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        causal = q_pos >= k_pos
+
+        Ft = fq_ref[0, :, 0].astype(jnp.float32)           # [bq]
+        Fs = fk_ref[0, :, 0].astype(jnp.float32)           # [bk]
+        li = i_ref[0, :, 0].astype(jnp.float32)            # [bk]
+        dtil = Ft[:, None] - Fs[None, :] + li[None, :]
+        dtil = jnp.where(causal & (k_pos < kv_total), dtil, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(dtil, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        S = s * jnp.exp(dtil - m_new[:, None])
+
+        den_ref[...] = den_ref[...] * alpha + jnp.sum(S, axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        v_row = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, v.shape, 0)
+        v = jnp.where(v_row < kv_total, v, 0.0)
+        pv = jax.lax.dot_general(S, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        den = jnp.maximum(jnp.abs(den_ref[...]), jnp.exp(-m_ref[...]))
+        o_ref[0, :, 0, :] = (acc_ref[...] / den[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret"))
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q,k,v: [b,s,h,d]; gates: [b,s,h] pre-activations -> h [b,s,h,d]."""
+    b, s, h, d = q.shape
+    scale = d ** -0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    q_blocks = pl.cdiv(s, block_q)
+    kv_blocks = pl.cdiv(s, block_k)
+
+    F = jnp.cumsum(jax.nn.log_sigmoid(f_gate.astype(jnp.float32)), axis=1)
+    logi = i_gate.astype(jnp.float32)
+
+    kern = functools.partial(_mlstm_kernel_impl, block_q=block_q,
+                             block_k=block_k, kv_blocks=kv_blocks,
+                             scale=scale, kv_total=s)
+
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),   # q
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, qi, ki: (bi, ki, hi, 0)),   # k
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, qi, ki: (bi, ki, hi, 0)),   # v
+            pl.BlockSpec((1, block_q, 1),
+                         lambda bi, hi, qi, ki: (bi, qi, hi)),      # F_t
+            pl.BlockSpec((1, block_k, 1),
+                         lambda bi, hi, qi, ki: (bi, ki, hi)),      # F_s
+            pl.BlockSpec((1, block_k, 1),
+                         lambda bi, hi, qi, ki: (bi, ki, hi)),      # logi
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, F, F, logi)

@@ -1,0 +1,18 @@
+"""Dispatch for the mLSTM: pallas | interpret | ref."""
+from __future__ import annotations
+
+from . import kernel, ref
+
+
+def mlstm(q, k, v, i_gate, f_gate, *, impl: str = "ref",
+          block_q: int = 128, block_k: int = 128, chunk: int = 512):
+    if impl == "ref":
+        return ref.mlstm_parallel_ref(q, k, v, i_gate, f_gate)
+    if impl == "chunkwise":
+        return ref.mlstm_chunkwise_xla(q, k, v, i_gate, f_gate, chunk=chunk)
+    return kernel.mlstm_chunkwise(q, k, v, i_gate, f_gate,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=(impl == "interpret"))
+
+
+mlstm_step = ref.mlstm_step

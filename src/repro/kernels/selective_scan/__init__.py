@@ -1,0 +1,4 @@
+from .ops import selective_scan, selective_step
+from .ref import (selective_scan_chunked, selective_scan_ref)
+__all__ = ["selective_scan", "selective_step", "selective_scan_ref",
+           "selective_scan_chunked"]

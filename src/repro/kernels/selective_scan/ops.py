@@ -1,0 +1,18 @@
+"""Dispatch for the selective scan: pallas | interpret | ref | chunked."""
+from __future__ import annotations
+
+from . import kernel, ref
+
+
+def selective_scan(x, dt, A, B, C, D, h0=None, *, impl: str = "chunked",
+                   chunk: int = 256, block_i: int = 512):
+    if impl == "ref":
+        return ref.selective_scan_ref(x, dt, A, B, C, D, h0)
+    if impl == "chunked":
+        return ref.selective_scan_chunked(x, dt, A, B, C, D, h0, chunk=chunk)
+    return kernel.selective_scan(x, dt, A, B, C, D, h0, chunk=chunk,
+                                 block_i=block_i,
+                                 interpret=(impl == "interpret"))
+
+
+selective_step = ref.selective_step

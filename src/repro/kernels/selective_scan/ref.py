@@ -1,0 +1,77 @@
+"""Pure-jnp oracle for the Mamba selective scan (S6).
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+The reference materializes the full [b, s, inner, state] state trajectory
+via an associative scan — exact but memory-hungry; ``chunked`` bounds the
+transient to one chunk (what the Pallas kernel does in VMEM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _scan_combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def selective_scan_ref(x, dt, A, B, C, D, h0=None):
+    """x, dt: [b, s, inner]; A: [inner, state]; B, C: [b, s, state];
+    D: [inner]. Returns (y [b, s, inner], h_last [b, inner, state])."""
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    deltaA = jnp.exp(dt32[..., None] * A[None, None])          # [b,s,i,n]
+    deltaBx = dt32[..., None] * B[:, :, None, :].astype(jnp.float32) \
+        * x32[..., None]
+    a, h = jax.lax.associative_scan(_scan_combine, (deltaA, deltaBx),
+                                    axis=1)
+    if h0 is not None:
+        h = a * h0[:, None].astype(jnp.float32) + h
+    y = jnp.einsum("bsin,bsn->bsi", h, C.astype(jnp.float32)) \
+        + D[None, None].astype(jnp.float32) * x32
+    return y.astype(x.dtype), h[:, -1]
+
+
+def selective_scan_chunked(x, dt, A, B, C, D, h0=None, chunk: int = 256):
+    """Chunked variant: lax.scan over chunks, associative scan inside.
+
+    Bounds the materialized state to [b, chunk, inner, state] — the
+    GSPMD/dry-run path for full-scale shapes.
+    """
+    b, s, inner = x.shape
+    n = A.shape[1]
+    if s % chunk != 0:
+        return selective_scan_ref(x, dt, A, B, C, D, h0)
+    nc = s // chunk
+    h0 = (jnp.zeros((b, inner, n), jnp.float32) if h0 is None
+          else h0.astype(jnp.float32))
+
+    def body(h, args):
+        xc, dtc, Bc, Cc = args
+        yc, h_new = selective_scan_ref(xc, dtc, A, Bc, Cc, D, h0=h)
+        return h_new, yc
+
+    def split(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    h_last, ys = jax.lax.scan(
+        body, h0, (split(x), split(dt), split(B), split(C)))
+    y = ys.swapaxes(0, 1).reshape(b, s, inner)
+    return y, h_last
+
+
+def selective_step(x, dt, A, B, C, D, h):
+    """Single decode step. x, dt: [b, inner]; B, C: [b, state];
+    h: [b, inner, state]. Returns (y [b, inner], h_new)."""
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    dA = jnp.exp(dt32[..., None] * A[None])
+    h_new = dA * h.astype(jnp.float32) \
+        + dt32[..., None] * B[:, None, :].astype(jnp.float32) * x32[..., None]
+    y = jnp.einsum("bin,bn->bi", h_new, C.astype(jnp.float32)) \
+        + D[None].astype(jnp.float32) * x32
+    return y.astype(x.dtype), h_new

@@ -1,0 +1,264 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw              [s]
+    collective term = collective_bytes_per_device / link_bw      [s]
+
+cost_analysis() on the SPMD module is already per-device (verified in
+EXPERIMENTS.md §Dry-run), so dividing the global formula by `chips` and
+using per-device numbers are the same thing. FLOPs/bytes/collectives come
+from the dry-run's depth-extrapolated accounting (scan bodies fully
+counted).
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active params —
+the useful-work reference; MODEL_FLOPS / (HLO_FLOPs * chips) measures how
+much compiled compute is useful (catches remat + dispatch + replication
+waste).
+
+Memory is reported twice: raw HLO temp, and fused-attention corrected
+(minus the materialized score tensors that the Pallas flash kernels never
+write to HBM — the dry-run lowers the einsum path, see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+from .. import configs
+from ..configs.base import SHAPES
+from ..models import build
+from ..models.transformer import layout
+
+# TPU v5e-class hardware constants (per chip).
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+HBM_GIB = 16.0
+
+
+def _shard_extent(spec, mesh_sizes) -> int:
+    n = 1
+    for ax in spec:
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        for a in axes:
+            n *= mesh_sizes.get(a, 1)
+    return n
+
+
+def tree_device_bytes(template, rules, dtype_size=2) -> float:
+    """Per-device stored bytes of a P-template under the sharding rules."""
+    import jax
+
+    from ..models.common import P, pspec_tree
+    specs = pspec_tree(template, rules)
+    sizes = rules["_mesh_sizes"]
+    total = 0.0
+    for p, s in zip(
+            jax.tree.leaves(template, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.leaves(specs, is_leaf=lambda x: not isinstance(
+                x, (dict, list)))):
+        ds = {"float32": 4, "int32": 4, "bfloat16": 2}.get(
+            str(p.dtype), dtype_size) if p.dtype is not None else dtype_size
+        total += p.size * ds / _shard_extent(s, sizes)
+    return total
+
+
+def fused_memory_bytes(cfg, shape, mesh_sizes) -> float:
+    """Analytic per-device HBM traffic per step, assuming fused kernels.
+
+    The HLO 'bytes accessed' metric counts every op's operands pre-fusion —
+    a loose upper bound. This model is the standard napkin roofline:
+    weight reads per pass, optimizer-state read/write, one activation
+    save + recompute per layer (full remat), cache read(+write) at decode.
+    """
+    from ..models import build
+    from ..sharding.rules import make_rules
+
+    class _M:
+        shape = mesh_sizes
+    rules = make_rules(cfg, _M())
+    model = build(cfg, ep_degree=mesh_sizes.get("data", 1))
+    p_dev = tree_device_bytes(model.template(), rules)
+    chips = int(np.prod(list(mesh_sizes.values())))
+    dp = mesh_sizes.get("pod", 1) * mesh_sizes.get("data", 1)
+    tokens_dev = shape.global_batch * shape.seq_len / min(
+        dp, shape.global_batch)
+    act_unit = cfg.d_model * 2.0                     # bf16 per token
+
+    if shape.kind == "train":
+        from .specs import default_microbatches, opt_config
+
+        class _Mesh:
+            shape = mesh_sizes
+        nm = default_microbatches(cfg, shape, _Mesh())
+        st = 4 if opt_config(cfg).state_dtype == "float32" else 2
+        w_traffic = (2 * nm + 2) * p_dev             # fwd+bwd reads, update
+        opt_traffic = (4 * st / 2 + 2) * p_dev       # m,v rw + param rw
+        act_traffic = cfg.n_layers * tokens_dev * act_unit * 8
+        return w_traffic + opt_traffic + act_traffic
+    if shape.kind == "prefill":
+        cache_dev = tree_device_bytes(
+            model.cache_template(shape.global_batch, shape.seq_len), rules)
+        return 2 * p_dev + cfg.n_layers * tokens_dev * act_unit * 4 \
+            + cache_dev
+    # decode: weights + full cache read (+ small write)
+    cache_dev = tree_device_bytes(
+        model.cache_template(shape.global_batch, shape.seq_len), rules)
+    return 2 * p_dev + cache_dev
+
+
+def active_params(cfg) -> float:
+    """Active (per-token) parameter count: total minus unused expert frac."""
+    model = build(cfg, ep_degree=16)
+    total = model.param_count()
+    if not cfg.is_moe:
+        return total
+    # Routed expert params (wi_gate + wi_up + wo) per MoE layer.
+    e_pad = cfg.padded_experts(16)
+    per_expert = 3 * cfg.d_model * cfg.expert_d_ff
+    n_moe_layers = sum(1 for i in range(cfg.n_layers)
+                       if (cfg.moe_period == 1 or i % cfg.moe_period == 1))
+    routed = n_moe_layers * e_pad * per_expert
+    used = n_moe_layers * cfg.top_k * per_expert
+    return total - routed + used
+
+
+def model_flops(cfg, shape) -> float:
+    """Global useful FLOPs per step: 6ND (train) / 2ND (inference)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token/seq
+
+
+def attention_score_bytes(cfg, shape, n_devices: int) -> float:
+    """Per-device bytes of ONE layer's materialized f32 score tensor —
+    the fused-attention memory correction (the layer scan reuses the same
+    buffer, so peak temp carries one layer's scores). xLSTM's mLSTM
+    parallel form is quadratic like attention, so it gets the same
+    correction (its Pallas kernel tiles the decay matrix)."""
+    dp = min(shape.global_batch, max(n_devices // 16, 1))
+    b_local = max(shape.global_batch // max(dp, 1), 1)
+    heads_local = max(cfg.n_heads // 16, 1) if cfg.n_heads % 16 == 0 \
+        else cfg.n_heads
+    s = shape.seq_len
+    if shape.kind == "decode":
+        return 2.0 * b_local * heads_local * s * 4
+    return 2.0 * b_local * heads_local * float(s) * s * 4
+
+
+def terms_from_record(rec: dict) -> dict:
+    cfg = configs.get(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["n_devices"]
+    mesh_sizes = ({"pod": 2, "data": 16, "model": 16} if chips == 512
+                  else {"data": 16, "model": 16})
+    ex = rec.get("extrapolated") or {
+        "flops": rec["cost_full_hlo"]["flops"],
+        "bytes": rec["cost_full_hlo"]["bytes"],
+        "coll": rec["collectives_full_hlo"]["total_bytes"]}
+    t_compute = ex["flops"] / PEAK_FLOPS
+    t_memory_hlo = ex["bytes"] / HBM_BW          # pre-fusion upper bound
+    t_memory = fused_memory_bytes(cfg, shape, mesh_sizes) / HBM_BW
+    t_coll = ex["coll"] / LINK_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    useful = mf / max(ex["flops"] * chips, 1e-9)
+    bound = max(t_compute, t_memory, t_coll)
+    # Roofline fraction: useful work at peak vs the achievable step time.
+    frac = (mf / chips / PEAK_FLOPS) / max(bound, 1e-12)
+    score_corr = attention_score_bytes(cfg, shape, chips) / 2**30
+    mem = rec["memory"]
+    per_chip_raw = mem["argument_gib"] + mem["temp_gib"]
+    per_chip_fused = mem["argument_gib"] + max(
+        mem["temp_gib"] - score_corr, 0.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": rec.get("mesh_name", "single"), "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_memory_hlo_s": t_memory_hlo, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_per_dev": ex["flops"],
+        "useful_fraction": useful, "roofline_fraction": frac,
+        "mem_per_chip_raw_gib": per_chip_raw,
+        "mem_per_chip_fused_gib": per_chip_fused,
+        "fits_16gib_fused": per_chip_fused <= HBM_GIB,
+    }
+
+
+def suggestion(t: dict) -> str:
+    if t["dominant"] == "collective":
+        return ("reduce resharding: fuse all-gathers (FSDP prefetch), "
+                "overlap collectives with compute, or compress grads")
+    if t["dominant"] == "memory":
+        if t["shape"].startswith("decode") or t["shape"].startswith("long"):
+            return ("decode is cache-BW bound: shrink KV (MLA/GQA/quant) "
+                    "or raise batch to amortize weight reads")
+        return ("cut HBM traffic: fused attention kernel, tighter remat "
+                "policy, bf16 activations end-to-end")
+    return ("raise MXU utilization: bigger microbatches, fewer one-hot "
+            "matmuls (MoE gather dispatch), lighter remat")
+
+
+def build_table(dryrun_dir: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if "skipped" in rec or "error" in rec:
+            continue
+        t = terms_from_record(rec)
+        t["suggestion"] = suggestion(t)
+        rows.append(t)
+    return rows
+
+
+def to_markdown(rows, title="Roofline") -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | roofline | mem/chip (fused) |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [f"### {title}\n", hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r["mesh"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_fraction']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['mem_per_chip_fused_gib']:.1f} GiB |\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+    rows = build_table(args.dryrun)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out + ".json", "w") as f:
+        json.dump(rows, f, indent=1)
+    md = to_markdown(rows)
+    with open(args.out + ".md", "w") as f:
+        f.write(md)
+    print(md)
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:5]
+    print("\nworst roofline fractions:")
+    for r in worst:
+        print(f"  {r['arch']} {r['shape']} {r['mesh']}: "
+              f"{r['roofline_fraction']:.3f} ({r['dominant']}) -> "
+              f"{r['suggestion']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serving launcher: LBCD-controlled analytics service.
+
+    PYTHONPATH=src python -m repro.launch.serve --streams 16 --epochs 8 \
+        [--engine] [--islands 4]
+
+On a real pod this drives per-island inference engines (one model replica
+per 16-chip island); on CPU it runs the M/M/1 data plane or a reduced
+real-model engine. The controller half is identical in both cases.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from ..core import lbcd, profiles
+from ..serving import AnalyticsService
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=int, default=16)
+    ap.add_argument("--islands", type=int, default=4)
+    ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--engine", action="store_true")
+    ap.add_argument("--v", type=float, default=10.0)
+    ap.add_argument("--p-min", type=float, default=0.7)
+    ap.add_argument("--bandwidth-mhz", type=float, default=12.0)
+    ap.add_argument("--tflops", type=float, default=15.0)
+    args = ap.parse_args()
+
+    system = profiles.EdgeSystem(
+        n_cameras=args.streams, n_servers=args.islands,
+        n_slots=max(args.epochs, 8),
+        mean_bandwidth_hz=args.bandwidth_mhz * 1e6,
+        mean_compute_flops=args.tflops * 1e12, seed=0)
+    ctrl = lbcd.LBCDController(system, v=args.v, p_min=args.p_min)
+
+    if args.engine:
+        import jax
+
+        from .. import configs
+        from ..models import build
+        from ..models.common import init_params
+        from ..serving import Engine
+
+        cfg = configs.get("qwen2.5-3b").reduced()
+        model = build(cfg)
+        params = init_params(model.template(), jax.random.PRNGKey(0))
+        eng = Engine(model, params, n_lanes=8, max_len=96,
+                     decode_tokens=2)
+        svc = AnalyticsService(ctrl, mode="engine", engine=eng,
+                               epoch_duration=3.0)
+    else:
+        svc = AnalyticsService(ctrl, mode="mm1", epoch_duration=1200.0)
+
+    print("epoch  pred-AoPI  meas-AoPI  acc     q")
+    for t in range(args.epochs):
+        r = svc.run_epoch(t)
+        print(f"{t:>5d}  {r.predicted_aopi:9.4f}  {r.measured_aopi:9.4f}"
+              f"  {r.accuracy:5.3f}  {r.q:5.2f}")
+    print(f"\nmean measured AoPI {svc.mean_measured:.4f} s "
+          f"(predicted {svc.mean_predicted:.4f} s)")
+
+
+if __name__ == "__main__":
+    main()

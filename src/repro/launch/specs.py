@@ -1,0 +1,245 @@
+"""Cell planning: (arch x input-shape x mesh) -> jittable step + shardings.
+
+``plan_cell`` is the single entry point used by the dry-run, the roofline
+harness, and the real launchers. It builds the model, the sharding rules,
+the abstract inputs (ShapeDtypeStruct stand-ins — weak-type-correct,
+shardable, zero allocation), and the step function with explicit
+in/out_shardings and donation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs.base import InputShape, ModelConfig
+from ..data.pipeline import batch_for
+from ..models import build
+from ..models.common import abstract_params, pspec_tree, tree_map
+from ..sharding import ctx as shard_ctx
+from ..sharding import rules as rules_mod
+from ..training import optimizer as opt_mod
+from ..training.train_step import make_train_step
+
+
+def default_microbatches(cfg: ModelConfig, shape: InputShape, mesh) -> int:
+    """Per-device activation budget heuristic: keep the live per-microbatch
+    token count per chip near a target so layer activations + remat stash
+    fit alongside params/optimizer (see DESIGN.md memory table)."""
+    if shape.kind != "train":
+        return 1
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    tokens_per_chip = shape.global_batch * shape.seq_len // dp
+    target = 8192 if cfg.d_model <= 4096 else \
+        4096 if cfg.d_model <= 7168 else 2048
+    n = max(1, tokens_per_chip // target)
+    # Must divide the per-shard batch.
+    per_shard = max(shape.global_batch // dp, 1)
+    while per_shard % n:
+        n -= 1
+    return max(n, 1)
+
+
+def opt_config(cfg: ModelConfig) -> opt_mod.AdamWConfig:
+    big = cfg.name in ("dbrx-132b", "jamba-1.5-large-398b")
+    return opt_mod.AdamWConfig(
+        state_dtype="bfloat16" if big else "float32")
+
+
+@dataclasses.dataclass
+class CellPlan:
+    cfg: ModelConfig
+    shape: InputShape
+    mesh: Any
+    rules: dict
+    model: Any
+    step_fn: Callable            # jittable
+    args: tuple                  # abstract arguments (ShapeDtypeStructs)
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple
+    kind: str
+
+    def lower(self):
+        jitted = jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate)
+        with self.mesh:
+            return jitted.lower(*self.args)
+
+    def compile(self):
+        return self.lower().compile()
+
+
+def _abstract(template, dtype):
+    return abstract_params(template, dtype)
+
+
+def _named_tree(mesh, template, rules):
+    specs = pspec_tree(template, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def _batch_abstract(cfg: ModelConfig, shape: InputShape, kind: str):
+    gb, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    if kind == "decode":
+        out["tokens"] = jax.ShapeDtypeStruct((gb,), jnp.int32)
+        return out
+    out["tokens"] = jax.ShapeDtypeStruct((gb, s), jnp.int32)
+    if kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((gb, s), jnp.int32)
+    if cfg.family == "vlm":
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (gb, cfg.n_vision_tokens, cfg.d_model), dt)
+    if cfg.family == "audio":
+        out["audio_embeds"] = jax.ShapeDtypeStruct((gb, s, cfg.d_model), dt)
+    return out
+
+
+def _batch_shardings(cfg, mesh, rules, shape, kind: str):
+    dp = rules["batch"]
+    bs = NamedSharding(mesh, PartitionSpec(*rules_mod.spec_dims(
+        (shape.global_batch,), ("batch",), rules)))
+    seq_sh = NamedSharding(mesh, PartitionSpec(*rules_mod.spec_dims(
+        (shape.global_batch, shape.seq_len), ("batch", "seq"), rules)))
+    out = {}
+    if kind == "decode":
+        out["tokens"] = bs
+        return out
+    out["tokens"] = seq_sh
+    if kind == "train":
+        out["labels"] = seq_sh
+    rep3 = lambda n: NamedSharding(mesh, PartitionSpec(*rules_mod.spec_dims(
+        (shape.global_batch, n, cfg.d_model), ("batch", None, None), rules)))
+    if cfg.family == "vlm":
+        out["vision_embeds"] = rep3(cfg.n_vision_tokens)
+    if cfg.family == "audio":
+        out["audio_embeds"] = rep3(shape.seq_len)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, model=None,
+                kind: Optional[str] = None):
+    """Abstract inputs for a cell (the dry-run's ShapeDtypeStruct batch)."""
+    kind = kind or shape.kind
+    batch = _batch_abstract(cfg, shape, kind)
+    if kind == "train":
+        return batch
+    model = model or build(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    cache_tmpl = model.cache_template(shape.global_batch, shape.seq_len,
+                                      dtype=dt)
+    cache = _abstract(cache_tmpl, dt)
+    return batch, cache
+
+
+def plan_cell(cfg: ModelConfig, shape: InputShape, mesh, *,
+              impl: str = "ref", ssm_impl: str = "chunked",
+              mlstm_impl: str = "ref",
+              rule_overrides: Optional[dict] = None,
+              n_microbatches: Optional[int] = None,
+              hoist_fsdp_gather: Optional[bool] = None) -> CellPlan:
+    rules = rules_mod.make_rules(cfg, mesh, overrides=rule_overrides)
+    ep = rules_mod.ep_degree(mesh)
+    model = build(cfg, impl=impl, ssm_impl=ssm_impl,
+                  mlstm_impl=mlstm_impl, ep_degree=ep)
+    dt = jnp.dtype(cfg.dtype)
+    tmpl = model.template()
+    params_abs = _abstract(tmpl, dt)
+    params_sh = _named_tree(mesh, tmpl, rules)
+    kind = shape.kind
+
+    def with_rules(fn):
+        @functools.wraps(fn)
+        def inner(*a):
+            with shard_ctx.activation_rules(rules):
+                return fn(*a)
+        return inner
+
+    if kind == "train":
+        ocfg = opt_config(cfg)
+        nm = n_microbatches or default_microbatches(cfg, shape, mesh)
+        if hoist_fsdp_gather is None:
+            # Auto: hoist when the TP-only (gathered) weights fit a modest
+            # HBM slice — saves (nm-1) x weight-bytes of ICI per step
+            # (EXPERIMENTS.md §Perf cell A iter 3).
+            from .roofline import tree_device_bytes
+            gr0 = dict(rules)
+            gr0["embed"] = None
+            gathered_gib = tree_device_bytes(tmpl, gr0) / 2**30
+            hoist_fsdp_gather = nm > 1 and gathered_gib <= 6.0
+        pre = None
+        if hoist_fsdp_gather and cfg.fsdp:
+            gr = dict(rules)
+            gr["embed"] = None                    # TP-only layout (gathered)
+            gathered_specs = pspec_tree(tmpl, gr)
+
+            def pre(params, _specs=gathered_specs):
+                return jax.tree.map(jax.lax.with_sharding_constraint,
+                                    params, _specs)
+        step = with_rules(make_train_step(model, ocfg, n_microbatches=nm,
+                                          pre_constrain=pre))
+        opt_abs = {
+            "m": tree_map(lambda p: jax.ShapeDtypeStruct(
+                p.shape, jnp.dtype(ocfg.state_dtype)), tmpl),
+            "v": tree_map(lambda p: jax.ShapeDtypeStruct(
+                p.shape, jnp.dtype(ocfg.state_dtype)), tmpl),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        opt_sh = {"m": params_sh, "v": params_sh,
+                  "step": NamedSharding(mesh, PartitionSpec())}
+        batch_abs = _batch_abstract(cfg, shape, kind)
+        batch_sh = _batch_shardings(cfg, mesh, rules, shape, kind)
+        rep = NamedSharding(mesh, PartitionSpec())
+        metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+        return CellPlan(
+            cfg, shape, mesh, rules, model, step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, metrics_sh),
+            donate=(0, 1), kind=kind)
+
+    cache_tmpl = model.cache_template(shape.global_batch, shape.seq_len,
+                                      dtype=dt)
+    cache_abs = _abstract(cache_tmpl, dt)
+    cache_sh = _named_tree(mesh, cache_tmpl, rules)
+    vocab_sh = NamedSharding(mesh, PartitionSpec(*rules_mod.spec_dims(
+        (shape.global_batch, cfg.padded_vocab), ("batch", "vocab"), rules)))
+
+    if kind == "prefill":
+        @with_rules
+        def step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+        batch_abs = _batch_abstract(cfg, shape, kind)
+        batch_sh = _batch_shardings(cfg, mesh, rules, shape, kind)
+        logits_sh = NamedSharding(mesh, PartitionSpec(
+            *rules_mod.spec_dims(
+                (shape.global_batch, 1, cfg.padded_vocab),
+                ("batch", None, "vocab"), rules)))
+        return CellPlan(
+            cfg, shape, mesh, rules, model, step,
+            args=(params_abs, batch_abs, cache_abs),
+            in_shardings=(params_sh, batch_sh, cache_sh),
+            out_shardings=(logits_sh, cache_sh),
+            donate=(2,), kind=kind)
+
+    # decode
+    @with_rules
+    def step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    tokens_abs = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    tokens_sh = NamedSharding(mesh, PartitionSpec(*rules_mod.spec_dims(
+        (shape.global_batch,), ("batch",), rules)))
+    return CellPlan(
+        cfg, shape, mesh, rules, model, step,
+        args=(params_abs, tokens_abs, cache_abs),
+        in_shardings=(params_sh, tokens_sh, cache_sh),
+        out_shardings=(vocab_sh, cache_sh),
+        donate=(2,), kind=kind)

@@ -1,0 +1,114 @@
+"""Training launcher: real steps on whatever devices exist.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --reduced --steps 50 --batch 8 --seq 128
+
+On the CPU container this trains reduced configs end-to-end (the ~100M-class
+example lives in examples/train_e2e.py); on a real pod the same entry point
+takes the full config + production mesh. Features: checkpoint/restart,
+straggler monitoring, deterministic data, loss/throughput logging.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import configs
+from ..data.pipeline import PipelineConfig, TokenPipeline
+from ..models import build
+from ..models.common import init_params
+from ..sharding import ctx as shard_ctx
+from ..sharding import rules as rules_mod
+from ..training import checkpoint as ckpt_mod
+from ..training import optimizer as opt_mod
+from ..training.failure import StragglerMonitor
+from ..training.train_step import make_train_step
+from .mesh import make_host_mesh
+
+
+def run(cfg, *, steps: int, batch: int, seq: int, ckpt_dir=None,
+        ckpt_every: int = 0, n_microbatches: int = 1, lr: float = 3e-4,
+        log_every: int = 10, resume: bool = False, seed: int = 0):
+    model = build(cfg)
+    mesh = make_host_mesh()
+    rules = rules_mod.make_rules(cfg, mesh)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(model.template(), key, jnp.dtype(cfg.dtype))
+    ocfg = dataclasses.replace(opt_mod.AdamWConfig(), lr=lr,
+                               total_steps=steps)
+    opt_state = opt_mod.init(params, ocfg)
+    start = 0
+    if resume and ckpt_dir and ckpt_mod.latest_step(ckpt_dir) is not None:
+        (params, opt_state), start = ckpt_mod.restore(
+            ckpt_dir, (params, opt_state))
+        print(f"resumed from step {start}")
+
+    step_fn = make_train_step(model, ocfg, n_microbatches=n_microbatches)
+
+    def wrapped(params, opt_state, batch_):
+        with shard_ctx.activation_rules(rules):
+            return step_fn(params, opt_state, batch_)
+
+    jitted = jax.jit(wrapped, donate_argnums=(0, 1))
+    pipe = TokenPipeline(PipelineConfig(cfg.vocab, seq, batch, seed=seed))
+    monitor = StragglerMonitor(n_workers=1)
+    losses = []
+    t_start = time.time()
+    with mesh:
+        for step in range(start, steps):
+            b = pipe.batch(step)
+            batch_j = {k: jnp.asarray(v) for k, v in b.items()}
+            if cfg.family == "vlm":
+                batch_j["vision_embeds"] = jnp.asarray(pipe.modality_stub(
+                    step, cfg.n_vision_tokens, cfg.d_model))
+            if cfg.family == "audio":
+                batch_j["audio_embeds"] = jnp.asarray(pipe.modality_stub(
+                    step, seq, cfg.d_model, kind="audio"))
+            t0 = time.time()
+            params, opt_state, metrics = jitted(params, opt_state, batch_j)
+            loss = float(metrics["loss"])
+            monitor.observe([time.time() - t0])
+            losses.append(loss)
+            if log_every and step % log_every == 0:
+                tok_s = batch * seq / max(time.time() - t0, 1e-9)
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"tok/s {tok_s:,.0f}", flush=True)
+            if ckpt_every and ckpt_dir and (step + 1) % ckpt_every == 0:
+                ckpt_mod.save(ckpt_dir, step + 1, (params, opt_state))
+    wall = time.time() - t_start
+    return {"losses": losses, "wall_s": wall, "params": params,
+            "opt_state": opt_state}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    out = run(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+              ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+              n_microbatches=args.microbatches, lr=args.lr,
+              resume=args.resume)
+    print(f"final loss {out['losses'][-1]:.4f} "
+          f"({out['wall_s']:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

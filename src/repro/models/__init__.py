@@ -1,0 +1,7 @@
+"""Model zoo: pure-JAX templates + applies for all assigned architectures."""
+from . import (attention, common, layers, mla, moe, registry, ssm,
+               transformer, xlstm)
+from .registry import build
+
+__all__ = ["attention", "common", "layers", "mla", "moe", "registry",
+           "ssm", "transformer", "xlstm", "build"]

@@ -1,0 +1,144 @@
+"""GQA self-attention and cross-attention blocks (templates + apply)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.decode_attention import decode_attention
+from ..kernels.flash_attention import attention as attn_op
+from .common import (EMBED, HEADS, HEAD_DIM, KV_HEADS, CACHE_SEQ, P)
+from .layers import apply_rope
+
+
+def gqa_template(cfg, cross: bool = False):
+    d, h, kvh = cfg.d_model, cfg.padded_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    t = {
+        "wq": P((d, h, hd), (EMBED, HEADS, HEAD_DIM)),
+        "wk": P((d, kvh, hd), (EMBED, KV_HEADS, HEAD_DIM)),
+        "wv": P((d, kvh, hd), (EMBED, KV_HEADS, HEAD_DIM)),
+        "wo": P((h, hd, d), (HEADS, HEAD_DIM, EMBED)),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = P((h, hd), (HEADS, HEAD_DIM), init="zeros")
+        t["bk"] = P((kvh, hd), (KV_HEADS, HEAD_DIM), init="zeros")
+        t["bv"] = P((kvh, hd), (KV_HEADS, HEAD_DIM), init="zeros")
+    return t
+
+
+def cache_template(cfg, batch: int, max_len: int, dtype=None):
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": P((batch, max_len, kvh, hd),
+               ("batch", CACHE_SEQ, KV_HEADS, HEAD_DIM), init="zeros",
+               dtype=dtype),
+        "v": P((batch, max_len, kvh, hd),
+               ("batch", CACHE_SEQ, KV_HEADS, HEAD_DIM), init="zeros",
+               dtype=dtype),
+    }
+
+
+def _qkv(params, x, kv_x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def _out(params, ctx):
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+
+
+def gqa_apply(params, x, cfg, *, positions=None, causal=True, kv_x=None,
+              impl="ref", cache=None):
+    """Full-sequence attention (train / prefill).
+
+    ``kv_x``: cross-attention source ([b, t, d]); rope skipped for cross.
+    ``cache``: when given (prefill), k/v are written at offset 0 and the
+    updated cache is returned alongside the output.
+    """
+    cross = kv_x is not None
+    q, k, v = _qkv(params, x, kv_x if cross else x, cfg)
+    if not cross:
+        if positions is None:
+            positions = jnp.arange(x.shape[1])[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = attn_op(q, k, v, causal=causal and not cross, impl=impl)
+    y = _out(params, out)
+    if cache is not None:
+        s = k.shape[1]
+        new_cache = dict(cache)
+        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        return y, new_cache
+    return y
+
+
+def scatter_kv(cache_arr, new, lens):
+    """Write new [b, ...] at per-sequence positions ``lens`` [b] into
+    cache [b, t, ...].
+
+    Under a sharding context the update is a one-hot select: GSPMD
+    partitions it cleanly even when the cache's seq dim is sharded, whereas
+    a batched scatter triggers an involuntary full rematerialization
+    (all-gather of the whole cache per layer — found via the dry-run
+    collective audit, EXPERIMENTS.md §Perf iteration 1). On TPU the real
+    engine path uses in-place updates inside the decode kernel; the extra
+    cache read/write of the one-hot form is corrected for in the roofline's
+    fused-memory estimate.
+    """
+    from ..sharding import ctx
+    if ctx.current() is None:
+        b = cache_arr.shape[0]
+        return cache_arr.at[jnp.arange(b), lens].set(
+            new.astype(cache_arr.dtype), mode="drop")
+    t = cache_arr.shape[1]
+    oh = (jnp.arange(t)[None, :] == lens[:, None])           # [b, t]
+    oh = oh.reshape(oh.shape + (1,) * (cache_arr.ndim - 2))
+    return jnp.where(oh, new[:, None].astype(cache_arr.dtype), cache_arr)
+
+
+def gqa_decode(params, x, cfg, cache, lens, *, impl="ref"):
+    """Single-token decode. x: [b, 1, d]; lens: [b] current cache fill.
+
+    Returns (y [b, 1, d], new_cache). Attention spans cache[:lens]+new.
+    """
+    q, k, v = _qkv(params, x, x, cfg)
+    pos = lens[:, None]                                    # [b, 1]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    new_cache = dict(cache)
+    new_cache["k"] = scatter_kv(cache["k"], k[:, 0], lens)
+    new_cache["v"] = scatter_kv(cache["v"], v[:, 0], lens)
+    out = decode_attention(q[:, 0], new_cache["k"], new_cache["v"],
+                           lens + 1, impl=impl)
+    return _out(params, out[:, None]), new_cache
+
+
+def cross_decode(params, x, cfg, enc_k, enc_v, *, impl="ref", enc_len=None):
+    """Cross-attention during decode: static encoder KV, no cache update."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    t = enc_k.shape[1]
+    lens = (jnp.full((x.shape[0],), t, jnp.int32)
+            if enc_len is None else enc_len)
+    out = decode_attention(q[:, 0], enc_k, enc_v, lens, impl=impl)
+    return _out(params, out[:, None])
+
+
+def encode_kv(params, cfg, kv_x):
+    """Precompute cross-attention KV from encoder output / vision embeds."""
+    k = jnp.einsum("btd,dhk->bthk", kv_x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_x, params["wv"])
+    if cfg.qkv_bias:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return k, v

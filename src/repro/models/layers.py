@@ -1,0 +1,147 @@
+"""Primitive layers: norms, rotary embeddings, MLPs, embeddings, logits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import ctx
+from .common import (EMBED, MLP, VOCAB, P)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_template(d: int):
+    return {"scale": P((d,), (EMBED,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_template(d: int):
+    return {"scale": P((d,), (EMBED,), init="ones"),
+            "bias": P((d,), (EMBED,), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4, dims: int | None = None):
+    """Rotate the first ``dims`` features of ``x`` [..., seq, heads, hd].
+
+    ``positions``: int32 [..., seq] absolute positions (supports caches).
+    """
+    hd = x.shape[-1]
+    dims = dims or hd
+    freqs = rope_frequencies(dims, theta)                   # [dims/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..,s,d/2]
+    cos = jnp.cos(angles)[..., None, :]                     # [..,s,1,d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    rot, keep = x[..., :dims], x[..., dims:]
+    x1, x2 = jnp.split(rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), keep], axis=-1) \
+        if dims < hd else out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_template(d: int, ff: int):
+    return {"wi_gate": P((d, ff), (EMBED, MLP)),
+            "wi_up": P((d, ff), (EMBED, MLP)),
+            "wo": P((ff, d), (MLP, EMBED))}
+
+
+def _mlp_axes(ndim):
+    return ("batch",) + (None,) * (ndim - 2) + ("mlp",)
+
+
+def swiglu(params, x):
+    gate = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["wi_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = ctx.constrain(h, _mlp_axes(h.ndim))
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+def gelu_mlp_template(d: int, ff: int):
+    return {"wi": P((d, ff), (EMBED, MLP)),
+            "bi": P((ff,), (MLP,), init="zeros"),
+            "wo": P((ff, d), (MLP, EMBED)),
+            "bo": P((d,), (EMBED,), init="zeros")}
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["wi"]) + params["bi"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = ctx.constrain(h, _mlp_axes(h.ndim))
+    return jnp.einsum("...f,fd->...d", h, params["wo"]) + params["bo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+def embedding_template(vocab: int, d: int):
+    return {"table": P((vocab, d), (VOCAB, EMBED), init="embed", scale=0.02)}
+
+
+def embed(params, tokens):
+    out = jnp.take(params["table"], tokens, axis=0)
+    return ctx.constrain(out, ("batch",) + (None,) * (out.ndim - 1))
+
+
+def unembed_template(d: int, vocab: int):
+    return {"w": P((d, vocab), (EMBED, VOCAB), init="fan_in")}
+
+
+def unembed(params, x):
+    out = jnp.einsum("...d,dv->...v", x, params["w"])
+    return ctx.constrain(out, ("batch",) + (None,) * (out.ndim - 2)
+                         + ("vocab",))
+
+
+def softmax_xent(logits, labels, vocab_real: int, z_loss: float = 1e-4):
+    """Cross-entropy with padded-vocab masking and optional z-loss.
+
+    ``vocab_real``: true vocabulary size; logits beyond it (padding added
+    for TP divisibility) are masked to -inf. Returns per-token loss mean.
+    """
+    v = logits.shape[-1]
+    if vocab_real < v:
+        mask = jnp.arange(v) < vocab_real
+        logits = jnp.where(mask, logits, -1e30)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None],
+                             axis=-1).squeeze(-1)
+    loss = logz - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(logz)
+    return jnp.mean(loss)

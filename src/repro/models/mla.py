@@ -1,0 +1,122 @@
+"""Multi-head latent attention (MiniCPM3 / DeepSeek-V2 style).
+
+KV is compressed into a small latent c_kv (kv_lora dims) plus a shared
+rotary key (rope_dim dims): the decode cache is [b, t, kv_lora + rope_dim]
+— ~20x smaller than GQA at these dims.
+
+Prefill/train use the naive expanded form. Decode uses the **absorbed**
+form (beyond-paper perf note, DESIGN.md): k_up is folded into the query and
+v_up applied after attention, so per-step work is O(h * (nope*lora)) and the
+cache is read once — this is what makes minicpm3's decode roofline latent-
+bound instead of KV-bound.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ref import mha_ref
+from .common import (EMBED, HEADS, HEAD_DIM, LORA, CACHE_SEQ, P)
+from .layers import apply_rope, rmsnorm, rmsnorm_template
+
+NEG_INF = -1e30
+
+
+def mla_template(cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    return {
+        "q_down": P((d, m.q_lora), (EMBED, LORA)),
+        "q_norm": rmsnorm_template(m.q_lora),
+        "q_up": P((m.q_lora, h, m.nope_dim + m.rope_dim),
+                  (LORA, HEADS, HEAD_DIM)),
+        "kv_down": P((d, m.kv_lora + m.rope_dim), (EMBED, LORA)),
+        "kv_norm": rmsnorm_template(m.kv_lora),
+        "k_up": P((m.kv_lora, h, m.nope_dim), (LORA, HEADS, HEAD_DIM)),
+        "v_up": P((m.kv_lora, h, m.v_dim), (LORA, HEADS, HEAD_DIM)),
+        "wo": P((h, m.v_dim, d), (HEADS, HEAD_DIM, EMBED)),
+    }
+
+
+def mla_cache_template(cfg, batch: int, max_len: int, dtype=None):
+    m = cfg.mla
+    return {"ckv": P((batch, max_len, m.kv_lora),
+                     ("batch", CACHE_SEQ, LORA), init="zeros", dtype=dtype),
+            "krope": P((batch, max_len, m.rope_dim),
+                       ("batch", CACHE_SEQ, HEAD_DIM), init="zeros",
+                       dtype=dtype)}
+
+
+def _project(params, x, cfg, positions):
+    m = cfg.mla
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dq->bsq", x,
+                                              params["q_down"]))
+    q = jnp.einsum("bsq,qhk->bshk", cq, params["q_up"])
+    q_nope, q_rope = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("bsd,dq->bsq", x, params["kv_down"])
+    ckv = rmsnorm(params["kv_norm"], ckv_full[..., :m.kv_lora])
+    k_rope = ckv_full[..., m.kv_lora:]
+    # Shared-across-heads rotary key: treat as a 1-head rope input.
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_apply(params, x, cfg, *, positions=None, causal=True, cache=None,
+              impl="ref"):
+    """Full-sequence MLA (naive expanded form)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, ckv, k_rope = _project(params, x, cfg, positions)
+    k_nope = jnp.einsum("btq,qhk->bthk", ckv, params["k_up"])
+    v = jnp.einsum("btq,qhk->bthk", ckv, params["v_up"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, cfg.n_heads, m.rope_dim))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = mha_ref(q, k, v, causal=causal,
+                  scale=(m.nope_dim + m.rope_dim) ** -0.5)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+        new_cache["krope"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), 0, axis=1)
+        return y, new_cache
+    return y
+
+
+def mla_decode(params, x, cfg, cache, lens, *, impl="ref"):
+    """Absorbed-form single-token decode. x: [b, 1, d]."""
+    m = cfg.mla
+    b = x.shape[0]
+    pos = lens[:, None]
+    q_nope, q_rope, ckv_new, k_rope_new = _project(params, x, cfg, pos)
+
+    from .attention import scatter_kv
+    new_cache = dict(cache)
+    new_cache["ckv"] = scatter_kv(cache["ckv"], ckv_new[:, 0], lens)
+    new_cache["krope"] = scatter_kv(cache["krope"], k_rope_new[:, 0], lens)
+
+    # Absorb k_up into the query: q_eff [b, h, kv_lora].
+    q_eff = jnp.einsum("bhk,qhk->bhq", q_nope[:, 0], params["k_up"])
+    ckv_c = new_cache["ckv"].astype(jnp.float32)
+    kr_c = new_cache["krope"].astype(jnp.float32)
+    scale = (m.nope_dim + m.rope_dim) ** -0.5
+    scores = (jnp.einsum("bhq,btq->bht", q_eff.astype(jnp.float32), ckv_c)
+              + jnp.einsum("bhk,btk->bht",
+                           q_rope[:, 0].astype(jnp.float32), kr_c)) * scale
+    t = ckv_c.shape[1]
+    valid = jnp.arange(t)[None, None, :] < (lens + 1)[:, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bht,btq->bhq", probs, ckv_c)          # latent context
+    out = jnp.einsum("bhq,qhk->bhk", ctx.astype(x.dtype), params["v_up"])
+    y = jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None]
+    return y, new_cache

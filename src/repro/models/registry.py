@@ -1,0 +1,239 @@
+"""Model classes and the ``--arch`` registry.
+
+``TransformerLM`` covers dense / MoE / VLM / hybrid / xLSTM (any period
+layout); ``EncDecLM`` covers seamless-m4t (audio encoder stub + causal
+decoder with cross-attention). Both expose the same surface:
+
+    template() / cache_template()      -> P-trees (init or abstract)
+    forward(params, batch)             -> (logits, aux)
+    loss(params, batch)                -> scalar
+    prefill(params, batch, cache)      -> (last_logits, cache)
+    decode_step(params, tokens, cache) -> (logits, cache)
+
+``batch`` dict keys: tokens, labels, and for stub modalities
+vision_embeds / audio_embeds (precomputed frontend outputs, per spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import P, stack_template, tree_map
+from .layers import (embed, embedding_template, layernorm,
+                     layernorm_template, rmsnorm, rmsnorm_template,
+                     softmax_xent, unembed, unembed_template)
+from .transformer import (LayerSpec, block_cache_template, block_template,
+                          layout, stack_apply, stack_decode)
+
+
+def _norm_pair(cfg):
+    if cfg.norm == "layernorm":
+        return layernorm_template(cfg.d_model), layernorm
+    return rmsnorm_template(cfg.d_model), rmsnorm
+
+
+def _stacked_block_template(cfg, period, n_periods, ep_pad):
+    per = {f"p{i}": block_template(cfg, spec, ep_pad)
+           for i, spec in enumerate(period)}
+    return stack_template(per, n_periods)
+
+
+def _stacked_cache_template(cfg, period, n_periods, batch, max_len,
+                            kv_source_len, dtype=None):
+    per = {f"p{i}": block_cache_template(cfg, spec, batch, max_len,
+                                         kv_source_len, dtype)
+           for i, spec in enumerate(period)}
+    return stack_template(per, n_periods)
+
+
+class TransformerLM:
+    """Decoder-only family (dense / moe / vlm / hybrid / ssm)."""
+
+    def __init__(self, cfg: ModelConfig, impl: str = "ref",
+                 ssm_impl: str = "chunked", mlstm_impl: str = "ref",
+                 ep_degree: int = 1):
+        self.cfg = cfg
+        self.impl = impl
+        self.ssm_impl = ssm_impl
+        self.mlstm_impl = mlstm_impl
+        self.ep_pad = cfg.padded_experts(ep_degree) or None
+        self.period, self.n_periods = layout(cfg)
+
+    # -- templates ---------------------------------------------------------
+    def template(self):
+        cfg = self.cfg
+        t = {"embed": embedding_template(cfg.padded_vocab, cfg.d_model),
+             "blocks": _stacked_block_template(cfg, self.period,
+                                               self.n_periods, self.ep_pad),
+             "final_norm": _norm_pair(cfg)[0]}
+        if not cfg.tie_embeddings:
+            t["unembed"] = unembed_template(cfg.d_model, cfg.padded_vocab)
+        return t
+
+    def cache_template(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        kv_src = cfg.n_vision_tokens if cfg.family == "vlm" else max_len
+        return {
+            "blocks": _stacked_cache_template(cfg, self.period,
+                                              self.n_periods, batch,
+                                              max_len, kv_src, dtype),
+            "len": P((batch,), ("batch",), init="zeros", dtype=jnp.int32),
+        }
+
+    # -- forward paths -----------------------------------------------------
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = _norm_pair(cfg)[1](params["final_norm"], x)
+        if cfg.tie_embeddings:
+            return jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+        return unembed(params["unembed"], x)
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+        kv = batch.get("vision_embeds")
+        if kv is not None:
+            kv = kv.astype(cfg.dtype)
+        x, _, aux = stack_apply(params["blocks"], x, cfg, self.period,
+                                causal=True, kv_embeds=kv, impl=self.impl,
+                                ssm_impl=self.ssm_impl,
+                                mlstm_impl=self.mlstm_impl)
+        return self._logits(params, x), aux
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        ce = softmax_xent(logits, batch["labels"], self.cfg.vocab)
+        return ce + 0.01 * aux
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens).astype(cfg.dtype)
+        kv = batch.get("vision_embeds")
+        if kv is not None:
+            kv = kv.astype(cfg.dtype)
+        x, blocks_cache, _ = stack_apply(
+            params["blocks"], x, cfg, self.period, causal=True,
+            kv_embeds=kv, impl=self.impl, ssm_impl=self.ssm_impl,
+            mlstm_impl=self.mlstm_impl, caches=cache["blocks"])
+        new_cache = {"blocks": blocks_cache,
+                     "len": jnp.full_like(cache["len"], tokens.shape[1])}
+        return self._logits(params, x[:, -1:]), new_cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens: [b] -> (logits [b, vocab], cache)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None]).astype(cfg.dtype)
+        lens = cache["len"]
+        x, blocks_cache = stack_decode(params["blocks"], x, cfg,
+                                       self.period, cache["blocks"], lens,
+                                       impl=self.impl)
+        new_cache = {"blocks": blocks_cache, "len": lens + 1}
+        return self._logits(params, x)[:, 0], new_cache
+
+    # -- bookkeeping ---------------------------------------------------
+    def param_count(self) -> int:
+        from .common import count_params
+        return count_params(self.template())
+
+
+class EncDecLM:
+    """Encoder-decoder (seamless-m4t): audio-embed encoder stub input +
+    causal text decoder with cross-attention."""
+
+    def __init__(self, cfg: ModelConfig, impl: str = "ref"):
+        self.cfg = cfg
+        self.impl = impl
+        self.enc_period, self.enc_n = layout(cfg, role="encoder")
+        self.dec_period, self.dec_n = layout(cfg, role="decoder")
+
+    def template(self):
+        cfg = self.cfg
+        return {
+            "enc_in": {"w": P((cfg.d_model, cfg.d_model),
+                              ("embed", "embed"))},
+            "enc_blocks": _stacked_block_template(cfg, self.enc_period,
+                                                  self.enc_n, None),
+            "enc_norm": _norm_pair(cfg)[0],
+            "embed": embedding_template(cfg.padded_vocab, cfg.d_model),
+            "dec_blocks": _stacked_block_template(cfg, self.dec_period,
+                                                  self.dec_n, None),
+            "final_norm": _norm_pair(cfg)[0],
+            "unembed": unembed_template(cfg.d_model, cfg.padded_vocab),
+        }
+
+    def cache_template(self, batch: int, max_len: int, dtype=None,
+                       enc_len: Optional[int] = None):
+        cfg = self.cfg
+        enc_len = enc_len or max_len
+        return {
+            "blocks": _stacked_cache_template(cfg, self.dec_period,
+                                              self.dec_n, batch, max_len,
+                                              enc_len, dtype),
+            "len": P((batch,), ("batch",), init="zeros", dtype=jnp.int32),
+        }
+
+    def encode(self, params, audio_embeds):
+        cfg = self.cfg
+        x = jnp.einsum("bsd,de->bse", audio_embeds.astype(cfg.dtype),
+                       params["enc_in"]["w"])
+        x, _, _ = stack_apply(params["enc_blocks"], x, cfg,
+                              self.enc_period, causal=False,
+                              impl=self.impl)
+        return _norm_pair(cfg)[1](params["enc_norm"], x)
+
+    def _logits(self, params, x):
+        x = _norm_pair(self.cfg)[1](params["final_norm"], x)
+        return unembed(params["unembed"], x)
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc = self.encode(params, batch["audio_embeds"])
+        x = embed(params["embed"], batch["tokens"]).astype(cfg.dtype)
+        x, _, aux = stack_apply(params["dec_blocks"], x, cfg,
+                                self.dec_period, causal=True, kv_embeds=enc,
+                                impl=self.impl)
+        return self._logits(params, x), aux
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        return softmax_xent(logits, batch["labels"], self.cfg.vocab) \
+            + 0.01 * aux
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        enc = self.encode(params, batch["audio_embeds"])
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens).astype(cfg.dtype)
+        x, blocks_cache, _ = stack_apply(
+            params["dec_blocks"], x, cfg, self.dec_period, causal=True,
+            kv_embeds=enc, impl=self.impl, caches=cache["blocks"])
+        new_cache = {"blocks": blocks_cache,
+                     "len": jnp.full_like(cache["len"], tokens.shape[1])}
+        return self._logits(params, x[:, -1:]), new_cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None]).astype(cfg.dtype)
+        lens = cache["len"]
+        x, blocks_cache = stack_decode(params["dec_blocks"], x, cfg,
+                                       self.dec_period, cache["blocks"],
+                                       lens, impl=self.impl)
+        new_cache = {"blocks": blocks_cache, "len": lens + 1}
+        return self._logits(params, x)[:, 0], new_cache
+
+    def param_count(self) -> int:
+        from .common import count_params
+        return count_params(self.template())
+
+
+def build(cfg: ModelConfig, impl: str = "ref", ssm_impl: str = "chunked",
+          mlstm_impl: str = "ref", ep_degree: int = 1):
+    if cfg.enc_layers:
+        return EncDecLM(cfg, impl=impl)
+    return TransformerLM(cfg, impl=impl, ssm_impl=ssm_impl,
+                         mlstm_impl=mlstm_impl, ep_degree=ep_degree)

@@ -1,0 +1,100 @@
+"""Mamba (S6) block: template, full-sequence apply, and decode step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.selective_scan import selective_scan, selective_step
+from ..sharding import ctx
+from .common import (CONV, EMBED, LORA, SSM_INNER, SSM_STATE, P)
+
+
+def mamba_template(cfg):
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    dtr = cfg.resolved_dt_rank
+    n = cfg.ssm_state
+    return {
+        "in_proj": P((d, 2 * inner), (EMBED, SSM_INNER)),
+        "conv_w": P((cfg.ssm_conv, inner), (CONV, SSM_INNER),
+                    init="normal", scale=0.1),
+        "conv_b": P((inner,), (SSM_INNER,), init="zeros"),
+        "x_proj": P((inner, dtr + 2 * n), (SSM_INNER, LORA)),
+        "dt_proj": P((dtr, inner), (LORA, SSM_INNER)),
+        "dt_bias": P((inner,), (SSM_INNER,), init="s4d_dt"),
+        "A_log": P((inner, n), (SSM_INNER, SSM_STATE), init="s4d"),
+        "D": P((inner,), (SSM_INNER,), init="ones"),
+        "out_proj": P((inner, d), (SSM_INNER, EMBED)),
+    }
+
+
+def mamba_state_template(cfg, batch: int, dtype=None):
+    inner = cfg.ssm_expand * cfg.d_model
+    return {
+        "h": P((batch, inner, cfg.ssm_state),
+               ("batch", SSM_INNER, SSM_STATE), init="zeros",
+               dtype=jnp.float32),
+        "conv": P((batch, cfg.ssm_conv - 1, inner),
+                  ("batch", CONV, SSM_INNER), init="zeros", dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv via shifted adds. x: [b, s, inner];
+    w: [conv, inner]."""
+    conv = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (conv - 1, 0), (0, 0)))
+    out = sum(pad[:, j:j + x.shape[1], :] * w[j] for j in range(conv))
+    return out + b
+
+
+def _dt_bc(params, xc, cfg):
+    dtr, n = cfg.resolved_dt_rank, cfg.ssm_state
+    dbc = jnp.einsum("...i,ir->...r", xc, params["x_proj"])
+    dt_low, B, C = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,ri->...i", dt_low, params["dt_proj"]).astype(
+            jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    return dt.astype(xc.dtype), B, C
+
+
+def mamba_apply(params, x, cfg, *, state=None, impl="chunked"):
+    """Full-sequence apply. Returns y, or (y, new_state) when ``state``
+    is given (prefill)."""
+    xz = jnp.einsum("bsd,di->bsi", x, params["in_proj"])
+    xz = ctx.constrain(xz, ("batch", None, "ssm_inner"))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(x_in, params["conv_w"],
+                                  params["conv_b"]).astype(jnp.float32)
+                     ).astype(x.dtype)
+    dt, B, C = _dt_bc(params, xc, cfg)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    h0 = None if state is None else state["h"]
+    y, h_last = selective_scan(xc, dt, A, B, C, params["D"], h0=h0,
+                               impl=impl)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    if state is not None:
+        new_state = {"h": h_last,
+                     "conv": x_in[:, -(cfg.ssm_conv - 1):, :]}
+        return out, new_state
+    return out
+
+
+def mamba_decode(params, x, cfg, state):
+    """Single-token step. x: [b, 1, d]; state: mamba_state_template tree."""
+    xz = jnp.einsum("bsd,di->bsi", x, params["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)                     # [b, 1, inner]
+    window = jnp.concatenate([state["conv"],
+                              x_in.astype(state["conv"].dtype)], axis=1)
+    w = params["conv_w"]
+    xc = sum(window[:, j, :] * w[j] for j in range(cfg.ssm_conv)) \
+        + params["conv_b"]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)   # [b, inner]
+    dt, B, C = _dt_bc(params, xc, cfg)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, h_new = selective_step(xc, dt, A, B, C, params["D"], state["h"])
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])[:, None]
+    new_state = {"h": h_new, "conv": window[:, 1:, :]}
+    return out, new_state

@@ -1,0 +1,179 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential — documented in DESIGN.md: no Pallas
+kernel is warranted, the recurrence has no MXU workload and its FLOPs are
+negligible vs the mLSTM layers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.mlstm import mlstm, mlstm_step
+from .common import (EMBED, HEADS, HEAD_DIM, MLP, SSM_INNER, P)
+from .layers import rmsnorm, rmsnorm_template
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (projection factor 2, as xlstm-1.3b with d_ff = 0)
+# ---------------------------------------------------------------------------
+
+def mlstm_template(cfg):
+    d = cfg.d_model
+    inner = 2 * d
+    h = cfg.n_heads
+    hd = inner // h
+    return {
+        "up_proj": P((d, 2 * inner), (EMBED, SSM_INNER)),
+        # Block-diagonal per-head q/k/v (the official mLSTM layout — a full
+        # inner x inner projection would triple the parameter budget).
+        "wq": P((h, hd, hd), (HEADS, None, HEAD_DIM)),
+        "wk": P((h, hd, hd), (HEADS, None, HEAD_DIM)),
+        "wv": P((h, hd, hd), (HEADS, None, HEAD_DIM)),
+        "w_if": P((inner, 2, h), (SSM_INNER, None, HEADS), init="normal",
+                  scale=0.02),
+        "b_if": P((2, h), (None, HEADS), init="zeros"),
+        "out_norm": rmsnorm_template(inner),
+        "down_proj": P((inner, d), (SSM_INNER, EMBED)),
+    }
+
+
+def mlstm_state_template(cfg, batch: int, dtype=None):
+    inner = 2 * cfg.d_model
+    h = cfg.n_heads
+    hd = inner // h
+    return {
+        "C": P((batch, h, hd, hd), ("batch", HEADS, HEAD_DIM, HEAD_DIM),
+               init="zeros", dtype=jnp.float32),
+        "n": P((batch, h, hd), ("batch", HEADS, HEAD_DIM), init="zeros",
+               dtype=jnp.float32),
+        "m": P((batch, h), ("batch", HEADS), init="zeros",
+               dtype=jnp.float32),
+    }
+
+
+def _mlstm_qkvif(params, xu):
+    b, s, inner = xu.shape
+    h = params["wq"].shape[0]
+    xh = xu.reshape(b, s, h, inner // h)
+    q = jnp.einsum("bshe,hek->bshk", xh, params["wq"])
+    k = jnp.einsum("bshe,hek->bshk", xh, params["wk"])
+    v = jnp.einsum("bshe,hek->bshk", xh, params["wv"])
+    gates = jnp.einsum("bsi,igh->bsgh", xu, params["w_if"]) + params["b_if"]
+    return q, k, v, gates[:, :, 0, :], gates[:, :, 1, :] + 3.0
+
+
+def mlstm_apply(params, x, cfg, *, impl="ref"):
+    """Full-sequence mLSTM block. x: [b, s, d]."""
+    b, s, d = x.shape
+    xz = jnp.einsum("bsd,di->bsi", x, params["up_proj"])
+    xu, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, ig, fg = _mlstm_qkvif(params, xu)
+    h = mlstm(q, k, v, ig, fg, impl=impl)                   # [b,s,h,hd]
+    h = h.reshape(b, s, -1)
+    h = rmsnorm(params["out_norm"], h)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", h, params["down_proj"])
+
+
+def mlstm_decode(params, x, cfg, state):
+    """Single-token step. x: [b, 1, d]."""
+    b = x.shape[0]
+    xz = jnp.einsum("bsd,di->bsi", x, params["up_proj"])
+    xu, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, ig, fg = _mlstm_qkvif(params, xu)
+    h, (C, n, m) = mlstm_step(q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0],
+                              state["C"], state["n"], state["m"])
+    h = h.reshape(b, 1, -1)
+    h = rmsnorm(params["out_norm"], h)
+    h = h * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", h, params["down_proj"])
+    return out, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, exp gating, per-head recurrent weights)
+# ---------------------------------------------------------------------------
+
+def slstm_template(cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ff = max((4 * d) // 3 // 128 * 128, 128)
+    return {
+        # 4 gates (z, i, f, o) from input and recurrent h (block-diagonal).
+        "w_x": P((d, 4, h, hd), (EMBED, None, HEADS, HEAD_DIM)),
+        "r_h": P((h, hd, 4, hd), (HEADS, HEAD_DIM, None, HEAD_DIM),
+                 init="normal", scale=0.02),
+        "bias": P((4, h, hd), (None, HEADS, HEAD_DIM), init="zeros"),
+        "ffn_up": P((d, ff), (EMBED, MLP)),
+        "ffn_down": P((ff, d), (MLP, EMBED)),
+    }
+
+
+def slstm_state_template(cfg, batch: int, dtype=None):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    z = lambda: P((batch, h, hd), ("batch", HEADS, HEAD_DIM), init="zeros",
+                  dtype=jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": P((batch, h), ("batch", HEADS), init="zeros",
+                   dtype=jnp.float32)}
+
+
+def _slstm_cell(params, xt, state):
+    """One sLSTM step. xt: [b, 4, h, hd] pre-computed input projection."""
+    c, n, hh, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhd,hdge->bghe", hh.astype(xt.dtype), params["r_h"])
+    g = (xt + rec + params["bias"]).astype(jnp.float32)
+    z_t = jnp.tanh(g[:, 0])
+    i_t = g[:, 1]
+    f_t = g[:, 2] + 3.0
+    o_t = jax.nn.sigmoid(g[:, 3])
+    # Stabilized exponential gating (per head: shared max state m).
+    i_max = jnp.max(i_t, axis=-1)
+    f_max = jnp.max(f_t, axis=-1)
+    m_new = jnp.maximum(f_max + m, i_max)
+    ip = jnp.exp(i_t - m_new[..., None])
+    fp = jnp.exp(f_t + (m - m_new)[..., None])
+    c_new = fp * c + ip * z_t
+    n_new = fp * n + ip
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(params, x, cfg, *, state=None):
+    """Full-sequence sLSTM (lax.scan over time). x: [b, s, d]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    xg = jnp.einsum("bsd,dghe->bsghe", x, params["w_x"])    # [b,s,4,h,hd]
+    st = state
+    if st is None:
+        hd = d // h
+        zero = jnp.zeros((b, h, hd), jnp.float32)
+        st = {"c": zero, "n": zero, "h": zero,
+              "m": jnp.zeros((b, h), jnp.float32)}
+
+    def step(carry, xt):
+        h_out, new = _slstm_cell(params, xt, carry)
+        return new, h_out
+
+    new_state, hs = jax.lax.scan(step, st, xg.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    y = jnp.einsum("bsd,df->bsf", y, params["ffn_up"])
+    y = jax.nn.gelu(y.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsf,fd->bsd", y, params["ffn_down"])
+    if state is not None:
+        return y, new_state
+    return y
+
+
+def slstm_decode(params, x, cfg, state):
+    """Single-token step. x: [b, 1, d]."""
+    b, _, d = x.shape
+    xg = jnp.einsum("bsd,dghe->bsghe", x, params["w_x"])[:, 0]
+    h_out, new_state = _slstm_cell(params, xg, state)
+    y = h_out.reshape(b, 1, d).astype(x.dtype)
+    y = jnp.einsum("bsd,df->bsf", y, params["ffn_up"])
+    y = jax.nn.gelu(y.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsf,fd->bsd", y, params["ffn_down"])
+    return y, new_state

@@ -1,0 +1,6 @@
+from .engine import Engine, Result
+from .scheduler import FCFS, LCFSP, AoPITracker, Frame, StreamQueue
+from .service import AnalyticsService, EpochReport
+
+__all__ = ["Engine", "Result", "FCFS", "LCFSP", "AoPITracker", "Frame",
+           "StreamQueue", "AnalyticsService", "EpochReport"]

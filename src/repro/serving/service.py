@@ -1,0 +1,135 @@
+"""The AoPI-tracked analytics service: LBCD in the serving control plane.
+
+Per controller epoch (= the paper's 5-minute slot):
+  1. LBCD solves (P2) from live telemetry -> per-stream (model candidate,
+     fidelity/resolution, FCFS/LCFSP policy, island assignment, ingest +
+     compute-share allocation);
+  2. the data plane runs: frames arrive per the transmission model, are
+     queued per-policy, and processed with the allocated compute rate;
+  3. measured AoPI (exact age integration) and accuracy feed the virtual
+     queue and the next epoch's profiles.
+
+Two data planes ship:
+  * ``mode="mm1"``  — event-driven M/M/1 execution (the paper's model;
+    validates Theorems 1-2 at scale, used by benchmarks);
+  * ``mode="engine"`` — a real continuous-batching Engine on a small model
+    (examples/serve_e2e.py), with LCFSP preemption at step boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core import queues
+from ..core.lbcd import LBCDController
+from .scheduler import AoPITracker, Frame, StreamQueue
+
+
+@dataclasses.dataclass
+class EpochReport:
+    t: int
+    predicted_aopi: float       # closed-form, from the controller
+    measured_aopi: float        # data-plane measurement
+    accuracy: float
+    q: float
+    per_stream_measured: np.ndarray
+    per_stream_predicted: np.ndarray
+
+
+class AnalyticsService:
+    def __init__(self, controller: LBCDController, *, mode: str = "mm1",
+                 epoch_duration: float = 300.0, engine=None,
+                 frames_cap: int = 200_000, seed: int = 0):
+        self.controller = controller
+        self.mode = mode
+        self.engine = engine
+        self.epoch_duration = epoch_duration
+        self.frames_cap = frames_cap
+        self.seed = seed
+        self.reports: list = []
+
+    def run_epoch(self, t: int) -> EpochReport:
+        rec = self.controller.step(t)
+        dec = rec.decision
+        n = len(dec.lam)
+        measured = np.zeros(n)
+        if self.mode == "mm1":
+            for i in range(n):
+                lam = max(float(dec.lam[i]), 1e-6)
+                n_frames = int(min(lam * self.epoch_duration,
+                                   self.frames_cap))
+                n_frames = max(n_frames, 200)
+                sim = queues.simulate(
+                    lam, max(float(dec.mu[i]), 1e-6),
+                    float(np.clip(dec.acc[i], 1e-3, 1.0)),
+                    int(dec.pol[i]), n_frames=n_frames,
+                    seed=self.seed + 7919 * t + i)
+                measured[i] = sim.mean_aopi
+        else:
+            measured = self._run_engine_epoch(rec)
+        rep = EpochReport(
+            t=t, predicted_aopi=float(np.mean(dec.aopi)),
+            measured_aopi=float(np.mean(measured)),
+            accuracy=float(np.mean(dec.acc)), q=rec.q,
+            per_stream_measured=measured,
+            per_stream_predicted=np.asarray(dec.aopi))
+        self.reports.append(rep)
+        return rep
+
+    # ------------------------------------------------------------------
+    def _run_engine_epoch(self, rec) -> np.ndarray:
+        """Real-engine data plane (small scale; examples/serve_e2e.py)."""
+        assert self.engine is not None
+        dec = rec.decision
+        n = len(dec.lam)
+        rng = np.random.default_rng(self.seed + 7919 * rec.t)
+        tracker = AoPITracker(n)
+        qs = [StreamQueue(i, int(dec.pol[i])) for i in range(n)]
+        # Frame arrival times per stream (exponential inter-arrivals).
+        events = []
+        for i in range(n):
+            lam = max(float(dec.lam[i]), 1e-6)
+            k = max(int(lam * self.epoch_duration), 1)
+            gaps = rng.exponential(1.0 / lam, size=k)
+            ts = np.cumsum(gaps)
+            gen = np.concatenate(([0.0], ts))[:-1]
+            for g_t, a_t in zip(gen, ts):
+                if a_t < self.epoch_duration:
+                    events.append(Frame(i, g_t, a_t))
+        events.sort(key=lambda f: f.arrive_time)
+        step_time = self.epoch_duration / max(
+            len(events) * self.engine.decode_tokens, 1)
+        now, ei = 0.0, 0
+        while now < self.epoch_duration:
+            while ei < len(events) and events[ei].arrive_time <= now:
+                f = events[ei]
+                if qs[f.stream_id].on_arrival(f):
+                    self.engine.preempt_stream(f.stream_id)
+                ei += 1
+            for q in qs:
+                while len(q) and self.engine.free_lanes():
+                    f = q.pop()
+                    toks = rng.integers(
+                        2, 200, size=f.tokens).astype(np.int32)
+                    self.engine.admit(f, toks)
+            for res in self.engine.decode_tick():
+                p = float(np.clip(dec.acc[res.stream_id], 1e-3, 1.0))
+                acc = bool(rng.random() < p)
+                tracker.on_result(res.stream_id, res.frame.gen_time, acc,
+                                  now)
+            now += step_time
+        return np.array([tracker.mean_aopi(i, self.epoch_duration)
+                         for i in range(n)])
+
+    def run(self, n_epochs: int):
+        return [self.run_epoch(t) for t in range(n_epochs)]
+
+    @property
+    def mean_measured(self) -> float:
+        return float(np.mean([r.measured_aopi for r in self.reports]))
+
+    @property
+    def mean_predicted(self) -> float:
+        return float(np.mean([r.predicted_aopi for r in self.reports]))

@@ -1,0 +1,5 @@
+from .rules import (array_sharding, batch_shardings, data_axes, ep_degree,
+                    make_rules, named)
+
+__all__ = ["array_sharding", "batch_shardings", "data_axes", "ep_degree",
+           "make_rules", "named"]

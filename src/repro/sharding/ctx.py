@@ -1,0 +1,47 @@
+"""Activation-sharding hints, threaded to model code via a context var.
+
+Model code calls ``constrain(x, ("batch", None, "heads", None))`` at
+partition-critical points (post-projection QKV, scores, MoE dispatch, ...).
+Outside a plan context (CPU smoke tests, kernels) it is a no-op; inside
+``activation_rules(rules)`` (launch/specs.py wraps every step function) it
+emits with_sharding_constraint with the mesh mapping resolved by the same
+divisibility-guarded rules as the parameters — this is what keeps GSPMD
+from replicating attention when logical dims do not propagate through
+reshapes.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec
+
+from .spec import spec_dims
+
+_RULES = contextvars.ContextVar("activation_rules", default=None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: dict):
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def current() -> dict | None:
+    return _RULES.get()
+
+
+def constrain(x, axes):
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = PartitionSpec(*spec_dims(x.shape, axes, rules))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except RuntimeError:
+        # No mesh in context (rules active outside a launcher) — no-op.
+        return x

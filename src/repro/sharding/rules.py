@@ -1,0 +1,101 @@
+"""Logical-axis -> mesh-axis rules (the per-arch sharding policy).
+
+Mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi-pod.
+
+  DP/FSDP : batch over (pod, data); weight EMBED dim over data (ZeRO-3
+            style — GSPMD inserts the all-gathers) when cfg.fsdp.
+  TP      : heads / mlp / expert_mlp / vocab / ssm_inner over model.
+  EP      : experts over data (padded to the EP degree).
+  SP      : decode KV-cache sequence over model when kv_heads cannot be
+            sharded 16-way (kv_heads < 16 archs); partial-softmax reductions
+            are inserted by GSPMD (flash-decode-style split-KV).
+
+Divisibility and duplicate-mesh-axis conflicts are resolved per-leaf by
+models.common.spec_dims (first dim wins); anything unresolvable falls back
+to replication — visible in the roofline, which is the point.
+"""
+from __future__ import annotations
+
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs.base import ModelConfig
+from .spec import spec_dims
+
+
+def data_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def ep_degree(mesh) -> int:
+    return mesh.shape["data"]
+
+
+def make_rules(cfg: ModelConfig, mesh, *, shard_cache_seq=None,
+               overrides: dict | None = None) -> dict:
+    sizes = dict(mesh.shape)
+    tp = sizes.get("model", 1)
+    dp = data_axes(mesh)
+    kv_shardable = cfg.n_kv_heads % tp == 0
+    if shard_cache_seq is None:
+        shard_cache_seq = not kv_shardable
+    rules = {
+        "_mesh_sizes": sizes,
+        # Real Mesh object (when available) — used by the explicit
+        # shard_map paths (MoE all-to-all). Fake meshes (tests) skip it.
+        "_mesh": mesh if hasattr(mesh, "devices") else None,
+        "batch": dp,
+        "seq": None,
+        "embed": "data" if cfg.fsdp else None,
+        "heads": "model",
+        "kv_heads": "model" if kv_shardable else None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "data",
+        "expert_mlp": "model",
+        "cache_seq": "model" if shard_cache_seq else None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "conv": None,
+        "lora": None,
+        "layers": None,
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def named(mesh, template_tree, rules):
+    """P-template tree -> NamedSharding tree."""
+    from ..models.common import pspec_tree, tree_map
+    specs = pspec_tree(template_tree, rules)
+    import jax
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def array_sharding(mesh, shape, axes, rules) -> NamedSharding:
+    """NamedSharding for a plain array described by logical axes."""
+    return NamedSharding(mesh, PartitionSpec(*spec_dims(shape, axes, rules)))
+
+
+def batch_shardings(cfg: ModelConfig, mesh, rules, shape, kind: str):
+    """Shardings for the input batch dict of a given shape cell."""
+    gb, s = shape.global_batch, shape.seq_len
+    out = {}
+    if kind == "decode":
+        out["tokens"] = array_sharding(mesh, (gb,), ("batch",), rules)
+    else:
+        out["tokens"] = array_sharding(mesh, (gb, s), ("batch", "seq"),
+                                       rules)
+        out["labels"] = out["tokens"]
+    if cfg.family == "vlm" and kind != "decode":
+        out["vision_embeds"] = array_sharding(
+            mesh, (gb, cfg.n_vision_tokens, cfg.d_model),
+            ("batch", "seq", "embed_act"), rules)
+    if cfg.family == "audio" and kind != "decode":
+        out["audio_embeds"] = array_sharding(
+            mesh, (gb, s, cfg.d_model), ("batch", "seq", "embed_act"),
+            rules)
+    if kind == "decode":
+        out.pop("labels", None)
+    return out

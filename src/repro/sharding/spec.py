@@ -1,0 +1,29 @@
+"""Dependency-free logical-axis -> PartitionSpec dim resolution."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def spec_dims(shape, axes, rules: dict):
+    """Per-dim mesh assignment with divisibility + no-duplicate guards.
+
+    A mesh axis may appear at most once in a PartitionSpec; when two logical
+    dims map to the same mesh axis the earlier dim wins (templates order
+    EXPERTS before EMBED etc. so the intended winner comes first).
+    """
+    mesh_sizes = rules.get("_mesh_sizes", {})
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        maxes = (m,) if isinstance(m, str) else tuple(m)
+        extent = int(np.prod([mesh_sizes.get(a, 1) for a in maxes]))
+        if extent <= 1 or dim % extent != 0 or any(a in used for a in maxes):
+            out.append(None)
+            continue
+        used.update(maxes)
+        out.append(m)
+    return out

@@ -1,0 +1,6 @@
+from . import checkpoint, compression, failure, optimizer, train_step
+from .optimizer import AdamWConfig
+from .train_step import make_train_step
+
+__all__ = ["checkpoint", "compression", "failure", "optimizer",
+           "train_step", "AdamWConfig", "make_train_step"]

@@ -1,0 +1,75 @@
+"""Gradient compression (int8 error-bounded, blockwise-scaled).
+
+Two entry points:
+
+  * ``compress_grads``   — round-trip blockwise int8 quantization applied to
+    the grad pytree inside the (GSPMD) train step. It models the numerics of
+    an int8 wire format; under GSPMD the data-parallel reduction itself is
+    inserted by the compiler, so the bandwidth saving is accounted in the
+    roofline's collective term (bytes / 4 vs f32) rather than by a literal
+    int8 collective in the HLO.
+
+  * ``compressed_psum``  — the explicit shard_map building block: syncs a
+    shared blockwise scale (psum-max), quantizes to int8, accumulates in
+    int32, dequantizes. This is the path a NIC/ICI-bound deployment wires
+    into an explicit-collective train step; tests/test_training.py checks
+    its error bound vs a plain psum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _blockwise(x, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), pad
+
+
+def quantize(x, block: int = 256):
+    """x -> (int8 codes, f32 per-block scales, pad)."""
+    blocks, pad = _blockwise(x.astype(jnp.float32), block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def dequantize(q, scale, pad, shape):
+    x = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        x = x[:-pad]
+    return x.reshape(shape)
+
+
+def roundtrip(x, block: int = 256):
+    q, s, pad = quantize(x, block)
+    return dequantize(q, s, pad, x.shape)
+
+
+def compress_grads(grads, dp_axes, block: int = 256):
+    """Round-trip int8 quantization over the grad pytree."""
+    return jax.tree.map(lambda g: roundtrip(g, block), grads)
+
+
+def compressed_psum(x, axis_name: str, block: int = 256):
+    """Explicit compressed all-reduce for shard_map code paths.
+
+    Wire format: one psum-max for the shared scales (f32, 1/block of the
+    payload) + one int32-accumulated psum of int8 codes. Returns the mean
+    across the axis.
+    """
+    blocks, pad = _blockwise(x.astype(jnp.float32), block)
+    local_max = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    gmax = jax.lax.pmax(local_max, axis_name)
+    scale = jnp.maximum(gmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    mean = total.astype(jnp.float32) * scale / n.astype(jnp.float32)
+    out = mean.reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(x.shape)

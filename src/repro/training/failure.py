@@ -1,0 +1,86 @@
+"""Fault tolerance: straggler detection + island failover.
+
+The paper's edge-server-selection subproblem doubles as the failover
+mechanism at pod scale (DESIGN.md §2): an island (model-parallel subgroup)
+that dies or degrades is an edge server whose capacity dropped to ~0, and
+LBCD's first-fit re-solve migrates its streams on the next controller epoch.
+
+``StragglerMonitor`` implements the step-time EWMA outlier detector used by
+the training loop: a chip/host whose step times exceed mean + k*sigma is
+flagged; the runbook response is (1) micro-rebalance (shrink its microbatch
+share), then (2) treat as failed (checkpoint-restore on the survivor mesh —
+repro.training.checkpoint restores across topologies).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Per-worker EWMA step-time tracker."""
+    n_workers: int
+    alpha: float = 0.1
+    k_sigma: float = 3.0
+    warmup: int = 8
+
+    def __post_init__(self):
+        self.mean = np.zeros(self.n_workers)
+        self.var = np.zeros(self.n_workers)
+        self.count = 0
+
+    def observe(self, step_times) -> np.ndarray:
+        """Record one step's per-worker times; returns bool straggler mask."""
+        t = np.asarray(step_times, np.float64)
+        if self.count == 0:
+            self.mean[:] = t
+        d = t - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        self.count += 1
+        if self.count < self.warmup:
+            return np.zeros(self.n_workers, bool)
+        pop_mean = self.mean.mean()
+        pop_std = max(np.sqrt(self.var.mean()), 1e-9)
+        return self.mean > pop_mean + self.k_sigma * pop_std
+
+    def rebalance_weights(self) -> np.ndarray:
+        """Microbatch share proportional to measured speed (1/EWMA)."""
+        inv = 1.0 / np.maximum(self.mean, 1e-9)
+        return inv / inv.sum()
+
+
+def fail_islands(budgets_b: np.ndarray, budgets_c: np.ndarray,
+                 dead: np.ndarray):
+    """Zero the capacities of dead islands (input to the LBCD re-solve)."""
+    b = np.asarray(budgets_b, np.float64).copy()
+    c = np.asarray(budgets_c, np.float64).copy()
+    b[dead] = 0.0
+    c[dead] = 0.0
+    return b, c
+
+
+def failover_assignment(controller, t: int, dead: np.ndarray):
+    """One controller epoch with dead islands masked out.
+
+    ``controller``: repro.core.lbcd.LBCDController. Streams on dead islands
+    are re-placed by the same first-fit machinery (Algorithm 2); returns the
+    new SlotRecord.
+    """
+    sys = controller.system
+    orig = sys.capacities
+
+    def masked(tt):
+        b, c = orig(tt)
+        return fail_islands(b, c, dead)
+
+    sys.capacities = masked
+    try:
+        rec = controller.step(t)
+    finally:
+        sys.capacities = orig
+    assert not np.asarray(dead)[rec.assign].any(), \
+        "failover left a stream on a dead island"
+    return rec

@@ -1,0 +1,99 @@
+"""The jitted train step: microbatch-accumulated grads + AdamW.
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches (remat
+happens inside the model's own per-period checkpointing); the f32 grad
+accumulator is sharded exactly like the params, so its HBM cost is
+4 bytes / param / chip-shard.
+
+Optional int8 error-feedback gradient compression wraps the DP all-reduce
+(repro.training.compression) — off by default, enabled per config for
+bandwidth-constrained interconnects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt_mod
+from .compression import compress_grads
+
+
+def split_microbatches(batch: dict, n: int):
+    """[gb, ...] -> [n, gb/n, ...] for every leaf."""
+    def sp(x):
+        gb = x.shape[0]
+        assert gb % n == 0, (gb, n)
+        return x.reshape(n, gb // n, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model, opt_cfg: opt_mod.AdamWConfig,
+                    n_microbatches: int = 1, compression: bool = False,
+                    dp_axes: Optional[tuple] = None,
+                    pre_constrain: Optional[callable] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Pure function of its inputs — jit it with shardings at the
+    launcher level (launch/train.py, launch/dryrun.py).
+
+    ``pre_constrain``: optional params->params resharding applied ONCE
+    before the microbatch scan. With FSDP weights this hoists the
+    all-gather out of the gradient-accumulation loop (otherwise GSPMD
+    re-gathers every microbatch — a ~n_microbatches x collective-bytes
+    waste, EXPERIMENTS.md §Perf cell A); the backward pass reshards
+    gradients back with a single reduce-scatter automatically.
+    """
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def compute_grads(params, batch):
+        if n_microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+            return loss, jax.tree.map(lambda g: g.astype(jnp.float32),
+                                      grads)
+        mbs = split_microbatches(batch, n_microbatches)
+        acc0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            loss_acc, gacc = carry
+            loss, grads = grad_fn(params, mb)
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            return (loss_acc + loss, gacc), None
+
+        if n_microbatches <= 2:
+            # Unrolled (straight-line HLO) — used by the dry-run's
+            # accounting probes so per-microbatch collectives are counted.
+            carry = (jnp.zeros(()), acc0)
+            for i in range(n_microbatches):
+                carry, _ = body(carry, jax.tree.map(lambda t: t[i], mbs))
+            loss, gacc = carry
+        else:
+            (loss, gacc), _ = jax.lax.scan(body, (jnp.zeros(()), acc0),
+                                           mbs)
+        inv = 1.0 / n_microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, gacc)
+
+    def train_step(params, opt_state, batch):
+        gparams = pre_constrain(params) if pre_constrain else params
+        loss, grads = compute_grads(gparams, batch)
+        if compression and dp_axes:
+            grads = compress_grads(grads, dp_axes)
+        params, opt_state, metrics = opt_mod.update(params, grads,
+                                                    opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+    return eval_step

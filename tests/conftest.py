@@ -1,0 +1,6 @@
+"""Test-wide config. NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; only launch/dryrun.py requests 512 fake
+devices (per its first two lines)."""
+import warnings
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)

@@ -1,0 +1,148 @@
+"""Theorems 1-3 vs the discrete-event oracles + structural corollaries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aopi, queues
+
+GRID = [
+    # (lam, mu, p)
+    (2.0, 10.0, 0.9), (5.0, 10.0, 0.8), (8.0, 10.0, 0.6),
+    (3.0, 4.0, 0.95), (1.0, 20.0, 0.3), (9.5, 10.0, 0.9),
+]
+
+
+@pytest.mark.parametrize("lam,mu,p", GRID)
+def test_theorem1_fcfs_matches_simulation(lam, mu, p):
+    th = float(aopi.aopi_fcfs(lam, mu, p))
+    # High load (rho -> 1) mixes slowly; use a longer run there.
+    n = 4_000_000 if lam / mu > 0.9 else 400_000
+    sim = queues.simulate_fcfs(lam, mu, p, n_frames=n, seed=1)
+    assert sim.mean_aopi == pytest.approx(th, rel=0.06)
+
+
+@pytest.mark.parametrize("lam,mu,p", GRID + [(15.0, 10.0, 0.8)])
+def test_theorem2_lcfsp_matches_simulation(lam, mu, p):
+    th = float(aopi.aopi_lcfsp(lam, mu, p))
+    sim = queues.simulate_lcfsp(lam, mu, p, n_frames=400_000, seed=2)
+    assert sim.mean_aopi == pytest.approx(th, rel=0.05)
+
+
+def test_fcfs_unstable_region_is_inf():
+    assert np.isinf(float(aopi.aopi_fcfs(10.0, 10.0, 0.9)))
+    assert np.isinf(float(aopi.aopi_fcfs(12.0, 10.0, 0.9)))
+
+
+def test_corollary_41_convex_interior_minimum():
+    """A_F first decreases then increases in lam (convex)."""
+    mu, p = 10.0, 0.8
+    lam = np.linspace(0.1, 9.9, 300)
+    a = np.asarray(aopi.aopi_fcfs(lam, mu, p))
+    d2 = np.diff(a, 2)
+    assert (d2 > -1e-5).all()                      # convex
+    i = a.argmin()
+    assert 0 < i < len(a) - 1                      # interior minimum
+    lam_star = float(aopi.argmin_lam_fcfs(mu, p))
+    assert abs(lam_star - lam[i]) < 0.1
+
+
+def test_lam_star_decreases_with_p():
+    """Optimal transmission rate decreases with accuracy (§IV-A)."""
+    mu = 10.0
+    stars = [float(aopi.argmin_lam_fcfs(mu, p))
+             for p in (0.2, 0.4, 0.6, 0.8, 0.99)]
+    assert all(a > b for a, b in zip(stars, stars[1:]))
+
+
+def test_corollary_42_decreasing_in_mu():
+    lam, p = 5.0, 0.8
+    mu = np.linspace(5.5, 50.0, 200)
+    a = np.asarray(aopi.aopi_fcfs(lam, mu, p))
+    assert (np.diff(a) < 0).all()
+    d2 = np.diff(a, 2)
+    assert (d2 > -1e-7).all()
+
+
+def test_theorem3_threshold_matches_crossover():
+    """Eq. 43: A_F >= A_L iff p >= threshold(rho)."""
+    mu = 10.0
+    for rho in (0.2, 0.5, 0.8, 0.95):
+        lam = rho * mu
+        thr = float(aopi.policy_threshold(rho))
+        for p in (thr - 0.05, thr + 0.05):
+            if not 0 < p <= 1:
+                continue
+            af = float(aopi.aopi_fcfs(lam, mu, p))
+            al = float(aopi.aopi_lcfsp(lam, mu, p))
+            if p > thr:
+                assert af >= al - 1e-6
+            else:
+                assert af <= al + 1e-6
+
+
+def test_optimal_policy_phase_diagram():
+    """Fig. 6: LCFSP wins at high load + high accuracy."""
+    mu = 10.0
+    assert int(aopi.optimal_policy(9.0, mu, 0.95)) == aopi.LCFSP
+    assert int(aopi.optimal_policy(2.0, mu, 0.1)) == aopi.FCFS
+
+
+def test_analytic_derivatives_match_autodiff():
+    lam, mu, p = 4.0, 9.0, 0.7
+    g = jax.grad(lambda x: aopi.aopi_fcfs(x, mu, p))(jnp.float32(lam))
+    assert float(g) == pytest.approx(
+        float(aopi.d_aopi_fcfs_dlam(lam, mu, p)), rel=1e-3)
+    g = jax.grad(lambda x: aopi.aopi_fcfs(lam, x, p))(jnp.float32(mu))
+    assert float(g) == pytest.approx(
+        float(aopi.d_aopi_fcfs_dmu(lam, mu, p)), rel=1e-3)
+    g = jax.grad(lambda x: aopi.aopi_lcfsp(x, mu, p))(jnp.float32(lam))
+    assert float(g) == pytest.approx(
+        float(aopi.d_aopi_lcfsp_dlam(lam, mu, p)), rel=1e-3)
+
+
+def test_min_rate_frontiers():
+    """Figs. 3/5: the minimum-rate frontier actually meets the target."""
+    target = 0.5
+    for pol in (aopi.FCFS, aopi.LCFSP):
+        mu, p = 20.0, 0.8
+        lam_min = float(aopi.min_lam_for_target(target, mu, p, pol))
+        a = float(aopi.aopi(lam_min, mu, p, pol))
+        assert a == pytest.approx(target, rel=1e-2)
+        lam = 6.0
+        mu_min = float(aopi.min_mu_for_target(target, lam, p, pol))
+        a = float(aopi.aopi(lam, mu_min, p, pol))
+        assert a == pytest.approx(target, rel=1e-2)
+
+
+def test_lcfsp_frontier_monotone():
+    """§IV-B: under LCFSP min-lam decreases with reserved mu."""
+    p, target = 0.8, 0.5
+    mus = np.array([5.0, 10.0, 20.0, 40.0])
+    lams = [float(aopi.min_lam_for_target(target, m, p, aopi.LCFSP))
+            for m in mus]
+    assert all(a >= b for a, b in zip(lams, lams[1:]))
+
+
+def test_fcfs_min_mu_nonmonotone_in_lam():
+    """Fig. 3b: FCFS min computation rate first falls then rises with the
+    reserved transmission rate (queueing kicks in)."""
+    p, target = 0.9, 0.5
+    lams = np.linspace(3.0, 30.0, 25)
+    mus = np.array([float(aopi.min_mu_for_target(target, l, p, aopi.FCFS))
+                    for l in lams])
+    i = mus.argmin()
+    assert 0 < i < len(mus) - 1
+
+
+def test_nonexponential_delays_keep_ranking():
+    """§VI-C1: with uniform (more even) delays the theory still ranks
+    configurations correctly even if absolute values drift."""
+    cases = [(5.0, 10.0, 0.9), (5.0, 10.0, 0.4), (2.0, 10.0, 0.7)]
+    th = [float(aopi.aopi_fcfs(*c)) for c in cases]
+    sim = [queues.simulate_fcfs(
+        lam, mu, p, n_frames=150_000, seed=3,
+        t_sampler=queues.uniform_sampler(1.0 / lam),
+        o_sampler=queues.uniform_sampler(1.0 / mu)).mean_aopi
+        for lam, mu, p in cases]
+    assert np.argsort(th).tolist() == np.argsort(sim).tolist()

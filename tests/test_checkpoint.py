@@ -1,0 +1,79 @@
+"""Checkpoint atomicity, integrity, and elastic resharding."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import checkpoint as ckpt
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (16, 8)),
+            "b": {"c": jax.random.normal(k2, (4,)),
+                  "step": jnp.asarray(3, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 7, tree)
+    restored, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_cleanup(tmp_path):
+    tree = _tree(jax.random.PRNGKey(1))
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, tree, keep=3)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(dirs) == 3
+
+
+def test_corruption_detected(tmp_path):
+    tree = _tree(jax.random.PRNGKey(2))
+    d = ckpt.save(str(tmp_path), 1, tree)
+    # flip a byte in one leaf
+    target = os.path.join(d, "leaf_00000.npy")
+    data = bytearray(open(target, "rb").read())
+    data[-1] ^= 0xFF
+    open(target, "wb").write(bytes(data))
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), tree)
+
+
+def test_orphan_tmp_dirs_cleaned(tmp_path):
+    tree = _tree(jax.random.PRNGKey(3))
+    orphan = tmp_path / "step_000000009.tmp-deadbeef"
+    orphan.mkdir()
+    ckpt.save(str(tmp_path), 1, tree)
+    assert not orphan.exists()
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_elastic_resharding(tmp_path):
+    """Save under one mesh, restore under a different one."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n = len(jax.devices())
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(4), (8 * n, 4))}
+    mesh1 = jax.make_mesh((n,), ("a",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    x = jax.device_put(tree["w"], NamedSharding(mesh1, P("a", None)))
+    ckpt.save(str(tmp_path), 1, {"w": x})
+    # "new topology": same devices, different mesh axis layout
+    mesh2 = jax.make_mesh((1, n), ("r", "c"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    sh2 = {"w": NamedSharding(mesh2, P(None, None))}
+    restored, _ = ckpt.restore(str(tmp_path), tree, shardings=sh2)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["w"].sharding == sh2["w"]
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path / "nope"), {"a": jnp.zeros(1)})

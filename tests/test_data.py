@@ -1,0 +1,48 @@
+"""Data pipeline: determinism, host sharding, modality stubs."""
+import numpy as np
+
+from repro.data import PipelineConfig, TokenPipeline, batch_for
+from repro import configs
+from repro.configs.base import SHAPES
+
+
+def test_deterministic_per_step():
+    p1 = TokenPipeline(PipelineConfig(1000, 64, 8, seed=3))
+    p2 = TokenPipeline(PipelineConfig(1000, 64, 8, seed=3))
+    b1, b2 = p1.batch(5), p2.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch(5)["tokens"],
+                              p1.batch(6)["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    p = TokenPipeline(PipelineConfig(1000, 64, 4))
+    b = p.batch(0)
+    assert b["tokens"].shape == (4, 64)
+    assert b["labels"].shape == (4, 64)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_tokens_in_vocab():
+    p = TokenPipeline(PipelineConfig(500, 32, 4))
+    b = p.batch(1)
+    assert b["tokens"].min() >= 1 and b["tokens"].max() < 500
+
+
+def test_host_sharding_partitions_batch():
+    cfgp = PipelineConfig(1000, 32, 8, seed=0)
+    h0 = TokenPipeline(cfgp, host_id=0, n_hosts=2).batch(2)
+    h1 = TokenPipeline(cfgp, host_id=1, n_hosts=2).batch(2)
+    assert h0["tokens"].shape == (4, 32)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_batch_for_modalities():
+    cfg = configs.get("llama-3.2-vision-11b").reduced()
+    b = batch_for(cfg, SHAPES["train_4k"], reduced_batch=2)
+    assert "vision_embeds" in b
+    assert b["vision_embeds"].shape == (2, cfg.n_vision_tokens,
+                                        cfg.d_model)
+    cfg = configs.get("seamless-m4t-large-v2").reduced()
+    b = batch_for(cfg, SHAPES["train_4k"], reduced_batch=2)
+    assert b["audio_embeds"].shape[0] == 2

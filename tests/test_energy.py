@@ -1,0 +1,52 @@
+"""Energy-aware LBCD (the paper's §VII future-work item)."""
+import numpy as np
+import pytest
+
+from repro.core import profiles
+from repro.core.energy import EnergyAwareLBCD, EnergyModel
+from repro.core.lbcd import LBCDController
+
+
+def _system():
+    return profiles.EdgeSystem(n_cameras=12, n_servers=2, n_slots=40,
+                               seed=0, mean_bandwidth_hz=15e6,
+                               mean_compute_flops=15e12)
+
+
+def test_energy_queue_drives_power_toward_budget():
+    em = EnergyModel(e_max=0.25)
+    ea = EnergyAwareLBCD(_system(), energy=em, v=10.0, p_min=0.6)
+    recs = [ea.step(t) for t in range(60)]
+    pws = np.array([r.power for r in recs])
+
+    # Plain LBCD power under the same model (no energy awareness).
+    base = LBCDController(_system(), v=10.0, p_min=0.6).run(20)
+    base_p = np.mean([em.power(r.decision.b, r.decision.c).mean()
+                      for r in base.records])
+
+    assert pws[20:].mean() < base_p / 5          # large power reduction
+    # Monotone convergence toward the cap (Lyapunov asymptotics).
+    w = [pws[i:i + 20].mean() for i in (0, 20, 40)]
+    assert w[0] > w[1] > w[2]
+    assert w[2] < em.e_max * 2.0
+    # Price rises while above budget (queue doing its job).
+    assert recs[-1].z > recs[10].z
+
+
+def test_energy_queue_idle_when_budget_loose():
+    em = EnergyModel(e_max=100.0)                # effectively unconstrained
+    ea = EnergyAwareLBCD(_system(), energy=em, v=10.0, p_min=0.6)
+    recs = [ea.step(t) for t in range(5)]
+    assert recs[-1].z == 0.0
+    # and behaves like plain LBCD (same decisions at scale 1.0)
+    base = LBCDController(_system(), v=10.0, p_min=0.6)
+    rb = [base.step(t) for t in range(5)]
+    np.testing.assert_allclose(recs[0].aopi, rb[0].aopi, rtol=1e-5)
+
+
+def test_energy_accuracy_still_tracked():
+    em = EnergyModel(e_max=0.3)
+    ea = EnergyAwareLBCD(_system(), energy=em, v=5.0, p_min=0.55)
+    recs = [ea.step(t) for t in range(40)]
+    accs = np.array([r.mean_acc for r in recs])
+    assert accs[20:].mean() >= 0.5               # accuracy floor respected

@@ -1,0 +1,187 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_ref, flash_decode
+from repro.kernels.flash_attention import flash_attention, mha_ref
+from repro.kernels.mlstm import (mlstm_chunkwise, mlstm_parallel_ref,
+                                 mlstm_step)
+from repro.kernels.selective_scan import (selective_scan_chunked,
+                                          selective_scan_ref)
+from repro.kernels.selective_scan.kernel import selective_scan as ss_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return 5e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,t,h,kvh,d", [
+    (2, 256, 256, 4, 2, 64),
+    (1, 128, 384, 8, 8, 128),
+    (2, 256, 256, 4, 1, 128),
+    (1, 192, 192, 6, 2, 64),      # non-128-multiple seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, t, h, kvh, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, t, kvh, d), dtype)
+    v = jax.random.normal(ks[2], (b, t, kvh, d), dtype)
+    ref = mha_ref(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, interpret=True,
+                          block_q=128, block_k=128)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 4, 64))
+    v = jax.random.normal(ks[2], (1, 256, 4, 64))
+    ref = mha_ref(q, k, v, causal=False)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,kvh,d,blk", [
+    (2, 512, 8, 2, 64, 128),
+    (4, 1024, 4, 4, 128, 512),
+    (1, 384, 8, 1, 128, 128),
+    (3, 640, 16, 8, 64, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(b, t, h, kvh, d, blk, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, t, kvh, d), dtype)
+    vc = jax.random.normal(ks[2], (b, t, kvh, d), dtype)
+    kv_len = jnp.asarray([t // 2 + 37 * i for i in range(b)], jnp.int32)
+    ref = decode_ref(q, kc, vc, kv_len)
+    out = flash_decode(q, kc, vc, kv_len, block_k=blk, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+def _ss_inputs(b, s, inner, n, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (b, s, inner), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, inner)) - 1.0
+                         ).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (inner, n)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n), dtype)
+    C = jax.random.normal(ks[4], (b, s, n), dtype)
+    D = jax.random.normal(ks[5], (inner,))
+    return x, dt, A, B, C, D
+
+
+@pytest.mark.parametrize("b,s,inner,n,chunk,bi", [
+    (2, 128, 64, 16, 64, 32),
+    (1, 256, 128, 16, 128, 128),
+    (2, 96, 32, 8, 32, 32),
+])
+def test_selective_scan_sweep(b, s, inner, n, chunk, bi):
+    x, dt, A, B, C, D = _ss_inputs(b, s, inner, n)
+    y0, h0 = selective_scan_ref(x, dt, A, B, C, D)
+    y1, h1 = selective_scan_chunked(x, dt, A, B, C, D, chunk=chunk)
+    y2, h2 = ss_pallas(x, dt, A, B, C, D, chunk=chunk, block_i=bi,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h0), atol=1e-4)
+
+
+def test_selective_scan_carries_state():
+    """Scanning two halves with carried state == one full scan."""
+    x, dt, A, B, C, D = _ss_inputs(1, 128, 32, 8, seed=3)
+    y_full, h_full = selective_scan_ref(x, dt, A, B, C, D)
+    y1, h1 = selective_scan_ref(x[:, :64], dt[:, :64], A, B[:, :64],
+                                C[:, :64], D)
+    y2, h2 = selective_scan_ref(x[:, 64:], dt[:, 64:], A, B[:, 64:],
+                                C[:, 64:], D, h0=h1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_inputs(b, s, h, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    ig = jax.random.normal(ks[3], (b, s, h)) * 0.5
+    fg = jax.random.normal(ks[4], (b, s, h)) + 2.0
+    return q, k, v, ig, fg
+
+
+@pytest.mark.parametrize("b,s,h,d,bq,bk", [
+    (2, 128, 2, 64, 64, 64),
+    (1, 256, 4, 128, 128, 128),
+    (2, 192, 2, 64, 64, 64),
+])
+def test_mlstm_kernel_sweep(b, s, h, d, bq, bk):
+    q, k, v, ig, fg = _mlstm_inputs(b, s, h, d, seed=s)
+    ref = mlstm_parallel_ref(q, k, v, ig, fg)
+    out = mlstm_chunkwise(q, k, v, ig, fg, block_q=bq, block_k=bk,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_mlstm_parallel_equals_recurrent():
+    b, s, h, d = 2, 64, 2, 32
+    q, k, v, ig, fg = _mlstm_inputs(b, s, h, d, seed=9)
+    ref = mlstm_parallel_ref(q, k, v, ig, fg)
+    C = jnp.zeros((b, h, d, d))
+    n = jnp.zeros((b, h, d))
+    m = jnp.full((b, h), -1e30)
+    outs = []
+    for t in range(s):
+        o, (C, n, m) = mlstm_step(q[:, t], k[:, t], v[:, t], ig[:, t],
+                                  fg[:, t], C, n, m)
+        outs.append(o)
+    rec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(ref), atol=1e-4)
+
+
+def test_mlstm_chunkwise_xla_matches_parallel():
+    """The beyond-paper XLA chunkwise form (EXPERIMENTS §Perf B1)."""
+    from repro.kernels.mlstm import mlstm_chunkwise_xla
+    for (b, s, h, d, c) in [(2, 256, 2, 32, 64), (1, 512, 4, 64, 128),
+                            (2, 384, 2, 32, 128)]:
+        q, k, v, ig, fg = _mlstm_inputs(b, s, h, d, seed=s + 1)
+        ref = mlstm_parallel_ref(q, k, v, ig, fg)
+        out = mlstm_chunkwise_xla(q, k, v, ig, fg, chunk=c)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=5e-4, rtol=1e-3)
+
+
+def test_mlstm_chunkwise_xla_fallback_short_seq():
+    from repro.kernels.mlstm import mlstm_chunkwise_xla
+    q, k, v, ig, fg = _mlstm_inputs(1, 64, 2, 16, seed=3)
+    out = mlstm_chunkwise_xla(q, k, v, ig, fg, chunk=256)  # s < chunk
+    ref = mlstm_parallel_ref(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)

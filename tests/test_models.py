@@ -1,0 +1,187 @@
+"""Per-arch smoke tests (deliverable f) + model-level invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build
+from repro.models.common import count_params, init_params
+from repro.models.layers import apply_rope
+from repro.training import optimizer as opt_mod
+from repro.training.train_step import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = sorted(configs.ARCHS)
+
+
+def _batch(cfg, b=2, s=32, seed=7):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (b, s + 1), 0,
+                              cfg.vocab)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1),
+            (b, cfg.n_vision_tokens, cfg.d_model)) * 0.1
+    if cfg.family == "audio":
+        batch["audio_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 2), (b, s, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step, shapes + no NaNs."""
+    cfg = configs.get(arch).reduced()
+    model = build(cfg)
+    params = init_params(model.template(), KEY)
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (b, s, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    step = make_train_step(model, opt_mod.AdamWConfig(lr=1e-3))
+    opt_state = opt_mod.init(params, opt_mod.AdamWConfig())
+    params2, opt2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    diff = max(float(jnp.max(jnp.abs(a - b_))) for a, b_ in
+               zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert diff > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """prefill(s) + decode steps == full forward (teacher forcing)."""
+    cfg = configs.get(arch).reduced()
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=cfg.n_experts / cfg.top_k)
+    model = build(cfg)
+    params = init_params(model.template(), KEY)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s + 2), 0,
+                              cfg.vocab)
+    full = dict(_batch(cfg, b, s + 2), tokens=toks)
+    full.pop("labels")
+    pre = dict(full, tokens=toks[:, :s])
+    if "audio_embeds" in full:
+        pre["audio_embeds"] = full["audio_embeds"] = \
+            full["audio_embeds"][:, :s]
+    logits_full, _ = model.forward(params, full)
+    cache = init_params(model.cache_template(b, s + 2), KEY)
+    lg, cache = model.prefill(params, pre, cache)
+    assert float(jnp.max(jnp.abs(lg[:, 0] - logits_full[:, s - 1]))) < 2e-3
+    lg1, cache = model.decode_step(params, toks[:, s], cache)
+    assert float(jnp.max(jnp.abs(lg1 - logits_full[:, s]))) < 2e-3
+    lg2, cache = model.decode_step(params, toks[:, s + 1], cache)
+    assert float(jnp.max(jnp.abs(lg2 - logits_full[:, s + 1]))) < 2e-3
+
+
+def test_param_counts_match_public_scale():
+    """Full configs land near their public parameter counts."""
+    expect = {
+        "yi-6b": (6.0e9, 0.2),
+        "yi-34b": (34.4e9, 0.15),
+        "qwen2.5-3b": (3.1e9, 0.25),
+        "minicpm3-4b": (4.0e9, 0.4),
+        "llama-3.2-vision-11b": (10.6e9, 0.25),
+        "dbrx-132b": (132e9, 0.15),
+        "qwen2-moe-a2.7b": (14.3e9, 0.3),
+        "jamba-1.5-large-398b": (398e9, 0.15),
+        # Spec dims (48L d2048 4H) with the official block layout land at
+        # ~2B; the public "1.3b" name reflects a different depth/ff mix.
+        "xlstm-1.3b": (2.0e9, 0.3),
+        "seamless-m4t-large-v2": (2.3e9, 0.5),
+    }
+    for arch, (target, tol) in expect.items():
+        cfg = configs.get(arch)
+        model = build(cfg, ep_degree=16)
+        n = model.param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)
+
+
+def test_rope_relative_property():
+    """Rotary: scores depend only on relative distance."""
+    d = 64
+    k1 = jax.random.normal(KEY, (1, 1, 1, d))
+    q1 = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+    def score(pq, pk):
+        qq = apply_rope(q1, jnp.array([[pq]]))
+        kk = apply_rope(k1, jnp.array([[pk]]))
+        return float(jnp.sum(qq * kk))
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-4)
+    assert score(5, 3) != pytest.approx(score(5, 4), rel=1e-3)
+
+
+def test_moe_capacity_drops_and_dropless():
+    from repro.models import moe
+    cfg = configs.get("dbrx-132b").reduced()
+    model = build(cfg)
+    params = init_params(model.template(), KEY)["blocks"]
+    p0 = jax.tree.map(lambda x: x[0], params)["p0"]["ffn"]
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    y_drop, _ = moe.moe_apply(p0, x, cfg, capacity_factor=0.25)
+    y_free, _ = moe.moe_apply(p0, x, cfg,
+                              capacity_factor=cfg.n_experts / cfg.top_k)
+    # Heavy capacity pressure must change outputs (tokens dropped).
+    assert float(jnp.max(jnp.abs(y_drop - y_free))) > 1e-4
+    assert bool(jnp.isfinite(y_drop).all())
+
+
+def test_vocab_padding_masked_in_loss():
+    cfg = configs.get("seamless-m4t-large-v2").reduced()
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= cfg.vocab
+    from repro.models.layers import softmax_xent
+    logits = jnp.zeros((2, 4, cfg.padded_vocab))
+    # Put huge mass on padded ids: loss must ignore them.
+    logits = logits.at[..., cfg.vocab:].set(100.0)
+    labels = jnp.zeros((2, 4), jnp.int32)
+    loss = softmax_xent(logits, labels, cfg.vocab)
+    assert float(loss) < 20.0
+
+
+def test_long_context_applicability():
+    from repro.configs.base import LONG_500K, shape_supported
+    runs = {a for a in ARCHS
+            if shape_supported(configs.get(a), LONG_500K)[0]}
+    assert runs == {"xlstm-1.3b", "jamba-1.5-large-398b"}
+
+
+def test_moe_group_limited_routing():
+    """Group-limited routing (EXPERIMENTS §Perf MoE-4): long sequences are
+    routed in 2048-token groups; outputs stay finite and shaped, and short
+    sequences are bit-identical to the ungrouped path."""
+    from repro.models import moe
+    cfg = configs.get("dbrx-132b").reduced()
+    model = build(cfg)
+    params = jax.tree.map(lambda x: x[0],
+                          init_params(model.template(), KEY)["blocks"])
+    p0 = params["p0"]["ffn"]
+    # long sequence -> grouped
+    x_long = jax.random.normal(KEY, (1, 4096, cfg.d_model)) * 0.3
+    y, aux = moe.moe_apply(p0, x_long, cfg)
+    assert y.shape == x_long.shape
+    assert bool(jnp.isfinite(y).all()) and np.isfinite(float(aux))
+    # first group's tokens match a standalone 2048-token call (prefix
+    # property of group-limited routing)
+    y_head, _ = moe.moe_apply(p0, x_long[:, :moe.MOE_GROUP], cfg)
+    np.testing.assert_allclose(np.asarray(y[:, :moe.MOE_GROUP]),
+                               np.asarray(y_head), atol=1e-5)
+
+
+def test_pad_heads_preserves_shapes_and_runs():
+    """pad_heads_to (EXPERIMENTS §Perf A1): padded-head model still
+    produces [b, s, vocab] logits and trains."""
+    cfg = dataclasses.replace(configs.get("yi-6b").reduced(),
+                              n_heads=6, n_kv_heads=2, pad_heads_to=8)
+    model = build(cfg)
+    params = init_params(model.template(), KEY)
+    assert params["blocks"]["p0"]["mixer"]["wq"].shape[2] == 8
+    batch = _batch(cfg, 2, 16)
+    logits, _ = model.forward(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())

@@ -1,0 +1,77 @@
+"""Roofline helpers: useful-FLOPs model, sharded byte counting, terms."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch import roofline as rl
+from repro.models import build
+from repro.sharding.rules import make_rules
+
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+def test_active_params_dense_equals_total():
+    cfg = configs.get("yi-6b")
+    assert rl.active_params(cfg) == build(cfg).param_count()
+
+
+def test_active_params_moe_counts_topk_only():
+    cfg = configs.get("dbrx-132b")
+    total = build(cfg, ep_degree=16).param_count()
+    active = rl.active_params(cfg)
+    assert active < total
+    # dbrx: 16 experts top-4 -> expert share shrinks ~4x.
+    routed = 40 * 16 * 3 * cfg.d_model * cfg.expert_d_ff
+    assert active == pytest.approx(total - routed + routed * 4 / 16,
+                                   rel=1e-6)
+
+
+def test_model_flops_scales_with_kind():
+    cfg = configs.get("qwen2.5-3b")
+    tr = rl.model_flops(cfg, SHAPES["train_4k"])
+    pf = rl.model_flops(cfg, SHAPES["prefill_32k"])
+    de = rl.model_flops(cfg, SHAPES["decode_32k"])
+    n = rl.active_params(cfg)
+    assert tr == pytest.approx(6 * n * 256 * 4096)
+    assert pf == pytest.approx(2 * n * 32 * 32768)
+    assert de == pytest.approx(2 * n * 128)
+
+
+def test_tree_device_bytes_respects_sharding():
+    cfg = configs.get("yi-6b")
+    rules = make_rules(cfg, FakeMesh())
+    model = build(cfg)
+    per_dev = rl.tree_device_bytes(model.template(), rules)
+    total = model.param_count() * 2
+    # FSDP x TP shards most big tensors 256-way; allow norm/replicated slack
+    assert total / 256 <= per_dev <= total / 64
+
+
+def test_terms_from_record_dominant():
+    rec = {
+        "arch": "yi-6b", "shape": "train_4k", "mesh_name": "single",
+        "n_devices": 256,
+        "extrapolated": {"flops": 2e14, "bytes": 5e12, "coll": 1e9},
+        "cost_full_hlo": {"flops": 0, "bytes": 0},
+        "collectives_full_hlo": {"total_bytes": 0},
+        "memory": {"argument_gib": 1.0, "temp_gib": 2.0,
+                   "output_gib": 0, "alias_gib": 0},
+    }
+    t = rl.terms_from_record(rec)
+    assert t["dominant"] == "compute"
+    assert 0 < t["roofline_fraction"] <= 1.5
+    assert t["t_compute_s"] == pytest.approx(2e14 / rl.PEAK_FLOPS)
+
+
+def test_fused_memory_decode_is_weights_plus_cache():
+    cfg = configs.get("yi-6b")
+    sizes = {"data": 16, "model": 16}
+    b = rl.fused_memory_bytes(cfg, SHAPES["decode_32k"], sizes)
+    rules = make_rules(cfg, FakeMesh())
+    model = build(cfg)
+    p_dev = rl.tree_device_bytes(model.template(), rules)
+    assert b > 2 * p_dev          # weights read + cache read
+    assert b < 2 * p_dev + 10 * 2**30

@@ -1,0 +1,142 @@
+"""Serving: scheduler semantics, AoPI tracker, engine, LBCD-driven service."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import aopi, lbcd, profiles, queues
+from repro.models import build
+from repro.models.common import init_params
+from repro.serving import (AnalyticsService, AoPITracker, Engine, Frame,
+                           StreamQueue)
+from repro.serving.scheduler import FCFS, LCFSP
+
+
+def test_fcfs_queue_order():
+    q = StreamQueue(0, FCFS)
+    for i in range(3):
+        assert not q.on_arrival(Frame(0, i * 1.0, i * 1.0 + 0.1, seq=i))
+    assert [q.pop().seq for _ in range(3)] == [0, 1, 2]
+
+
+def test_lcfsp_preempts_and_keeps_only_latest():
+    q = StreamQueue(0, LCFSP)
+    q.on_arrival(Frame(0, 0.0, 0.1, seq=0))
+    preempt = q.on_arrival(Frame(0, 1.0, 1.1, seq=1))
+    assert preempt
+    assert len(q) == 1 and q.pop().seq == 1
+
+
+def test_aopi_tracker_matches_offline_integration():
+    """Online tracker == queues._integrate_age on an in-order trace
+    (completions preserve generation order, as in FCFS/LCFSP queues —
+    the offline integrator's domain)."""
+    rng = np.random.default_rng(0)
+    n_ev = 200
+    gen = np.sort(rng.uniform(0, 100, n_ev))
+    done = np.maximum.accumulate(gen + rng.uniform(0.1, 2.0, n_ev)) \
+        + np.linspace(0, 1e-3, n_ev)
+    acc = rng.random(n_ev) < 0.7
+    horizon = float(done[-1] + 1.0)
+    expect = queues._integrate_age(gen, done, acc, horizon)
+    tr = AoPITracker(1)
+    for g, d, a in zip(gen, done, acc):
+        tr.on_result(0, g, bool(a), float(d))
+    assert tr.mean_aopi(0, horizon) == pytest.approx(expect, rel=1e-9)
+
+
+def _tiny_engine(n_lanes=4, decode_tokens=2):
+    cfg = configs.get("qwen2.5-3b").reduced()
+    model = build(cfg)
+    params = init_params(model.template(), jax.random.PRNGKey(0))
+    return Engine(model, params, n_lanes=n_lanes, max_len=64,
+                  decode_tokens=decode_tokens), cfg
+
+
+def test_engine_admit_decode_complete():
+    eng, cfg = _tiny_engine()
+    f = Frame(3, 0.0, 0.0)
+    assert eng.admit(f, np.arange(2, 10, dtype=np.int32))
+    assert eng.utilization == 0.25
+    done = []
+    for _ in range(5):
+        done += eng.decode_tick()
+        if done:
+            break
+    assert done and done[0].stream_id == 3
+    assert len(done[0].tokens) == 3          # prefill token + 2 decode
+    assert eng.utilization == 0.0
+
+
+def test_engine_preemption_frees_lane():
+    eng, cfg = _tiny_engine(n_lanes=2, decode_tokens=50)
+    eng.admit(Frame(1, 0.0, 0.0), np.arange(2, 8, dtype=np.int32))
+    eng.admit(Frame(2, 0.0, 0.0), np.arange(2, 8, dtype=np.int32))
+    assert not eng.free_lanes()
+    assert eng.preempt_stream(1) == 1
+    assert len(eng.free_lanes()) == 1
+    done = eng.decode_tick()                 # stream 2 still running
+    assert done == []
+
+
+def test_engine_batched_decode_matches_sequential():
+    """Two lanes decoding together produce the same tokens as alone."""
+    eng1, _ = _tiny_engine(n_lanes=1, decode_tokens=4)
+    toks_a = np.arange(2, 12, dtype=np.int32)
+    eng1.admit(Frame(0, 0, 0), toks_a)
+    out_solo = None
+    for _ in range(6):
+        r = eng1.decode_tick()
+        if r:
+            out_solo = r[0].tokens
+            break
+    eng2, _ = _tiny_engine(n_lanes=2, decode_tokens=4)
+    eng2.admit(Frame(0, 0, 0), toks_a)
+    eng2.admit(Frame(1, 0, 0), np.arange(30, 45, dtype=np.int32))
+    outs = {}
+    for _ in range(6):
+        for r in eng2.decode_tick():
+            outs[r.stream_id] = r.tokens
+    np.testing.assert_array_equal(outs[0], out_solo)
+
+
+def test_service_measured_matches_closed_form():
+    """Fig. 14/15 analog: data-plane AoPI ~= Theorems 1-2 prediction."""
+    system = profiles.EdgeSystem(n_cameras=8, n_servers=2, n_slots=10,
+                                 seed=3)
+    ctrl = lbcd.LBCDController(system, v=10.0, p_min=0.6)
+    svc = AnalyticsService(ctrl, mode="mm1", epoch_duration=3000.0)
+    reps = svc.run(3)
+    for r in reps:
+        assert r.measured_aopi == pytest.approx(r.predicted_aopi, rel=0.25)
+    # per-stream agreement on average
+    ratio = np.concatenate([r.per_stream_measured /
+                            np.maximum(r.per_stream_predicted, 1e-9)
+                            for r in reps])
+    assert np.median(ratio) == pytest.approx(1.0, abs=0.15)
+
+
+def test_failover_reassigns_streams():
+    from repro.training.failure import failover_assignment
+    system = profiles.EdgeSystem(n_cameras=9, n_servers=3, n_slots=5,
+                                 seed=5)
+    ctrl = lbcd.LBCDController(system, v=10.0, p_min=0.6)
+    dead = np.array([False, True, False])
+    rec = failover_assignment(ctrl, 0, dead)
+    assert not dead[rec.assign].any()
+
+
+def test_straggler_monitor_flags_outlier():
+    from repro.training.failure import StragglerMonitor
+    mon = StragglerMonitor(n_workers=4, warmup=5)
+    rng = np.random.default_rng(0)
+    flagged = None
+    for t in range(30):
+        times = rng.normal(1.0, 0.02, 4)
+        times[2] += 0.0 if t < 10 else 2.0      # worker 2 degrades
+        flagged = mon.observe(times)
+    assert flagged[2] and not flagged[[0, 1, 3]].any()
+    w = mon.rebalance_weights()
+    assert w[2] == w.min()

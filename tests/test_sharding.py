@@ -1,0 +1,108 @@
+"""Sharding rules: divisibility guards, per-arch policies, spec trees."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro import configs
+from repro.models import build
+from repro.models.common import P, pspec_tree
+from repro.sharding.spec import spec_dims
+
+
+RULES = {"_mesh_sizes": {"data": 16, "model": 16, "pod": 2},
+         "batch": ("pod", "data"), "embed": "data", "heads": "model",
+         "mlp": "model", "experts": "data", "expert_mlp": "model",
+         "vocab": "model"}
+
+
+def test_divisibility_guard():
+    # 56 heads cannot shard over model=16 -> None
+    assert spec_dims((7168, 56, 128), ("embed", "heads", None), RULES) == \
+        ["data", None, None]
+    assert spec_dims((7168, 64, 128), ("embed", "heads", None), RULES) == \
+        ["data", "model", None]
+
+
+def test_duplicate_axis_guard():
+    # experts and embed both want "data": first dim wins.
+    out = spec_dims((16, 6144, 10752), ("experts", "embed", "expert_mlp"),
+                    RULES)
+    assert out == ["data", None, "model"]
+
+
+def test_tuple_axis_batch():
+    assert spec_dims((256, 4096), ("batch", None), RULES) == \
+        [("pod", "data"), None]
+    # batch=1 cannot shard 32-way
+    assert spec_dims((1, 4096), ("batch", None), RULES) == [None, None]
+
+
+def test_pspec_tree_structure():
+    tmpl = {"w": P((64, 128), ("embed", "mlp")),
+            "b": P((128,), ("mlp",))}
+    specs = pspec_tree(tmpl, RULES)
+    assert specs["w"] == PartitionSpec("data", "model")
+    assert specs["b"] == PartitionSpec("model")
+
+
+@pytest.mark.parametrize("arch", sorted(configs.ARCHS))
+def test_rules_cover_every_param(arch):
+    """Every full-config param leaf gets a valid PartitionSpec under the
+    production rules (no divisibility violations -> lowering can't fail on
+    param sharding)."""
+    from repro.sharding.rules import make_rules
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    cfg = configs.get(arch)
+    rules = make_rules(cfg, FakeMesh())
+    model = build(cfg, ep_degree=16)
+    tmpl = model.template()
+    specs = pspec_tree(tmpl, rules)
+    leaves_t = jax.tree.leaves(tmpl, is_leaf=lambda x: isinstance(x, P))
+    leaves_s = jax.tree.leaves(specs,
+                               is_leaf=lambda s: isinstance(
+                                   s, PartitionSpec))
+    assert len(leaves_t) == len(leaves_s)
+    for p, s in zip(leaves_t, leaves_s):
+        for dim, ax in zip(p.shape, s):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            extent = int(np.prod([{"data": 16, "model": 16}[a]
+                                  for a in axes]))
+            assert dim % extent == 0, (arch, p.shape, s)
+
+
+def test_big_models_are_sharded_small_enough():
+    """Param bytes per chip under the production rules fit the HBM plan."""
+    from repro.sharding.rules import make_rules
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    budgets = {"jamba-1.5-large-398b": 8.0, "dbrx-132b": 4.0,
+               "yi-34b": 2.0}
+    for arch, max_gib in budgets.items():
+        cfg = configs.get(arch)
+        rules = make_rules(cfg, FakeMesh())
+        model = build(cfg, ep_degree=16)
+        tmpl = model.template()
+        specs = pspec_tree(tmpl, rules)
+
+        total = 0.0
+        for p, s in zip(
+                jax.tree.leaves(tmpl, is_leaf=lambda x: isinstance(x, P)),
+                jax.tree.leaves(specs, is_leaf=lambda s: isinstance(
+                    s, PartitionSpec))):
+            shard = 1
+            for ax in s:
+                if ax is None:
+                    continue
+                axes = (ax,) if isinstance(ax, str) else ax
+                for a in axes:
+                    shard *= {"data": 16, "model": 16}[a]
+            total += p.size * 2 / shard          # bf16
+        assert total / 2**30 <= max_gib, (arch, total / 2**30)
