@@ -1,25 +1,51 @@
-"""Fig. 9: AoPI + accuracy vs wireless bandwidth, all methods."""
+"""Fig. 9: AoPI + accuracy vs wireless bandwidth, all methods.
+
+``sweep`` is the shared grid driver (also used by Figs. 10-11): it
+pregenerates one ``HorizonTables`` per swept value and runs each method's
+device-resident scan rollout. When every scenario has the same shapes (the
+bandwidth/compute sweeps), the stack rolls out as **one vmapped call per
+method**; shape-changing sweeps (camera count, Fig. 11) fall back to one
+scan per value — still no per-slot host loop.
+"""
+import jax
+
 from repro.core import baselines, lbcd, profiles
 
 from .common import emit
 
 METHODS = ("LBCD", "MIN", "DOS", "JCAB")
 
-
-def _run_method(name, system, slots):
-    if name == "LBCD":
-        return lbcd.LBCDController(system, v=10.0, p_min=0.7).run(slots)
-    return baselines.make(name, system).run(slots)
+_ROLLOUTS = {
+    "LBCD": lambda tables: lbcd.rollout(tables, 10.0, 0.7),
+    "MIN": lambda tables: baselines.rollout_min(tables, 10.0),
+    "DOS": lambda tables: baselines.rollout_dos(tables, 1.0),
+    "JCAB": lambda tables: baselines.rollout_jcab(tables, 0.5),
+}
 
 
 def sweep(param_name, values, sys_kw_fn, slots):
+    tables = [profiles.EdgeSystem(**sys_kw_fn(v)).horizon(slots)
+              for v in values]
+    shapes = {tuple(x.shape for x in jax.tree.leaves(t)) for t in tables}
+    stacked = profiles.stack_horizons(tables) if len(shapes) == 1 else None
+
+    results = {}
+    for m in METHODS:
+        fn = _ROLLOUTS[m]
+        if stacked is not None:
+            results[m] = jax.vmap(fn)(stacked)   # one call, all values
+        else:
+            results[m] = [fn(t) for t in tables]
+
     rows = []
-    for val in values:
+    for val_i, val in enumerate(values):
         for m in METHODS:
-            system = profiles.EdgeSystem(**sys_kw_fn(val))
-            s = _run_method(m, system, slots)
-            rows.append([param_name, float(val), m, s.mean_aopi,
-                         s.mean_acc])
+            if stacked is not None:
+                res = jax.tree.map(lambda x, i=val_i: x[i], results[m])
+            else:
+                res = results[m][val_i]
+            rows.append([param_name, float(val), m, res.mean_aopi,
+                         res.mean_acc])
     return rows
 
 

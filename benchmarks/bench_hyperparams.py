@@ -1,7 +1,17 @@
-"""Figs. 7-8: P_min and V sweeps for LBCD."""
+"""Figs. 7-8: P_min and V sweeps for LBCD.
+
+The whole (V, P_min) grid runs as **one vmapped scan-engine call**
+(``lbcd.rollout_grid``): the horizon is pregenerated once and every grid
+point rolls out on device in parallel.
+"""
+import jax.numpy as jnp
+
 from repro.core import lbcd, profiles
 
 from .common import emit
+
+P_MINS = (0.3, 0.5, 0.7, 0.9)
+VS = (1.0, 10.0, 100.0)
 
 
 def _sys(seed=0):
@@ -12,17 +22,20 @@ def _sys(seed=0):
 
 def run(full: bool = False):
     slots = 60 if full else 30
+    tables = _sys().horizon(slots)
+    # Grid rows: the P_min sweep at V=10, then the V sweep at P_min=0.7.
+    grid_v = jnp.asarray([10.0] * len(P_MINS) + list(VS))
+    grid_p = jnp.asarray(list(P_MINS) + [0.7] * len(VS))
+    res = lbcd.rollout_grid(tables, grid_v, grid_p)   # [G, T, ...]
+
     rows = []
-    for p_min in (0.3, 0.5, 0.7, 0.9):
-        s = lbcd.LBCDController(_sys(), v=10.0, p_min=p_min).run(slots)
-        rows.append(["p_min", p_min, s.mean_aopi, s.mean_acc,
-                     float(s.acc_series[-5:].mean()),
-                     float(s.q_series[-1])])
-    for v in (1.0, 10.0, 100.0):
-        s = lbcd.LBCDController(_sys(), v=v, p_min=0.7).run(slots)
-        rows.append(["V", v, s.mean_aopi, s.mean_acc,
-                     float(s.acc_series[-5:].mean()),
-                     float(s.q_series[-1])])
+    params = [("p_min", p) for p in P_MINS] + [("V", v) for v in VS]
+    for g, (param, value) in enumerate(params):
+        aopi = res.aopi[g]
+        acc = res.acc[g]
+        rows.append([param, value, float(aopi.mean()), float(acc.mean()),
+                     float(acc.mean(axis=1)[-5:].mean()),
+                     float(res.q[g, -1])])
     emit("fig7_8_hyperparams", rows,
          ["param", "value", "mean_aopi", "mean_acc", "tail_acc", "q_end"])
     return rows

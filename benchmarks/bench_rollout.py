@@ -1,0 +1,69 @@
+"""Scale-out: scan-engine vs legacy per-slot-loop rollout throughput.
+
+Measures steady-state slots/sec of the device-resident ``lbcd.rollout``
+(one jitted ``lax.scan``, horizon pregenerated) at N in {30, 300, 3000}
+cameras against two legacy arms:
+
+  * ``legacy_seed``   — the pre-refactor rollout stack this PR replaced:
+    per-slot python loop (per-slot profiling, two dispatches, numpy
+    first-fit, device<->host round trips each slot) with its original
+    flat high-iteration water-filling (``solver_effort="seed"``);
+  * ``legacy_shared`` — the same per-slot loop but sharing the reworked
+    fast allocator, isolating what the loop->scan move alone buys.
+
+Compile/warmup time is excluded everywhere. At N=3000 the scan engine
+still runs entirely on device — no host-loop fallback.
+"""
+import jax
+
+from repro.core import lbcd, profiles
+
+from .common import emit, timer
+
+COUNTS = (30, 300, 3000)
+
+
+def _system(n, slots):
+    return profiles.EdgeSystem(n_cameras=n, n_servers=3, n_slots=slots)
+
+
+def _time_legacy(n, slots, legacy_slots, repeats, effort):
+    ctrl = lbcd.LBCDController(_system(n, slots), v=10.0, p_min=0.7,
+                               solver_effort=effort)
+    ctrl.step(0)                                             # warmup
+    best = 0.0
+    for _ in range(repeats):
+        with timer() as t:
+            for tt in range(1, legacy_slots + 1):
+                ctrl.step(tt)
+        best = max(best, legacy_slots / t.elapsed)
+    return best
+
+
+def run(full: bool = False):
+    rows = []
+    for n in COUNTS:
+        slots = (40 if n <= 300 else 12) if full else \
+            (20 if n <= 300 else 6)
+        legacy_slots = slots if n <= 300 else 3
+        repeats = 1 if n >= 3000 else 3
+
+        # --- scan engine: compile once, then time whole-horizon calls.
+        tables = _system(n, slots).horizon(slots)
+        jax.block_until_ready(lbcd.rollout(tables, 10.0, 0.7))   # warmup
+        scan_sps = 0.0
+        for _ in range(repeats):
+            with timer() as t:
+                jax.block_until_ready(lbcd.rollout(tables, 10.0, 0.7))
+            scan_sps = max(scan_sps, slots / t.elapsed)
+
+        seed_sps = _time_legacy(n, slots, legacy_slots, repeats, "seed")
+        shared_sps = _time_legacy(n, slots, legacy_slots, repeats, "fast")
+
+        rows.append([n, slots, scan_sps, seed_sps, shared_sps,
+                     scan_sps / seed_sps, scan_sps / shared_sps])
+    emit("scaleout_rollout", rows,
+         ["n_cameras", "slots", "scan_slots_per_sec",
+          "legacy_seed_slots_per_sec", "legacy_shared_slots_per_sec",
+          "speedup_vs_seed", "speedup_vs_shared"])
+    return rows

@@ -10,7 +10,8 @@ import time
 
 from . import (bench_bandwidth, bench_cameras, bench_compute,
                bench_energy, bench_frontier, bench_hyperparams,
-               bench_overhead, bench_policy, bench_validation)
+               bench_overhead, bench_policy, bench_rollout,
+               bench_validation)
 
 ALL = {
     "fig14_15_validation": bench_validation.run,
@@ -22,6 +23,7 @@ ALL = {
     "fig11_cameras": bench_cameras.run,
     "fig12_overhead": bench_overhead.run,
     "beyond_energy": bench_energy.run,
+    "scaleout_rollout": bench_rollout.run,
 }
 
 

@@ -2,11 +2,13 @@
 
 1. Validate the AoPI closed forms (Theorems 1-2) against the discrete-event
    oracle for one configuration.
-2. Run the LBCD controller for a few slots on a small edge system and
-   compare against the DOS / JCAB / MIN baselines.
+2. Run the LBCD controller (device-resident scan rollout engine) on a small
+   edge system and compare against the DOS / JCAB / MIN baselines.
+3. Sweep the whole (V, P_min) hyperparameter grid as one vmapped call.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aopi, baselines, lbcd, profiles, queues
@@ -38,6 +40,16 @@ def main():
     for name in ("MIN", "DOS", "JCAB"):
         b = baselines.make(name, system()).run(25)
         print(f"{name:<14s} {b.mean_aopi:9.4f}   {b.mean_acc:.3f}")
+
+    # --- 3. (V, P_min) grid: one vmapped device-resident rollout ------
+    tables = system().horizon(25)
+    vs = jnp.asarray([1.0, 10.0, 100.0])
+    p_mins = jnp.asarray([0.7, 0.7, 0.7])
+    grid = lbcd.rollout_grid(tables, vs, p_mins)
+    print("\nV sweep (one vmapped rollout_grid call):")
+    for g, v in enumerate(vs):
+        print(f"  V={float(v):6.1f}  mean AoPI {float(grid.aopi[g].mean()):.4f}"
+              f"  mean acc {float(grid.acc[g].mean()):.3f}")
 
 
 if __name__ == "__main__":

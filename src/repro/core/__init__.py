@@ -4,6 +4,13 @@ AoPI closed forms (Theorems 1-3), discrete-event oracles, the Lyapunov
 virtual-queue framework, Algorithm 1 (BCD over configuration + allocation),
 Algorithm 2 (first-fit server selection), Algorithm 3 (the LBCD controller),
 and the DOS/JCAB/MIN baselines.
+
+Whole-horizon execution is device-resident: ``profiles.HorizonTables``
+pregenerates T slots of profiles/capacities as one pytree, and
+``lbcd.rollout`` / ``baselines.rollout_{min,dos,jcab}`` /
+``energy.rollout_energy`` run Algorithm 3 as a single jitted ``lax.scan``
+over it — vmappable over hyperparameter grids (``lbcd.rollout_grid``) and
+stacked scenarios (``lbcd.rollout_scenarios`` + ``profiles.stack_horizons``).
 """
 from . import (allocate, aopi, baselines, bcd, binpack, energy, lbcd,
                lyapunov, profiles, queues)

@@ -65,7 +65,7 @@ def _h_compute(v, mu_scale, lam, p, pol):
     return jnp.maximum(-d * mu_scale, 0.0)
 
 
-def _solve_h_equals_nu(h_fn, nu, lo, hi, iters: int = 48):
+def _solve_h_equals_nu(h_fn, nu, lo, hi, iters: int = 20):
     """Per-camera inner bisection: largest x in [lo, hi] with h(x) >= nu.
 
     ``h_fn`` is elementwise-monotone decreasing in x; vectorized over
@@ -82,42 +82,82 @@ def _solve_h_equals_nu(h_fn, nu, lo, hi, iters: int = 48):
 
 
 def _waterfill(h_fn, closed_form, lo, hi, server_id, n_servers,
-               outer_iters: int = 54, inner_iters: int = 40):
-    """Generic per-server water-filling.
+               outer_iters: int = 16, inner_iters: int = 6,
+               final_inner_iters: int = 20):
+    """Generic per-server water-filling (Illinois outer, nested-bracket
+    inner).
 
     Finds per-server duals nu_s such that sum_{n in s} x_n(nu_s) = 1 (in
     normalized units), where x_n(nu) = clip(solution of h_n(x)=nu, lo, hi).
     ``closed_form(nu)`` gives the exact solution where available (LCFSP);
     cameras with ``closed_form`` returning nan fall back to bisection.
+
+    Two structural accelerations over a flat nested bisection (the whole
+    T-slot rollout engine sits on this loop, so the constant factor
+    matters):
+
+      * outer: safeguarded false position (Illinois) on the log-dual —
+        superlinear on the smooth stretches of the fill curve, bracketing
+        always maintained, bisection fallback when the secant degenerates;
+      * inner: because x(nu) is monotone decreasing in nu, the outer
+        bracket's endpoint solutions (xa at the over-budget price, xb at
+        the under-budget price) bracket every interior solution, so the
+        per-camera root-find inherits a bracket that shrinks with the
+        outer loop and needs only a few iterations per step (plus a pad
+        absorbing the inherited bracket's own error).
     """
-    def alloc_at(log_nu_s):
+    def alloc_at(log_nu_s, blo, bhi, iters):
         nu = jnp.exp(log_nu_s)[server_id]
         x_cf = closed_form(nu)
-        x_bi = _solve_h_equals_nu(h_fn, nu, lo, hi, inner_iters)
+        x_bi = _solve_h_equals_nu(h_fn, nu, blo, bhi, iters)
         x = jnp.where(jnp.isnan(x_cf), x_bi, x_cf)
         return jnp.clip(x, lo, hi)
 
-    def fill(log_nu_s):
-        x = alloc_at(log_nu_s)
-        return jax.ops.segment_sum(x, server_id, num_segments=n_servers)
+    def bracket(xa, xb):
+        pad = 0.25 * jnp.maximum(xa - xb, 0.0) + 1e-7
+        return jnp.maximum(lo, xb - pad), jnp.minimum(hi, xa + pad)
 
-    def body(_, state):
-        a, b = state
-        mid = 0.5 * (a + b)
-        over = fill(mid) > 1.0     # still over budget -> raise the price
-        return jnp.where(over, mid, a), jnp.where(over, b, mid)
+    def fill_at(log_nu_s, xa, xb, iters):
+        blo, bhi = bracket(xa, xb)
+        x = alloc_at(log_nu_s, blo, bhi, iters)
+        f = jax.ops.segment_sum(x, server_id,
+                                num_segments=n_servers) - 1.0
+        return x, f
 
     a0 = jnp.full((n_servers,), _LOG_NU_LO)
     b0 = jnp.full((n_servers,), _LOG_NU_HI)
-    a, b = jax.lax.fori_loop(0, outer_iters, body, (a0, b0))
-    log_nu = 0.5 * (a + b)
-    x = alloc_at(log_nu)
+    xa0, fa0 = fill_at(a0, hi, lo, inner_iters + 4)
+    xb0, fb0 = fill_at(b0, hi, lo, inner_iters + 4)
+
+    def body(_, state):
+        a, b, fa, fb, xa, xb = state
+        # Secant point between (a, fa) and (b, fb), clipped to stay well
+        # inside the bracket; plain bisection when the secant degenerates.
+        denom = fa - fb
+        t = jnp.where(jnp.abs(denom) > 1e-12, fa / denom, 0.5)
+        t = jnp.clip(t, 0.05, 0.95)
+        mid = a + t * (b - a)
+        x, f = fill_at(mid, xa, xb, inner_iters)
+        over = f > 0.0             # over budget -> raise the price
+        over_n = over[server_id]
+        return (jnp.where(over, mid, a), jnp.where(over, b, mid),
+                jnp.where(over, f, 0.5 * fa),    # Illinois halving of the
+                jnp.where(over, 0.5 * fb, f),    # retained endpoint
+                jnp.where(over_n, x, xa), jnp.where(over_n, xb, x))
+
+    a, b, _, _, xa, xb = jax.lax.fori_loop(
+        0, outer_iters, body, (a0, b0, fa0, fb0, xa0, xb0))
+    blo, bhi = bracket(xa, xb)
     # If the total cap is below budget the constraint is slack: keep caps.
-    return x
+    return alloc_at(0.5 * (a + b), blo, bhi, final_inner_iters)
 
 
-@functools.partial(jax.jit, static_argnames=("n_servers",))
-def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers):
+@functools.partial(jax.jit, static_argnames=("n_servers", "outer_iters",
+                                             "inner_iters",
+                                             "final_inner_iters"))
+def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers,
+                        outer_iters: int = 16, inner_iters: int = 6,
+                        final_inner_iters: int = 20):
     """Allocate bandwidth b[n] (Hz) per server budget.
 
     Args:
@@ -125,6 +165,9 @@ def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers):
       p, pol, mu: per-camera accuracy, policy, fixed computation rate.
       server_id: int[n] in [0, n_servers).
       budgets: float[n_servers] available Hz per server.
+      outer/inner/final_inner_iters: solver effort; the defaults reach
+        float32 accuracy, Algorithm 1 uses a cheaper setting for its
+        interior BCD iterations (only the final allocation must be tight).
     """
     B = budgets[server_id]
     lam_scale = k * B                    # lam at full budget
@@ -142,13 +185,19 @@ def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers):
         u = jnp.sqrt((1.0 + 1.0 / p) / jnp.maximum(lam_scale * nu, _EPS))
         return jnp.where(pol == aopi.LCFSP, u, jnp.nan)
 
-    u = _waterfill(h_fn, closed_form, lo, hi, server_id, n_servers)
+    u = _waterfill(h_fn, closed_form, lo, hi, server_id, n_servers,
+                   outer_iters=outer_iters, inner_iters=inner_iters,
+                   final_inner_iters=final_inner_iters)
     return u * B
 
 
-@functools.partial(jax.jit, static_argnames=("n_servers",))
+@functools.partial(jax.jit, static_argnames=("n_servers", "outer_iters",
+                                             "inner_iters",
+                                             "final_inner_iters"))
 def waterfill_compute(inv_xi, p, pol, lam, server_id, budgets, n_servers,
-                      stability_margin: float = 1.05):
+                      stability_margin: float = 1.05,
+                      outer_iters: int = 16, inner_iters: int = 6,
+                      final_inner_iters: int = 20):
     """Allocate computation c[n] (FLOPS) per server budget.
 
     Args:
@@ -175,7 +224,9 @@ def waterfill_compute(inv_xi, p, pol, lam, server_id, budgets, n_servers,
         v = jnp.sqrt(1.0 / jnp.maximum(p * mu_scale * nu, _EPS))
         return jnp.where(pol == aopi.LCFSP, v, jnp.nan)
 
-    v = _waterfill(h_fn, closed_form, lo, hi, server_id, n_servers)
+    v = _waterfill(h_fn, closed_form, lo, hi, server_id, n_servers,
+                   outer_iters=outer_iters, inner_iters=inner_iters,
+                   final_inner_iters=final_inner_iters)
     return v * C
 
 

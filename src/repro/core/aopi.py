@@ -32,8 +32,10 @@ def aopi_fcfs(lam, mu, p):
 
     Returns +inf where the M/M/1 queue is unstable (lam >= mu).
     """
-    lam, mu, p = jnp.asarray(lam, jnp.float64 if jax.config.jax_enable_x64
-                             else jnp.float32), jnp.asarray(mu), jnp.asarray(p)
+    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    lam = jnp.asarray(lam, dtype)
+    mu = jnp.asarray(mu, dtype)
+    p = jnp.asarray(p, dtype)
     stable = lam < mu
     # Evaluate on a clamped-safe lam to avoid nan grads from the masked branch.
     lam_s = jnp.where(stable, lam, 0.5 * mu)
@@ -166,7 +168,7 @@ def min_mu_for_target(target, lam, p, policy, hi: float = 1e6):
     return jnp.where(feasible, _bisect(gap, 1e-9, hi), jnp.inf)
 
 
-def argmin_lam_fcfs(mu, p, iters: int = 60):
+def argmin_lam_fcfs(mu, p, iters: int = 26):
     """Interior minimizer lam* of the convex A_F(lam) on (0, mu).
 
     Found by bisection on the (increasing) derivative. Corollary 4.1

@@ -5,16 +5,25 @@ computation policy and model are chosen via Theorem 3 given their own
 resolution / allocation decisions; DOS additionally shares LBCD's server
 selection. Evaluation (per-camera AoPI/accuracy) uses the same closed forms,
 so comparisons isolate the *decision* quality.
+
+Like LBCD, each baseline has two engines: a legacy per-slot ``step(t)`` and
+a device-resident whole-horizon rollout (``rollout_min`` / ``rollout_dos`` /
+``rollout_jcab`` — one jitted ``lax.scan`` over ``profiles.HorizonTables``,
+vmappable over stacked scenarios). ``BaselineController.run`` uses the scan
+engine and materializes the legacy ``RunSummary`` view.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import aopi, bcd, binpack
-from .lbcd import RunSummary, SlotRecord
-from .profiles import EdgeSystem
+from .lbcd import RolloutResult, RunSummary, SlotRecord, summarize
+from .profiles import EdgeSystem, HorizonTables
 
 
 def _evaluate(lam, mu, p, pol):
@@ -30,14 +39,152 @@ def _thm3_policy(lam, mu, p):
     return np.asarray(aopi.optimal_policy(lam, mu, p))
 
 
+# ---------------------------------------------------------------------------
+# Device-resident rollout engines (one lax.scan per horizon).
+# ---------------------------------------------------------------------------
+
+def _eval_decision(acc_t, xi, size, eff, r_idx, m_idx, b, c):
+    """Theorem-3 policy + closed-form AoPI for a fixed configuration (the
+    jit twin of ``_thm3_policy`` + ``_evaluate``)."""
+    n = acc_t.shape[0]
+    lam = b * eff / size[r_idx]
+    mu = c / xi[m_idx, r_idx]
+    p = acc_t[jnp.arange(n), m_idx, r_idx]
+    pol = aopi.optimal_policy(lam, mu, p)
+    lam_e = jnp.maximum(lam, 1e-9)
+    mu_e = jnp.maximum(mu, 1e-9)
+    a = jnp.where(pol == aopi.LCFSP, aopi.aopi_lcfsp(lam_e, mu_e, p),
+                  aopi.aopi_fcfs(lam_e, mu_e, p))
+    return bcd.SlotDecision(r_idx, m_idx, pol, b, c, lam, mu, p, a,
+                            jnp.mean(a))
+
+
+def _scan_result(step, tables: HorizonTables) -> RolloutResult:
+    _, (decs, assigns, qs) = jax.lax.scan(
+        step, jnp.float32(0.0),
+        (tables.acc, tables.budgets_b, tables.budgets_c))
+    return RolloutResult(aopi=decs.aopi, acc=decs.acc, q=qs, assign=assigns,
+                         decision=decs)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method",
+                                             "solver_effort"))
+def rollout_min(tables: HorizonTables, v=10.0, n_bcd_iters: int = 4,
+                method: str = "waterfill",
+                solver_effort: str = "fast") -> RolloutResult:
+    """MIN lower bound over the whole horizon: one pooled virtual server,
+    no accuracy queue (q == 0), as a single scan."""
+    n = tables.acc.shape[1]
+    virt_id = jnp.zeros((n,), jnp.int32)
+
+    def step(q, xs):
+        acc_t, bb, bc = xs
+        dec = bcd.solve_slot(acc_t, tables.xi, tables.size, tables.eff,
+                             virt_id, jnp.sum(bb)[None], jnp.sum(bc)[None],
+                             jnp.float32(0.0), v, n_servers=1,
+                             n_iters=n_bcd_iters, method=method,
+                             solver_effort=solver_effort)
+        return q, (dec, virt_id, q)
+
+    return _scan_result(step, tables)
+
+
+@jax.jit
+def rollout_dos(tables: HorizonTables, weight=1.0) -> RolloutResult:
+    """DOS over the whole horizon as a single scan (same per-slot math as
+    ``DOSController.step``, with the jit-safe first-fit)."""
+    n = tables.acc.shape[1]
+    n_servers = tables.budgets_b.shape[1]
+    xi, size, eff = tables.xi, tables.size, tables.eff
+    n_r = xi.shape[1]
+
+    def step(q, xs):
+        acc_t, bb, bc = xs
+        b0 = jnp.sum(bb) / n
+        c0 = jnp.sum(bc) / n
+        lam0 = b0 * eff[:, None, None] / size[None, None, :]
+        mu0 = c0 / xi[None, :, :]
+        latency = 1.0 / jnp.maximum(lam0, 1e-9) + 1.0 / jnp.maximum(mu0, 1e-9)
+        score = acc_t - weight * latency
+        best = jnp.argmax(score.reshape(n, -1), axis=1)
+        m_idx = (best // n_r).astype(jnp.int32)
+        r_idx = (best % n_r).astype(jnp.int32)
+
+        w_b = jnp.sqrt(size[r_idx] / eff)
+        w_c = jnp.sqrt(xi[m_idx, r_idx])
+        assign = binpack.first_fit_jax(w_b / w_b.sum() * jnp.sum(bb),
+                                       w_c / w_c.sum() * jnp.sum(bc), bb, bc)
+        den_b = jax.ops.segment_sum(w_b, assign, num_segments=n_servers)
+        den_c = jax.ops.segment_sum(w_c, assign, num_segments=n_servers)
+        b = bb[assign] * w_b / den_b[assign]
+        c = bc[assign] * w_c / den_c[assign]
+        dec = _eval_decision(acc_t, xi, size, eff, r_idx, m_idx, b, c)
+        return q, (dec, assign, q)
+
+    return _scan_result(step, tables)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rounds",))
+def rollout_jcab(tables: HorizonTables, latency_cap=0.5,
+                 n_rounds: int = 3) -> RolloutResult:
+    """JCAB over the whole horizon as a single scan (same per-slot math as
+    ``JCABController.step``; the round-robin assignment is static)."""
+    n = tables.acc.shape[1]
+    n_servers = tables.budgets_b.shape[1]
+    xi, size, eff = tables.xi, tables.size, tables.eff
+    n_r = xi.shape[1]
+    assign = (jnp.arange(n) % n_servers).astype(jnp.int32)
+    counts = jax.ops.segment_sum(jnp.ones((n,)), assign,
+                                 num_segments=n_servers)
+    share = (1.0 / jnp.maximum(counts, 1.0))[assign]
+
+    def step(q, xs):
+        acc_t, bb, bc = xs
+        b = bb[assign] * share
+        c = bc[assign] * share
+        m_idx = jnp.zeros((n,), jnp.int32)
+        r_idx = jnp.zeros((n,), jnp.int32)
+        for _ in range(n_rounds):
+            lam = b[:, None, None] * eff[:, None, None] / size[None, None, :]
+            mu = c[:, None, None] / xi[None, :, :]
+            latency = 1.0 / jnp.maximum(lam, 1e-9) + \
+                1.0 / jnp.maximum(mu, 1e-9)
+            ok = latency <= latency_cap
+            score = jnp.where(ok, acc_t, -jnp.inf)
+            best = jnp.argmax(score.reshape(n, -1), axis=1)
+            none_ok = ~ok.reshape(n, -1).any(axis=1)
+            fallback = jnp.argmin(latency.reshape(n, -1), axis=1)
+            best = jnp.where(none_ok, fallback, best)
+            m_idx = (best // n_r).astype(jnp.int32)
+            r_idx = (best % n_r).astype(jnp.int32)
+            size_n = size[r_idx]
+            xi_n = xi[m_idx, r_idx]
+            den_b = jax.ops.segment_sum(size_n, assign,
+                                        num_segments=n_servers)
+            den_c = jax.ops.segment_sum(xi_n, assign,
+                                        num_segments=n_servers)
+            b = bb[assign] * size_n / den_b[assign]
+            c = bc[assign] * xi_n / den_c[assign]
+        dec = _eval_decision(acc_t, xi, size, eff, r_idx, m_idx, b, c)
+        return q, (dec, assign, q)
+
+    return _scan_result(step, tables)
+
+
 @dataclasses.dataclass
 class BaselineController:
     system: EdgeSystem
     name: str = "base"
 
-    def run(self, n_slots: int) -> RunSummary:
+    def run(self, n_slots: int, engine: str = "scan") -> RunSummary:
+        if engine == "scan":
+            res = self._rollout(self.system.horizon(n_slots))
+            return summarize(res, v=0.0, p_min=0.0)
         records = [self.step(t) for t in range(n_slots)]
         return RunSummary(records, v=0.0, p_min=0.0)
+
+    def _rollout(self, tables: HorizonTables) -> RolloutResult:
+        raise NotImplementedError
 
 
 class MINController(BaselineController):
@@ -58,6 +205,19 @@ class MINController(BaselineController):
             np.array([budgets_c.sum()]), 0.0, self.v, n_servers=1, **self.kw)
         return SlotRecord(t=t, aopi=dec.aopi, acc=dec.acc, q=0.0,
                           assign=np.zeros(n, np.int32), decision=dec)
+
+    def _rollout(self, tables: HorizonTables) -> RolloutResult:
+        known = {"n_iters", "method", "solver_effort"}
+        unknown = set(self.kw) - known
+        if unknown:
+            raise TypeError(
+                f"MIN scan rollout does not support kwargs {sorted(unknown)};"
+                " use run(..., engine='legacy')")
+        return rollout_min(tables, self.v,
+                           n_bcd_iters=self.kw.get("n_iters", 4),
+                           method=self.kw.get("method", "waterfill"),
+                           solver_effort=self.kw.get("solver_effort",
+                                                     "fast"))
 
 
 class DOSController(BaselineController):
@@ -119,6 +279,9 @@ class DOSController(BaselineController):
                                np.float32(a.mean()))
         return SlotRecord(t=t, aopi=a, acc=p, q=0.0, assign=assign,
                           decision=dec)
+
+    def _rollout(self, tables: HorizonTables) -> RolloutResult:
+        return rollout_dos(tables, self.weight)
 
 
 class JCABController(BaselineController):
@@ -183,6 +346,10 @@ class JCABController(BaselineController):
                                np.float32(a.mean()))
         return SlotRecord(t=t, aopi=a, acc=p, q=0.0, assign=assign,
                           decision=dec)
+
+    def _rollout(self, tables: HorizonTables) -> RolloutResult:
+        return rollout_jcab(tables, self.latency_cap,
+                            n_rounds=self.n_rounds)
 
 
 def make(name: str, system: EdgeSystem, **kw):

@@ -71,10 +71,12 @@ def _config_step(b, c, acc, xi, size, eff, q, V, n):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_servers", "n_iters", "method"))
+                   static_argnames=("n_servers", "n_iters", "method",
+                                    "solver_effort"))
 def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
                n_servers: int, n_iters: int = 4,
-               method: Literal["waterfill", "interior"] = "waterfill"):
+               method: Literal["waterfill", "interior"] = "waterfill",
+               solver_effort: Literal["fast", "seed"] = "fast"):
     """Run Algorithm 1 and return a SlotDecision (of jnp arrays).
 
     Args:
@@ -85,6 +87,10 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
       server_id: [N]  camera -> server assignment (Algorithm 2's output).
       budgets_b/_c: [n_servers] available Hz / FLOPS.
       q, V: Lyapunov queue value and penalty weight.
+      solver_effort: "fast" (default) uses cheap water-filling effort inside
+        the BCD loop plus one full-precision re-allocation; "seed"
+        reproduces the pre-refactor flat high-iteration effort (kept for
+        benchmarks measuring what the rollout-stack rework bought).
     """
     n = acc.shape[0]
     counts = jax.ops.segment_sum(jnp.ones((n,)), server_id,
@@ -93,8 +99,18 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
     b = budgets_b[server_id] * share
     c = budgets_c[server_id] * share
 
-    if method == "waterfill":
-        fb, fc = allocate.waterfill_bandwidth, allocate.waterfill_compute
+    polish = method == "waterfill" and solver_effort == "fast"
+    if polish:
+        # Cheap solver effort inside the BCD loop (it only has to steer the
+        # discrete config selection); one accurate re-allocation afterwards.
+        cheap = dict(outer_iters=10, inner_iters=3, final_inner_iters=5)
+        fb = functools.partial(allocate.waterfill_bandwidth, **cheap)
+        fc = functools.partial(allocate.waterfill_compute, **cheap)
+    elif method == "waterfill":
+        # Pre-refactor effort: flat high-iteration water-filling each pass.
+        seed_kw = dict(outer_iters=54, inner_iters=40, final_inner_iters=40)
+        fb = functools.partial(allocate.waterfill_bandwidth, **seed_kw)
+        fc = functools.partial(allocate.waterfill_compute, **seed_kw)
     else:
         fb = allocate.interior_point_bandwidth
         fc = allocate.interior_point_compute
@@ -116,6 +132,17 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
     z = jnp.zeros((n,), jnp.int32)
     b, c, r_idx, m_idx, pol = jax.lax.fori_loop(
         0, n_iters, body, (b, c, z, z, z))
+
+    if polish:
+        # Lines 4-5 once more at full precision for the final configuration.
+        p = acc[jnp.arange(n), m_idx, r_idx]
+        k = eff / size[r_idx]
+        mu = c / xi[m_idx, r_idx]
+        b = allocate.waterfill_bandwidth(k, p, pol, mu, server_id,
+                                         budgets_b, n_servers)
+        c = allocate.waterfill_compute(1.0 / xi[m_idx, r_idx], p, pol,
+                                       b * k, server_id, budgets_c,
+                                       n_servers)
 
     lam, mu = _rates(b, c, r_idx, m_idx, eff, size, xi)
     p = acc[jnp.arange(n), m_idx, r_idx]

@@ -5,11 +5,18 @@ are sized by Eq. (56), servers by Eq. (57), both sorted descending, and each
 camera goes to the first server with enough remaining bandwidth AND compute;
 if none fits, to the server with most remaining volume (lines 4-9).
 
-Host-side numpy: placement is O(N S) with tiny constants and runs once per
-slot; it does not belong on the accelerator.
+Two implementations, semantically equivalent (asserted in tests):
+
+  * ``first_fit``     — host-side numpy reference; O(N S) with tiny
+    constants, used by the legacy per-slot controller path;
+  * ``first_fit_jax`` — jit-safe (sort + ``fori_loop``) variant traced
+    inside the ``lax.scan`` rollout engine so whole-horizon runs never
+    leave the device.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -51,6 +58,45 @@ def first_fit(b_hat: np.ndarray, c_hat: np.ndarray, budgets_b: np.ndarray,
             assign[n] = s
             rem_b[s] = max(rem_b[s] - b_hat[n], 0.0)
             rem_c[s] = max(rem_c[s] - c_hat[n], 0.0)
+    return assign
+
+
+def first_fit_jax(b_hat: jnp.ndarray, c_hat: jnp.ndarray,
+                  budgets_b: jnp.ndarray,
+                  budgets_c: jnp.ndarray) -> jnp.ndarray:
+    """Jit-safe Algorithm 2 placement, equivalent to ``first_fit``.
+
+    Cameras/servers are sorted by the Eq. (56)/(57) volumes, then a
+    ``fori_loop`` places one camera per iteration (vectorized over servers).
+    Traceable under jit/vmap/scan; returns int32[N] server ids.
+    """
+    b_hat = jnp.asarray(b_hat)
+    c_hat = jnp.asarray(c_hat)
+    budgets_b = jnp.asarray(budgets_b)
+    budgets_c = jnp.asarray(budgets_c)
+    tot_b = budgets_b.sum()
+    tot_c = budgets_c.sum()
+
+    phi = b_hat / tot_b + c_hat / tot_c                  # Eq. (56)
+    psi = budgets_b / tot_b + budgets_c / tot_c          # Eq. (57)
+    cam_order = jnp.argsort(-phi)                        # largest first
+    srv_order = jnp.argsort(-psi)
+
+    def body(i, state):
+        rem_b, rem_c, assign = state
+        n = cam_order[i]
+        bn, cn = b_hat[n], c_hat[n]
+        fits = (rem_b[srv_order] >= bn) & (rem_c[srv_order] >= cn)
+        s_fit = srv_order[jnp.argmax(fits)]              # first fit in order
+        rem_vol = rem_b / tot_b + rem_c / tot_c          # lines 6-8
+        s = jnp.where(fits.any(), s_fit, jnp.argmax(rem_vol))
+        rem_b = jnp.maximum(rem_b.at[s].add(-bn), 0.0)
+        rem_c = jnp.maximum(rem_c.at[s].add(-cn), 0.0)
+        return rem_b, rem_c, assign.at[n].set(s.astype(jnp.int32))
+
+    assign0 = jnp.zeros(b_hat.shape[0], jnp.int32)
+    _, _, assign = jax.lax.fori_loop(
+        0, b_hat.shape[0], body, (budgets_b, budgets_c, assign0))
     return assign
 
 

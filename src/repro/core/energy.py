@@ -17,16 +17,26 @@ constant added to the dual. ``EnergyAwareLBCD`` wires that shift into the
 config-selection grid and re-weights the virtual/real-server solves; the
 provable O(1/V) structure of Theorem 4 carries over unchanged (two queues
 instead of one in the same Lyapunov function).
+
+The whole-horizon path (``rollout_energy``) runs the two-queue controller as
+one jitted ``lax.scan``: per slot it vmaps the Algorithm-1 solve over the
+budget-scale ladder, picks the energy-augmented argmin, and updates both
+virtual queues on device. ``EnergyAwareLBCD.run`` uses it; ``step`` keeps the
+legacy host loop for the serving/failover control planes.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from . import bcd
-from .lbcd import LBCDController, SlotRecord
+from . import bcd, binpack, lyapunov
+from .lbcd import LBCDController, RolloutResult, SlotRecord, summarize
 from .lyapunov import VirtualQueue
+from .profiles import HorizonTables
 
 
 @dataclasses.dataclass
@@ -37,6 +47,68 @@ class EnergyModel:
 
     def power(self, b, c) -> np.ndarray:
         return self.kappa_tx * np.asarray(b) + self.kappa_c * np.asarray(c)
+
+
+@functools.partial(jax.jit, static_argnames=("n_scales", "n_bcd_iters",
+                                             "method", "solver_effort"))
+def rollout_energy(tables: HorizonTables, v, p_min, kappa_tx, kappa_c,
+                   e_max, q0=0.0, z0=0.0, n_scales: int = 13,
+                   scale_base: float = 0.75, n_bcd_iters: int = 4,
+                   method: str = "waterfill",
+                   solver_effort: str = "fast"):
+    """Whole-horizon two-queue (accuracy + energy) LBCD as one scan.
+
+    Per slot, both Algorithm-1 solves are vmapped over the budget-scale
+    ladder ``scale_base ** [0..n_scales)`` and the energy-augmented score
+    ``dec.score + z * power`` picks the winner (ties resolve to the largest
+    scale, matching the legacy z == 0 behaviour). While the energy queue is
+    empty (z == 0) the ladder collapses to the single full-budget solve via
+    ``lax.cond``, so a slack energy budget costs the same as plain LBCD.
+
+    Returns ``(RolloutResult, power[T], z[T])``.
+    """
+    n = tables.acc.shape[1]
+    n_servers = tables.budgets_b.shape[1]
+    virt_id = jnp.zeros((n,), jnp.int32)
+    scales = scale_base ** jnp.arange(n_scales, dtype=jnp.float32)
+    solve = functools.partial(bcd.solve_slot, n_iters=n_bcd_iters,
+                              method=method, solver_effort=solver_effort)
+
+    def solve_scaled(acc_t, assign, bb, bc, q, z, n_srv):
+        def at_scale(s):
+            dec = solve(acc_t, tables.xi, tables.size, tables.eff, assign,
+                        bb * s, bc * s, q, v, n_servers=n_srv)
+            power = jnp.mean(kappa_tx * dec.b + kappa_c * dec.c)
+            return dec, power, dec.score + z * power
+
+        def ladder(_):
+            decs, powers, scores = jax.vmap(at_scale)(scales)
+            i = jnp.argmin(scores)
+            return jax.tree.map(lambda x: x[i], decs), powers[i]
+
+        def single(_):
+            dec, power, _ = at_scale(jnp.float32(1.0))
+            return dec, power
+
+        return jax.lax.cond(z > 0.0, ladder, single, None)
+
+    def step(carry, xs):
+        q, z = carry
+        acc_t, bb, bc = xs
+        virt, _ = solve_scaled(acc_t, virt_id, jnp.sum(bb)[None],
+                               jnp.sum(bc)[None], q, z, 1)
+        assign = binpack.first_fit_jax(virt.b, virt.c, bb, bc)
+        dec, power = solve_scaled(acc_t, assign, bb, bc, q, z, n_servers)
+        q_next = lyapunov.queue_update(q, jnp.mean(dec.acc), p_min)
+        z_next = jnp.maximum(z - e_max + power, 0.0)
+        return (q_next, z_next), (dec, assign, q_next, z_next, power)
+
+    carry0 = (jnp.asarray(q0, jnp.float32), jnp.asarray(z0, jnp.float32))
+    _, (decs, assigns, qs, zs, powers) = jax.lax.scan(
+        step, carry0, (tables.acc, tables.budgets_b, tables.budgets_c))
+    res = RolloutResult(aopi=decs.aopi, acc=decs.acc, q=qs, assign=assigns,
+                        decision=decs)
+    return res, powers, zs
 
 
 class EnergyAwareLBCD(LBCDController):
@@ -69,7 +141,8 @@ class EnergyAwareLBCD(LBCDController):
             dec = bcd.solve_slot_np(
                 tables, assign, budgets_b * s, budgets_c * s,
                 self.queue.q, self.v, n_servers=len(budgets_b),
-                n_iters=self.n_bcd_iters, method=self.method)
+                n_iters=self.n_bcd_iters, method=self.method,
+                solver_effort=self.solver_effort)
             power = e.power(dec.b, dec.c).mean()
             score = float(dec.score) + z * power
             if best is None or score < best[0]:
@@ -98,3 +171,26 @@ class EnergyAwareLBCD(LBCDController):
         rec.power = power
         rec.z = self.z_queue.q
         return rec
+
+    def run(self, n_slots: int, engine: str = "scan"):
+        """Whole-horizon run on the scan engine (two queues carried on
+        device); records gain ``.power`` / ``.z`` like the legacy path."""
+        if engine != "scan" or self.assign_fn is not binpack.first_fit:
+            records = [self.step(t) for t in range(n_slots)]
+            from .lbcd import RunSummary
+            return RunSummary(records, self.v, self.queue.p_min)
+        tables = self.system.horizon(n_slots)
+        e = self.energy
+        res, powers, zs = rollout_energy(
+            tables, self.v, self.queue.p_min, e.kappa_tx, e.kappa_c,
+            e.e_max, q0=self.queue.q, z0=self.z_queue.q,
+            n_bcd_iters=self.n_bcd_iters, method=self.method,
+            solver_effort=self.solver_effort)
+        self.queue.q = float(res.q[-1])
+        self.z_queue.q = float(zs[-1])
+        summary = summarize(res, self.v, self.queue.p_min)
+        for rec, power, z in zip(summary.records, np.asarray(powers),
+                                 np.asarray(zs)):
+            rec.power = float(power)
+            rec.z = float(z)
+        return summary

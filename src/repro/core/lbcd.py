@@ -1,4 +1,4 @@
-"""Algorithm 3 — the LBCD online controller.
+"""Algorithm 3 — the LBCD online controller and its scan rollout engine.
 
 Per slot t (paper §V-D):
   1. observe capacities (B_t^s, C_t^s) and profile zeta_n^t;
@@ -6,20 +6,38 @@ Per slot t (paper §V-D):
      Algorithm 1 per real server);
   3. update the virtual accuracy queue q(t+1) (Eq. 44).
 
-The controller is model-free w.r.t. the future (Lyapunov), and its per-slot
-cost is dominated by two jitted Algorithm-1 solves (see
-benchmarks/bench_overhead.py for the Fig.-12 analog).
+Two execution engines share the same per-slot math:
+
+  * ``rollout(tables, v, p_min)`` — the device-resident engine. A full
+    T-slot run is **one jitted ``lax.scan``** over a pregenerated
+    ``profiles.HorizonTables`` pytree: virtual-server solve -> jit-safe
+    first-fit -> per-server solve -> Eq. 44 queue update, all on device,
+    with zero per-slot host round trips. Pure in (tables, v, p_min, q0), so
+    it vmaps over hyperparameter grids (``rollout_grid``) and over stacked
+    same-shape scenarios (``rollout_scenarios``) — the substrate for every
+    benchmark sweep and the future pmap/multi-fleet scale-out.
+
+  * ``LBCDController`` — the stateful per-slot wrapper kept for the
+    serving/failover control planes (they need ``step(t)`` against live,
+    mutable capacities). ``run()`` delegates to the scan engine and
+    materializes the legacy ``RunSummary``/``SlotRecord`` views; a custom
+    ``assign_fn`` falls back to the per-slot python loop.
+
+``benchmarks/bench_rollout.py`` measures engine vs legacy slots/sec.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from . import bcd, binpack
+from . import bcd, binpack, lyapunov
 from .lyapunov import VirtualQueue
-from .profiles import EdgeSystem
+from .profiles import EdgeSystem, HorizonTables
 
 
 @dataclasses.dataclass
@@ -67,6 +85,115 @@ class RunSummary:
         return np.array([r.q for r in self.records])
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RolloutResult:
+    """Stacked per-slot outputs of one scan rollout (leading axis = slot;
+    extra leading axes appear under vmap)."""
+    aopi: jnp.ndarray         # [T, N] per-camera closed-form AoPI
+    acc: jnp.ndarray          # [T, N] per-camera accuracy
+    q: jnp.ndarray            # [T]    virtual queue after the Eq. 44 update
+    assign: jnp.ndarray       # [T, N] camera -> server
+    decision: bcd.SlotDecision  # all fields stacked [T, ...]
+
+    @property
+    def mean_aopi(self) -> float:
+        return float(jnp.mean(self.aopi))
+
+    @property
+    def mean_acc(self) -> float:
+        return float(jnp.mean(self.acc))
+
+    @property
+    def aopi_series(self) -> np.ndarray:
+        return np.asarray(self.aopi.mean(axis=-1))
+
+    @property
+    def acc_series(self) -> np.ndarray:
+        return np.asarray(self.acc.mean(axis=-1))
+
+    @property
+    def q_series(self) -> np.ndarray:
+        return np.asarray(self.q)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method",
+                                             "solver_effort"))
+def rollout(tables: HorizonTables, v, p_min, q0=0.0,
+            n_bcd_iters: int = 4, method: str = "waterfill",
+            solver_effort: str = "fast") -> RolloutResult:
+    """Run Algorithm 3 for all T slots as one jitted ``lax.scan``.
+
+    Args:
+      tables: whole-horizon profiles/capacities (``EdgeSystem.horizon()``).
+      v, p_min: Lyapunov penalty weight and accuracy floor (traced scalars,
+        so the function vmaps over hyperparameter grids).
+      q0: initial virtual-queue value.
+    Returns a ``RolloutResult`` of device arrays.
+    """
+    n = tables.acc.shape[1]
+    n_servers = tables.budgets_b.shape[1]
+    virt_id = jnp.zeros((n,), jnp.int32)
+    solve = functools.partial(bcd.solve_slot, n_iters=n_bcd_iters,
+                              method=method, solver_effort=solver_effort)
+
+    def step(q, xs):
+        acc_t, bb, bc = xs
+        # Algorithm 2 lines 1-2: virtual-server ideal demands.
+        virt = solve(acc_t, tables.xi, tables.size, tables.eff, virt_id,
+                     jnp.sum(bb)[None], jnp.sum(bc)[None], q, v, n_servers=1)
+        # Algorithm 2 lines 3-9: first-fit placement (jit-safe).
+        assign = binpack.first_fit_jax(virt.b, virt.c, bb, bc)
+        # Algorithm 2 line 10: re-solve per real server.
+        dec = solve(acc_t, tables.xi, tables.size, tables.eff, assign,
+                    bb, bc, q, v, n_servers=n_servers)
+        q_next = lyapunov.queue_update(q, jnp.mean(dec.acc), p_min)  # Eq. 44
+        return q_next, (dec, assign, q_next)
+
+    _, (decs, assigns, qs) = jax.lax.scan(
+        step, jnp.asarray(q0, jnp.float32),
+        (tables.acc, tables.budgets_b, tables.budgets_c))
+    return RolloutResult(aopi=decs.aopi, acc=decs.acc, q=qs, assign=assigns,
+                         decision=decs)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method"))
+def rollout_grid(tables: HorizonTables, v, p_min, q0=0.0,
+                 n_bcd_iters: int = 4,
+                 method: str = "waterfill") -> RolloutResult:
+    """One vmapped call over a (V, P_min) hyperparameter grid.
+
+    ``v``/``p_min`` are 1-D arrays of equal length G; returns a
+    ``RolloutResult`` with leading axis G."""
+    fn = functools.partial(rollout, n_bcd_iters=n_bcd_iters, method=method)
+    return jax.vmap(fn, in_axes=(None, 0, 0, None))(
+        tables, jnp.asarray(v), jnp.asarray(p_min), q0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method"))
+def rollout_scenarios(tables: HorizonTables, v, p_min, q0=0.0,
+                      n_bcd_iters: int = 4,
+                      method: str = "waterfill") -> RolloutResult:
+    """One vmapped call over stacked same-shape scenarios
+    (``profiles.stack_horizons``); shared scalar hyperparameters."""
+    fn = functools.partial(rollout, n_bcd_iters=n_bcd_iters, method=method)
+    return jax.vmap(fn, in_axes=(0, None, None, None))(
+        tables, v, p_min, q0)
+
+
+def summarize(res: RolloutResult, v: float, p_min: float) -> RunSummary:
+    """Materialize a scan rollout into the legacy RunSummary/SlotRecord
+    views (one host transfer for the whole horizon)."""
+    res = jax.tree.map(np.asarray, res)
+    records = [
+        SlotRecord(t=t, aopi=res.aopi[t], acc=res.acc[t],
+                   q=float(res.q[t]), assign=res.assign[t],
+                   decision=jax.tree.map(lambda x, t=t: x[t], res.decision))
+        for t in range(res.aopi.shape[0])
+    ]
+    return RunSummary(records, v, p_min)
+
+
 class LBCDController:
     """The paper's controller; also reused as the serving-runtime planner
     (repro.serving.service) and the island-failover mechanism
@@ -75,13 +202,15 @@ class LBCDController:
     def __init__(self, system: EdgeSystem, v: float = 10.0,
                  p_min: float = 0.7, n_bcd_iters: int = 4,
                  method: str = "waterfill",
-                 assign_fn: Optional[Callable] = None):
+                 assign_fn: Optional[Callable] = None,
+                 solver_effort: str = "fast"):
         self.system = system
         self.v = v
         self.queue = VirtualQueue(p_min=p_min)
         self.n_bcd_iters = n_bcd_iters
         self.method = method
         self.assign_fn = assign_fn or binpack.first_fit
+        self.solver_effort = solver_effort
 
     def step(self, t: int, tables=None) -> SlotRecord:
         sys = self.system
@@ -94,7 +223,7 @@ class LBCDController:
             tables, np.zeros(n, np.int32),
             np.array([budgets_b.sum()]), np.array([budgets_c.sum()]),
             self.queue.q, self.v, n_servers=1, n_iters=self.n_bcd_iters,
-            method=self.method)
+            method=self.method, solver_effort=self.solver_effort)
 
         # --- Algorithm 2 lines 3-9: first-fit placement.
         assign = self.assign_fn(virt.b, virt.c, budgets_b, budgets_c)
@@ -103,12 +232,25 @@ class LBCDController:
         dec = bcd.solve_slot_np(
             tables, assign, budgets_b, budgets_c, self.queue.q, self.v,
             n_servers=len(budgets_b), n_iters=self.n_bcd_iters,
-            method=self.method)
+            method=self.method, solver_effort=self.solver_effort)
 
         q = self.queue.update(float(np.mean(dec.acc)))    # Alg. 3 line 5
         return SlotRecord(t=t, aopi=dec.aopi, acc=dec.acc, q=q,
                           assign=assign, decision=dec)
 
-    def run(self, n_slots: int) -> RunSummary:
+    def run(self, n_slots: int, engine: str = "scan") -> RunSummary:
+        """Roll the controller forward ``n_slots`` slots.
+
+        ``engine="scan"`` (default) pregenerates the horizon and runs the
+        device-resident ``rollout``; ``engine="legacy"`` keeps the per-slot
+        python loop. A custom ``assign_fn`` forces the legacy path (the scan
+        engine is specialized to first-fit)."""
+        if engine == "scan" and self.assign_fn is binpack.first_fit:
+            tables = self.system.horizon(n_slots)
+            res = rollout(tables, self.v, self.queue.p_min, q0=self.queue.q,
+                          n_bcd_iters=self.n_bcd_iters, method=self.method,
+                          solver_effort=self.solver_effort)
+            self.queue.q = float(res.q[-1])
+            return summarize(res, self.v, self.queue.p_min)
         records = [self.step(t) for t in range(n_slots)]
         return RunSummary(records, self.v, self.queue.p_min)

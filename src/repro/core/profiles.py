@@ -1,5 +1,14 @@
 """Accuracy / complexity / workload profiles (paper §III + §VI-A).
 
+Two consumption granularities are provided:
+
+  * ``EdgeSystem.tables(t)``   — one slot's profiles as host numpy arrays
+    (the legacy per-slot path used by ``LBCDController.step``);
+  * ``EdgeSystem.horizon(T)``  — a whole-horizon ``HorizonTables`` pytree
+    (acc ``[T, N, M, R]``, capacity traces ``[T, S]``) built once on host
+    and moved to device once, consumed by the ``lax.scan`` rollout engine
+    (``repro.core.lbcd.rollout``) with zero per-slot host round trips.
+
 Provides the substrate the controller consumes each slot:
   * zeta(r, m)  — concave, monotone-increasing recognition-accuracy profile
                   per (resolution, model), with per-slot content drift
@@ -21,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 RESOLUTIONS = (384, 512, 640, 768, 896, 1024)
@@ -120,6 +131,56 @@ class SlotTables:
         return self.acc.shape[0]
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HorizonTables:
+    """Whole-horizon profiles + capacity traces as one device-resident pytree.
+
+    Built once on host (``EdgeSystem.horizon``) and consumed by the
+    ``lax.scan`` rollout engine; vmappable over a leading batch axis (e.g. a
+    stack of scenarios with identical shapes).
+
+    Shapes: T slots, N cameras, M models, R resolutions, S servers.
+      acc[t, n, m, r]   profiled accuracy zeta_n^t (drift applied per slot)
+      xi[m, r]          FLOPs per frame
+      size[r]           bits per frame
+      eff[n]            link spectral efficiency (bits/s/Hz)
+      budgets_b[t, s]   bandwidth capacity trace B_t^s (Hz)
+      budgets_c[t, s]   compute capacity trace C_t^s (FLOPS)
+    """
+    acc: jnp.ndarray
+    xi: jnp.ndarray
+    size: jnp.ndarray
+    eff: jnp.ndarray
+    budgets_b: jnp.ndarray
+    budgets_c: jnp.ndarray
+
+    @property
+    def n_slots(self) -> int:
+        return self.acc.shape[-4]
+
+    @property
+    def n_cameras(self) -> int:
+        return self.acc.shape[-3]
+
+    @property
+    def n_servers(self) -> int:
+        return self.budgets_b.shape[-1]
+
+    def slot(self, t: int) -> SlotTables:
+        """One slot's profiles as host numpy (legacy SlotTables view)."""
+        return SlotTables(acc=np.asarray(self.acc[t]),
+                          xi=np.asarray(self.xi),
+                          size=np.asarray(self.size),
+                          eff=np.asarray(self.eff))
+
+
+def stack_horizons(tables: Sequence[HorizonTables]) -> HorizonTables:
+    """Stack same-shape horizons along a new leading axis for vmapped
+    rollouts (e.g. one scenario per swept bandwidth level)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
+
+
 @dataclasses.dataclass
 class EdgeSystem:
     """Scenario container: cameras, servers, traces, profiles (§VI-A)."""
@@ -188,3 +249,31 @@ class EdgeSystem:
     def capacities(self, t: int) -> tuple[np.ndarray, np.ndarray]:
         t = t % self.n_slots
         return self.bandwidth_trace[t], self.compute_trace[t]
+
+    def horizon(self, n_slots: int | None = None,
+                dtype=jnp.float32) -> HorizonTables:
+        """Pregenerate ``n_slots`` of profiles + capacities as one pytree.
+
+        Advances the same stateful drift RNG ``tables(t)`` would, so a scan
+        rollout over the result reproduces what ``n_slots`` sequential
+        ``step(t)`` calls (t = 0..n_slots-1) would have observed.
+        """
+        n_slots = self.n_slots if n_slots is None else n_slots
+        drift = np.stack([self.advance_drift().copy()
+                          for _ in range(n_slots)])            # [T, N]
+        res = np.asarray(self.resolutions, np.float64)
+        zr = np.stack([m.zeta(res) for m in self.pool])        # [M, R]
+        xi = np.stack([m.xi(res) for m in self.pool])          # [M, R]
+        acc = (self._difficulty[None, :] * drift)[:, :, None, None] * \
+            zr[None, None, :, :]                               # [T, N, M, R]
+        acc = np.clip(acc, 1e-3, 1.0)
+        size = self.alpha * res**2
+        eff = shannon_efficiency(self.snr_db)
+        idx = np.arange(n_slots) % self.n_slots
+        return HorizonTables(
+            acc=jnp.asarray(acc, dtype),
+            xi=jnp.asarray(xi, dtype),
+            size=jnp.asarray(size, dtype),
+            eff=jnp.asarray(eff, dtype),
+            budgets_b=jnp.asarray(self.bandwidth_trace[idx], dtype),
+            budgets_c=jnp.asarray(self.compute_trace[idx], dtype))

@@ -2,7 +2,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import allocate, aopi
 
@@ -117,26 +116,36 @@ def test_waterfill_beats_equal_split():
         _obj_bandwidth(eq, k, p, pol, mu) + 1e-6
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(2, 12), st.integers(0, 10_000))
-def test_property_budget_and_positivity(n, seed):
-    k, p, pol, mu, sid, B = _setup(n, 2, seed=seed)
-    b = np.asarray(allocate.waterfill_bandwidth(
-        k, p, pol, mu, sid, B, n_servers=2))
-    assert np.isfinite(b).all() and (b >= 0).all()
-    for s in range(2):
-        m = np.asarray(sid) == s
-        if m.any():
-            assert b[m].sum() <= float(B[s]) * 1.005
+def test_property_budget_and_positivity():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 12), st.integers(0, 10_000))
+    def inner(n, seed):
+        k, p, pol, mu, sid, B = _setup(n, 2, seed=seed)
+        b = np.asarray(allocate.waterfill_bandwidth(
+            k, p, pol, mu, sid, B, n_servers=2))
+        assert np.isfinite(b).all() and (b >= 0).all()
+        for s in range(2):
+            m = np.asarray(sid) == s
+            if m.any():
+                assert b[m].sum() <= float(B[s]) * 1.005
+    inner()
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 10_000))
-def test_property_more_budget_never_hurts(seed):
+def test_property_more_budget_never_hurts():
     """Objective is monotone non-increasing in the budget."""
-    k, p, pol, mu, sid, B = _setup(6, 1, seed=seed, lcfsp_frac=1.0)
-    b1 = allocate.waterfill_bandwidth(k, p, pol, mu, sid, B, n_servers=1)
-    b2 = allocate.waterfill_bandwidth(k, p, pol, mu, sid, B * 2.0,
-                                      n_servers=1)
-    assert _obj_bandwidth(b2, k, p, pol, mu) <= \
-        _obj_bandwidth(b1, k, p, pol, mu) * 1.001
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10_000))
+    def inner(seed):
+        k, p, pol, mu, sid, B = _setup(6, 1, seed=seed, lcfsp_frac=1.0)
+        b1 = allocate.waterfill_bandwidth(k, p, pol, mu, sid, B, n_servers=1)
+        b2 = allocate.waterfill_bandwidth(k, p, pol, mu, sid, B * 2.0,
+                                          n_servers=1)
+        assert _obj_bandwidth(b2, k, p, pol, mu) <= \
+            _obj_bandwidth(b1, k, p, pol, mu) * 1.001
+    inner()

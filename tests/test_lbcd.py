@@ -121,6 +121,7 @@ def test_interior_point_method_end_to_end():
 def test_first_fit_property_never_overflows_when_feasible():
     """Property: whenever a feasible packing exists for first-fit's greedy
     order, no server exceeds capacity."""
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=30, deadline=None)

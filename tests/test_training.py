@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro import configs
 from repro.models import build
@@ -66,22 +65,27 @@ def test_split_microbatches_shapes():
     assert out["tokens"].shape == (4, 2, 16)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 1000), st.sampled_from([64, 256]))
-def test_quantization_error_bound(seed, block):
+def test_quantization_error_bound():
     """Blockwise int8: |x - dq(q(x))| <= scale/2 = max|block|/254."""
-    rng = np.random.default_rng(seed)
-    x = jnp.asarray(rng.normal(0, rng.uniform(0.1, 10), size=300),
-                    jnp.float32)
-    y = compression.roundtrip(x, block=block)
-    blocks = np.asarray(x)
-    err = np.abs(np.asarray(y) - blocks)
-    # per-element bound: half an int8 step of its block scale
-    pad = (-len(blocks)) % block
-    bl = np.pad(blocks, (0, pad)).reshape(-1, block)
-    scale = np.abs(bl).max(1, keepdims=True) / 127.0
-    bound = np.repeat(scale / 2 + 1e-7, block, 1).reshape(-1)[:len(blocks)]
-    assert (err <= bound + 1e-6).all()
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 1000), st.sampled_from([64, 256]))
+    def inner(seed, block):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0, rng.uniform(0.1, 10), size=300),
+                        jnp.float32)
+        y = compression.roundtrip(x, block=block)
+        blocks = np.asarray(x)
+        err = np.abs(np.asarray(y) - blocks)
+        # per-element bound: half an int8 step of its block scale
+        pad = (-len(blocks)) % block
+        bl = np.pad(blocks, (0, pad)).reshape(-1, block)
+        scale = np.abs(bl).max(1, keepdims=True) / 127.0
+        bound = np.repeat(scale / 2 + 1e-7, block, 1).reshape(-1)[:len(blocks)]
+        assert (err <= bound + 1e-6).all()
+    inner()
 
 
 def test_compressed_psum_matches_mean():
