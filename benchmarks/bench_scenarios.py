@@ -1,0 +1,42 @@
+"""Scenario-suite robustness + throughput (BENCH_scenarios).
+
+Runs the full registered scenario suite through every policy (LBCD + the
+MIN/DOS/JCAB baselines) with ``repro.scenarios.sweep`` — shard_map across
+devices when more than one is visible, vmap otherwise — and emits one row
+per (scenario, policy): mean / p95 / worst-slot AoPI, mean accuracy, and
+the policy's sweep throughput in scenario-slots/sec (K * T / wall-clock,
+compile excluded).
+"""
+import jax
+
+from repro import scenarios
+
+from .common import emit, timer
+
+
+def run(full: bool = False):
+    n_cameras = 24 if full else 10
+    n_slots = 96 if full else 24
+    suite = scenarios.suite(n_cameras=n_cameras, n_slots=n_slots,
+                            n_servers=3)
+    k = suite.n_scenarios
+    rows = []
+    for policy in scenarios.POLICIES:
+        scenarios.sweep(suite, policies=(policy,))           # compile
+        with timer() as t:
+            res = scenarios.sweep(suite, policies=(policy,))
+        sps = k * n_slots / t.elapsed
+        mean = res.mean_aopi(policy)
+        p95 = res.pct_aopi(policy, 95.0)
+        worst = res.worst_aopi(policy)
+        acc = res.mean_acc(policy)
+        for i, name in enumerate(suite.names):
+            rows.append([name, suite.families[i], policy,
+                         float(mean[i]), float(p95[i]), float(worst[i]),
+                         float(acc[i]), sps])
+    print(f"# suite: {k} scenarios x {n_slots} slots x {n_cameras} cameras"
+          f" on {len(jax.devices())} device(s) ({res.backend})")
+    emit("BENCH_scenarios", rows,
+         ["scenario", "family", "policy", "mean_aopi", "p95_aopi",
+          "worst_aopi", "mean_acc", "slots_per_sec"])
+    return rows

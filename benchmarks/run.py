@@ -11,7 +11,7 @@ import time
 from . import (bench_bandwidth, bench_cameras, bench_compute,
                bench_energy, bench_frontier, bench_hyperparams,
                bench_overhead, bench_policy, bench_rollout,
-               bench_validation)
+               bench_scenarios, bench_validation)
 
 ALL = {
     "fig14_15_validation": bench_validation.run,
@@ -24,6 +24,7 @@ ALL = {
     "fig12_overhead": bench_overhead.run,
     "beyond_energy": bench_energy.run,
     "scaleout_rollout": bench_rollout.run,
+    "BENCH_scenarios": bench_scenarios.run,
 }
 
 

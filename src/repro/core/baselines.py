@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import aopi, bcd, binpack
+from . import aopi, bcd, binpack, profiles
 from .lbcd import RolloutResult, RunSummary, SlotRecord, summarize
 from .profiles import EdgeSystem, HorizonTables
 
@@ -62,7 +62,8 @@ def _eval_decision(acc_t, xi, size, eff, r_idx, m_idx, b, c):
 def _scan_result(step, tables: HorizonTables) -> RolloutResult:
     _, (decs, assigns, qs) = jax.lax.scan(
         step, jnp.float32(0.0),
-        (tables.acc, tables.budgets_b, tables.budgets_c))
+        (tables.acc, profiles.eff_sequence(tables),
+         tables.budgets_b, tables.budgets_c))
     return RolloutResult(aopi=decs.aopi, acc=decs.acc, q=qs, assign=assigns,
                          decision=decs)
 
@@ -78,8 +79,8 @@ def rollout_min(tables: HorizonTables, v=10.0, n_bcd_iters: int = 4,
     virt_id = jnp.zeros((n,), jnp.int32)
 
     def step(q, xs):
-        acc_t, bb, bc = xs
-        dec = bcd.solve_slot(acc_t, tables.xi, tables.size, tables.eff,
+        acc_t, eff_t, bb, bc = xs
+        dec = bcd.solve_slot(acc_t, tables.xi, tables.size, eff_t,
                              virt_id, jnp.sum(bb)[None], jnp.sum(bc)[None],
                              jnp.float32(0.0), v, n_servers=1,
                              n_iters=n_bcd_iters, method=method,
@@ -95,14 +96,14 @@ def rollout_dos(tables: HorizonTables, weight=1.0) -> RolloutResult:
     ``DOSController.step``, with the jit-safe first-fit)."""
     n = tables.acc.shape[1]
     n_servers = tables.budgets_b.shape[1]
-    xi, size, eff = tables.xi, tables.size, tables.eff
+    xi, size = tables.xi, tables.size
     n_r = xi.shape[1]
 
     def step(q, xs):
-        acc_t, bb, bc = xs
+        acc_t, eff_t, bb, bc = xs
         b0 = jnp.sum(bb) / n
         c0 = jnp.sum(bc) / n
-        lam0 = b0 * eff[:, None, None] / size[None, None, :]
+        lam0 = b0 * eff_t[:, None, None] / size[None, None, :]
         mu0 = c0 / xi[None, :, :]
         latency = 1.0 / jnp.maximum(lam0, 1e-9) + 1.0 / jnp.maximum(mu0, 1e-9)
         score = acc_t - weight * latency
@@ -110,7 +111,7 @@ def rollout_dos(tables: HorizonTables, weight=1.0) -> RolloutResult:
         m_idx = (best // n_r).astype(jnp.int32)
         r_idx = (best % n_r).astype(jnp.int32)
 
-        w_b = jnp.sqrt(size[r_idx] / eff)
+        w_b = jnp.sqrt(size[r_idx] / eff_t)
         w_c = jnp.sqrt(xi[m_idx, r_idx])
         assign = binpack.first_fit_jax(w_b / w_b.sum() * jnp.sum(bb),
                                        w_c / w_c.sum() * jnp.sum(bc), bb, bc)
@@ -118,7 +119,7 @@ def rollout_dos(tables: HorizonTables, weight=1.0) -> RolloutResult:
         den_c = jax.ops.segment_sum(w_c, assign, num_segments=n_servers)
         b = bb[assign] * w_b / den_b[assign]
         c = bc[assign] * w_c / den_c[assign]
-        dec = _eval_decision(acc_t, xi, size, eff, r_idx, m_idx, b, c)
+        dec = _eval_decision(acc_t, xi, size, eff_t, r_idx, m_idx, b, c)
         return q, (dec, assign, q)
 
     return _scan_result(step, tables)
@@ -131,7 +132,7 @@ def rollout_jcab(tables: HorizonTables, latency_cap=0.5,
     ``JCABController.step``; the round-robin assignment is static)."""
     n = tables.acc.shape[1]
     n_servers = tables.budgets_b.shape[1]
-    xi, size, eff = tables.xi, tables.size, tables.eff
+    xi, size = tables.xi, tables.size
     n_r = xi.shape[1]
     assign = (jnp.arange(n) % n_servers).astype(jnp.int32)
     counts = jax.ops.segment_sum(jnp.ones((n,)), assign,
@@ -139,13 +140,14 @@ def rollout_jcab(tables: HorizonTables, latency_cap=0.5,
     share = (1.0 / jnp.maximum(counts, 1.0))[assign]
 
     def step(q, xs):
-        acc_t, bb, bc = xs
+        acc_t, eff_t, bb, bc = xs
         b = bb[assign] * share
         c = bc[assign] * share
         m_idx = jnp.zeros((n,), jnp.int32)
         r_idx = jnp.zeros((n,), jnp.int32)
         for _ in range(n_rounds):
-            lam = b[:, None, None] * eff[:, None, None] / size[None, None, :]
+            lam = b[:, None, None] * eff_t[:, None, None] / \
+                size[None, None, :]
             mu = c[:, None, None] / xi[None, :, :]
             latency = 1.0 / jnp.maximum(lam, 1e-9) + \
                 1.0 / jnp.maximum(mu, 1e-9)
@@ -165,7 +167,7 @@ def rollout_jcab(tables: HorizonTables, latency_cap=0.5,
                                         num_segments=n_servers)
             b = bb[assign] * size_n / den_b[assign]
             c = bc[assign] * xi_n / den_c[assign]
-        dec = _eval_decision(acc_t, xi, size, eff, r_idx, m_idx, b, c)
+        dec = _eval_decision(acc_t, xi, size, eff_t, r_idx, m_idx, b, c)
         return q, (dec, assign, q)
 
     return _scan_result(step, tables)

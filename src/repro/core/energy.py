@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import bcd, binpack, lyapunov
+from . import bcd, binpack, lyapunov, profiles
 from .lbcd import LBCDController, RolloutResult, SlotRecord, summarize
 from .lyapunov import VirtualQueue
 from .profiles import HorizonTables
@@ -74,9 +74,9 @@ def rollout_energy(tables: HorizonTables, v, p_min, kappa_tx, kappa_c,
     solve = functools.partial(bcd.solve_slot, n_iters=n_bcd_iters,
                               method=method, solver_effort=solver_effort)
 
-    def solve_scaled(acc_t, assign, bb, bc, q, z, n_srv):
+    def solve_scaled(acc_t, eff_t, assign, bb, bc, q, z, n_srv):
         def at_scale(s):
-            dec = solve(acc_t, tables.xi, tables.size, tables.eff, assign,
+            dec = solve(acc_t, tables.xi, tables.size, eff_t, assign,
                         bb * s, bc * s, q, v, n_servers=n_srv)
             power = jnp.mean(kappa_tx * dec.b + kappa_c * dec.c)
             return dec, power, dec.score + z * power
@@ -94,18 +94,20 @@ def rollout_energy(tables: HorizonTables, v, p_min, kappa_tx, kappa_c,
 
     def step(carry, xs):
         q, z = carry
-        acc_t, bb, bc = xs
-        virt, _ = solve_scaled(acc_t, virt_id, jnp.sum(bb)[None],
+        acc_t, eff_t, bb, bc = xs
+        virt, _ = solve_scaled(acc_t, eff_t, virt_id, jnp.sum(bb)[None],
                                jnp.sum(bc)[None], q, z, 1)
         assign = binpack.first_fit_jax(virt.b, virt.c, bb, bc)
-        dec, power = solve_scaled(acc_t, assign, bb, bc, q, z, n_servers)
+        dec, power = solve_scaled(acc_t, eff_t, assign, bb, bc, q, z,
+                                  n_servers)
         q_next = lyapunov.queue_update(q, jnp.mean(dec.acc), p_min)
         z_next = jnp.maximum(z - e_max + power, 0.0)
         return (q_next, z_next), (dec, assign, q_next, z_next, power)
 
     carry0 = (jnp.asarray(q0, jnp.float32), jnp.asarray(z0, jnp.float32))
     _, (decs, assigns, qs, zs, powers) = jax.lax.scan(
-        step, carry0, (tables.acc, tables.budgets_b, tables.budgets_c))
+        step, carry0, (tables.acc, profiles.eff_sequence(tables),
+                       tables.budgets_b, tables.budgets_c))
     res = RolloutResult(aopi=decs.aopi, acc=decs.acc, q=qs, assign=assigns,
                         decision=decs)
     return res, powers, zs

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import bcd, binpack, lyapunov
+from . import bcd, binpack, lyapunov, profiles
 from .lyapunov import VirtualQueue
 from .profiles import EdgeSystem, HorizonTables
 
@@ -138,21 +138,22 @@ def rollout(tables: HorizonTables, v, p_min, q0=0.0,
                               method=method, solver_effort=solver_effort)
 
     def step(q, xs):
-        acc_t, bb, bc = xs
+        acc_t, eff_t, bb, bc = xs
         # Algorithm 2 lines 1-2: virtual-server ideal demands.
-        virt = solve(acc_t, tables.xi, tables.size, tables.eff, virt_id,
+        virt = solve(acc_t, tables.xi, tables.size, eff_t, virt_id,
                      jnp.sum(bb)[None], jnp.sum(bc)[None], q, v, n_servers=1)
         # Algorithm 2 lines 3-9: first-fit placement (jit-safe).
         assign = binpack.first_fit_jax(virt.b, virt.c, bb, bc)
         # Algorithm 2 line 10: re-solve per real server.
-        dec = solve(acc_t, tables.xi, tables.size, tables.eff, assign,
+        dec = solve(acc_t, tables.xi, tables.size, eff_t, assign,
                     bb, bc, q, v, n_servers=n_servers)
         q_next = lyapunov.queue_update(q, jnp.mean(dec.acc), p_min)  # Eq. 44
         return q_next, (dec, assign, q_next)
 
     _, (decs, assigns, qs) = jax.lax.scan(
         step, jnp.asarray(q0, jnp.float32),
-        (tables.acc, tables.budgets_b, tables.budgets_c))
+        (tables.acc, profiles.eff_sequence(tables),
+         tables.budgets_b, tables.budgets_c))
     return RolloutResult(aopi=decs.aopi, acc=decs.acc, q=qs, assign=assigns,
                          decision=decs)
 

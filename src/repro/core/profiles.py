@@ -111,6 +111,67 @@ def shannon_efficiency(snr_db: np.ndarray) -> np.ndarray:
     return np.log2(1.0 + 10.0 ** (np.asarray(snr_db, np.float64) / 10.0))
 
 
+# ---------------------------------------------------------------------------
+# Pure-functional trace machinery (shared with repro.scenarios generators)
+# ---------------------------------------------------------------------------
+
+def ar1_scan(u: np.ndarray, rho: float) -> np.ndarray:
+    """Vectorized linear recursion x[t] = rho * x[t-1] + u[t], x[-1] = 0.
+
+    Associative prefix scan with stride doubling — O(T log T) numpy work
+    instead of a T-step python loop. The recursion composes as affine maps
+    (A, B): x_out = A * x_in + B. Matches the sequential recursion up to
+    float64 reassociation error (~1e-15 relative), not bitwise.
+    """
+    t_len = u.shape[0]
+    coef = np.full(u.shape, rho, dtype=np.float64)
+    out = np.asarray(u, np.float64).copy()
+    d = 1
+    while d < t_len:
+        out[d:] = out[d:] + coef[d:] * out[:-d]
+        coef[d:] = coef[d:] * coef[:-d]
+        d *= 2
+    return out
+
+
+def lognormal_ar1_trace(rng: np.random.Generator, mean: float,
+                        shape: tuple[int, int], rho: float = 0.85,
+                        sigma: float = 0.25) -> np.ndarray:
+    """Lognormal AR(1) capacity trace (Ghent LTE / Bitbrains shape).
+
+    Pure in ``(rng state, mean, shape, rho, sigma)``; draws all noise in one
+    call (same stream as the historical per-slot loop) and runs the AR(1)
+    recursion via the vectorized ``ar1_scan`` (values match the loop to
+    ~1e-15 relative, not bitwise).
+    """
+    e = rng.normal(0.0, sigma, shape)
+    u = np.concatenate([e[:1], np.sqrt(1 - rho**2) * e[1:]], axis=0)
+    x = ar1_scan(u, rho)
+    return mean * np.exp(x - 0.5 * sigma**2)
+
+
+def drift_path(seed: int, n_slots: int, n_cameras: int,
+               rho: float = 0.9, pull: float = 0.1, sigma: float = 0.03,
+               lo: float = 0.75, hi: float = 1.0,
+               init: np.ndarray | None = None) -> np.ndarray:
+    """Per-camera clipped-AR(1) content-drift path ``[T, N]``.
+
+    Pure in ``(seed, n_slots, n_cameras, ...)`` — the functional twin of
+    ``EdgeSystem.advance_drift`` (the clip makes the recursion nonlinear, so
+    this one keeps the short T loop over a pre-drawn noise matrix).
+    Matches what ``n_slots`` sequential ``advance_drift()`` calls on a fresh
+    ``EdgeSystem(seed=seed - 1)`` would return.
+    """
+    rng = np.random.default_rng(seed)
+    noise = rng.normal(0.0, sigma, (n_slots, n_cameras))
+    state = np.ones(n_cameras) if init is None else np.asarray(init, float)
+    out = np.empty((n_slots, n_cameras))
+    for t in range(n_slots):
+        state = np.clip(rho * state + pull * 1.0 + noise[t], lo, hi)
+        out[t] = state
+    return out
+
+
 @dataclasses.dataclass
 class SlotTables:
     """Everything the per-slot optimizer needs, as dense arrays.
@@ -144,7 +205,9 @@ class HorizonTables:
       acc[t, n, m, r]   profiled accuracy zeta_n^t (drift applied per slot)
       xi[m, r]          FLOPs per frame
       size[r]           bits per frame
-      eff[n]            link spectral efficiency (bits/s/Hz)
+      eff[n]            link spectral efficiency (bits/s/Hz); scenario
+                        generators with camera mobility emit a time-varying
+                        eff[t, n] instead — every scan engine accepts both
       budgets_b[t, s]   bandwidth capacity trace B_t^s (Hz)
       budgets_c[t, s]   compute capacity trace C_t^s (FLOPS)
     """
@@ -169,15 +232,46 @@ class HorizonTables:
 
     def slot(self, t: int) -> SlotTables:
         """One slot's profiles as host numpy (legacy SlotTables view)."""
+        eff = self.eff if self.eff.ndim == 1 else self.eff[t]
         return SlotTables(acc=np.asarray(self.acc[t]),
                           xi=np.asarray(self.xi),
                           size=np.asarray(self.size),
-                          eff=np.asarray(self.eff))
+                          eff=np.asarray(eff))
+
+
+def eff_sequence(tables: HorizonTables) -> jnp.ndarray:
+    """The per-slot link-efficiency sequence ``[T, N]`` of an (unbatched)
+    horizon — broadcasts a static ``eff[n]`` across slots, passes a
+    time-varying ``eff[t, n]`` through. The scan engines feed this as a
+    scanned input so SNR-mobility scenarios ride the same rollout."""
+    n_slots = tables.acc.shape[0]
+    if tables.eff.ndim == 1:
+        return jnp.broadcast_to(tables.eff[None, :],
+                                (n_slots, tables.eff.shape[0]))
+    return tables.eff
 
 
 def stack_horizons(tables: Sequence[HorizonTables]) -> HorizonTables:
-    """Stack same-shape horizons along a new leading axis for vmapped
-    rollouts (e.g. one scenario per swept bandwidth level)."""
+    """Stack same-shape horizons along a new leading axis for vmapped /
+    sharded rollouts (e.g. one scenario per entry of a suite).
+
+    Raises ``ValueError`` naming the offending field and shapes when the
+    horizons disagree (all leaves must match exactly — including whether
+    ``eff`` is static ``[N]`` or time-varying ``[T, N]``)."""
+    tables = list(tables)
+    if not tables:
+        raise ValueError("stack_horizons: need at least one horizon")
+    ref = tables[0]
+    for i, tab in enumerate(tables[1:], start=1):
+        for field in dataclasses.fields(HorizonTables):
+            a = getattr(ref, field.name)
+            b = getattr(tab, field.name)
+            if a.shape != b.shape:
+                raise ValueError(
+                    f"stack_horizons: shape mismatch on field "
+                    f"{field.name!r}: horizons[0] has {a.shape}, "
+                    f"horizons[{i}] has {b.shape} — all stacked horizons "
+                    f"must share (T, N, M, R, S) and eff rank")
     return jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
 
 
@@ -213,14 +307,18 @@ class EdgeSystem:
     def _trace(rng: np.random.Generator, mean: float,
                shape: tuple[int, int], rho: float = 0.85,
                sigma: float = 0.25) -> np.ndarray:
-        """Lognormal AR(1) capacity trace (Ghent LTE / Bitbrains shape)."""
-        t_len, s = shape
-        x = np.zeros(shape)
-        x[0] = rng.normal(0, sigma, s)
-        for t in range(1, t_len):
-            x[t] = rho * x[t - 1] + np.sqrt(1 - rho**2) * rng.normal(
-                0, sigma, s)
-        return mean * np.exp(x - 0.5 * sigma**2)
+        """Lognormal AR(1) capacity trace — vectorized ``ar1_scan`` path
+        (same noise stream + values as the historical per-slot loop, so long
+        horizons T >= 10k are no longer host-loop bound)."""
+        return lognormal_ar1_trace(rng, mean, shape, rho=rho, sigma=sigma)
+
+    def reset(self) -> "EdgeSystem":
+        """Restore the stateful drift RNG/state to the post-construction
+        point, so the legacy per-slot ``tables(t)`` path replays the exact
+        sequence a fresh system would produce."""
+        self._drift_state = np.ones(self.n_cameras)
+        self._drift_rng = np.random.default_rng(self.seed + 1)
+        return self
 
     def advance_drift(self) -> np.ndarray:
         """One AR(1) step of per-camera content drift in [0.75, 1.0]."""
@@ -254,13 +352,15 @@ class EdgeSystem:
                 dtype=jnp.float32) -> HorizonTables:
         """Pregenerate ``n_slots`` of profiles + capacities as one pytree.
 
-        Advances the same stateful drift RNG ``tables(t)`` would, so a scan
-        rollout over the result reproduces what ``n_slots`` sequential
-        ``step(t)`` calls (t = 0..n_slots-1) would have observed.
+        Deterministic in ``(self.seed, n_slots)``: the drift path is
+        computed by the pure ``drift_path`` without touching the stateful
+        per-slot RNG, so two ``horizon()`` calls on the same system are
+        bitwise identical, and a scan rollout reproduces what ``n_slots``
+        sequential ``step(t)`` calls on a *fresh* system would have
+        observed.
         """
         n_slots = self.n_slots if n_slots is None else n_slots
-        drift = np.stack([self.advance_drift().copy()
-                          for _ in range(n_slots)])            # [T, N]
+        drift = drift_path(self.seed + 1, n_slots, self.n_cameras)  # [T, N]
         res = np.asarray(self.resolutions, np.float64)
         zr = np.stack([m.zeta(res) for m in self.pool])        # [M, R]
         xi = np.stack([m.xi(res) for m in self.pool])          # [M, R]

@@ -1,0 +1,30 @@
+"""repro.scenarios — workload diversity at fleet scale.
+
+A library of composable, adversarial scenario generators (Markov-modulated
+channels, diurnal + flash-crowd load, server outages, camera mobility,
+content bursts), each emitting the same ``profiles.HorizonTables`` pytree
+the scan rollout engine consumes, plus a sweep runner that executes
+LBCD/MIN/DOS/JCAB over the stacked scenario axis — ``shard_map``-partitioned
+across every available device, vmapped on one.
+
+Quickstart::
+
+    from repro import scenarios
+    s = scenarios.suite(n_cameras=16, n_slots=60, n_servers=3)
+    result = scenarios.sweep(s, v=10.0, p_min=0.7)
+    print(scenarios.robustness(result))
+"""
+from . import generators  # noqa: F401  (populates the registry on import)
+from .base import Components, ScenarioSpec, assemble
+from .registry import (Suite, build, families, family_of, names, register,
+                       spec_for, suite)
+from .report import FamilyStats, RobustnessReport, robustness
+from .runner import BACKENDS, POLICIES, SweepResult, sweep
+
+__all__ = [
+    "Components", "ScenarioSpec", "assemble",
+    "Suite", "build", "families", "family_of", "names", "register",
+    "spec_for", "suite",
+    "FamilyStats", "RobustnessReport", "robustness",
+    "BACKENDS", "POLICIES", "SweepResult", "sweep",
+]

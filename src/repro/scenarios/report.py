@@ -1,0 +1,75 @@
+"""Robustness reporting: per-policy, per-family tail behaviour.
+
+The headline claims of the paper are means over one trace; what a
+deployment cares about is how each policy degrades under each *kind* of
+dynamics. :func:`robustness` folds a :class:`runner.SweepResult` into a
+per-(policy, family) table of mean / tail-percentile / worst-case AoPI
+(aggregated over the family's scenarios and slots), plus the policy's
+worst family — the number a capacity planner would provision against.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .runner import SweepResult
+
+
+@dataclasses.dataclass
+class FamilyStats:
+    mean_aopi: float          # mean over the family's scenarios x slots
+    pct_aopi: float           # tail percentile of slot-mean AoPI
+    worst_aopi: float         # worst slot across the family
+    mean_acc: float
+
+
+@dataclasses.dataclass
+class RobustnessReport:
+    policies: list[str]
+    families: list[str]
+    pct: float
+    table: dict            # policy -> family -> FamilyStats
+
+    def worst_family(self, policy: str) -> tuple[str, FamilyStats]:
+        fam = max(self.families,
+                  key=lambda f: self.table[policy][f].worst_aopi)
+        return fam, self.table[policy][fam]
+
+    def rows(self) -> list[list]:
+        """Flat [policy, family, mean, pXX, worst, acc] rows (benchmarks)."""
+        return [[p, f, s.mean_aopi, s.pct_aopi, s.worst_aopi, s.mean_acc]
+                for p in self.policies
+                for f, s in ((f, self.table[p][f]) for f in self.families)]
+
+    def __str__(self) -> str:
+        w = max(len(f) for f in self.families)
+        lines = [f"{'policy':<6} {'family':<{w}} {'mean':>9} "
+                 f"{f'p{self.pct:.0f}':>9} {'worst':>9} {'acc':>6}"]
+        for p in self.policies:
+            for f in self.families:
+                s = self.table[p][f]
+                lines.append(f"{p:<6} {f:<{w}} {s.mean_aopi:>9.4f} "
+                             f"{s.pct_aopi:>9.4f} {s.worst_aopi:>9.4f} "
+                             f"{s.mean_acc:>6.3f}")
+        return "\n".join(lines)
+
+
+def robustness(result: SweepResult, pct: float = 95.0) -> RobustnessReport:
+    """Aggregate a sweep into per-(policy, family) AoPI robustness stats."""
+    fams = sorted(set(result.families))
+    table = {}
+    for policy in result.policies:
+        aopi = result.aopi[policy]                       # [K, T]
+        acc = result.acc[policy]
+        table[policy] = {}
+        for fam in fams:
+            idx = [i for i, f in enumerate(result.families) if f == fam]
+            a = aopi[idx]
+            table[policy][fam] = FamilyStats(
+                mean_aopi=float(a.mean()),
+                pct_aopi=float(np.percentile(a, pct)),
+                worst_aopi=float(a.max()),
+                mean_acc=float(acc[idx].mean()))
+    return RobustnessReport(policies=list(result.policies), families=fams,
+                            pct=pct, table=table)

@@ -1,0 +1,230 @@
+"""Fleet sweep driver: all policies x all scenarios, sharded over devices.
+
+``sweep`` executes the LBCD controller and the MIN/DOS/JCAB baselines over
+a stacked scenario axis (a :class:`registry.Suite` or raw stacked
+``HorizonTables``) in one device-resident call per policy. Three backends:
+
+  * ``"shard_map"`` (default on >= 2 devices) — the scenario axis is
+    padded to a multiple of the device count and partitioned with
+    ``shard_map`` over a 1-D ``("scenario",)`` mesh; each device vmaps the
+    scan rollout over its local shard. Embarrassingly parallel — no
+    collectives. Caveat: XLA compiles a distinct ``num_partitions > 1``
+    module whose floating-point rounding can differ from the single-device
+    program by ~1 ulp, and the controller's discrete first-fit can amplify
+    a knife-edge tie into a visibly different (equally valid) allocation —
+    so cross-backend parity is statistical, not bitwise.
+  * ``"fleet"`` — the same padded blocks dispatched asynchronously to each
+    device through one shared jitted block function (JAX async dispatch
+    keeps all devices busy). Every device runs a plain single-partition
+    program, so results agree with the vmap fallback to float32 ulp (the
+    block batch size differs from the full-K vmap call, so XLA may fuse
+    final reductions slightly differently — but no ``num_partitions > 1``
+    rewrite is involved and no decision flips have been observed). This
+    is the backend the tight parity tests pin.
+  * ``"vmap"`` (default on 1 device) — plain ``vmap`` over the scenario
+    axis.
+
+Each rollout is reduced on device to per-slot fleet means (AoPI, accuracy,
+queue), so the host only ever sees ``[K, T]`` summaries no matter how many
+cameras a scenario carries. ``report.robustness`` turns a
+:class:`SweepResult` into the per-family worst-case/percentile table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core import baselines, lbcd
+from ..core.profiles import HorizonTables
+from .registry import Suite
+
+POLICIES = ("lbcd", "min", "dos", "jcab")
+BACKENDS = ("vmap", "shard_map", "fleet")
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-scenario per-policy slot series (fleet means) + metadata.
+
+    ``aopi``/``acc``/``q`` map policy name -> ``[K, T]`` numpy arrays
+    aligned with ``names``/``families``.
+    """
+    names: list[str]
+    families: list[str]
+    policies: list[str]
+    v: float
+    p_min: float
+    backend: str
+    aopi: dict[str, np.ndarray]
+    acc: dict[str, np.ndarray]
+    q: dict[str, np.ndarray]
+
+    def mean_aopi(self, policy: str) -> np.ndarray:
+        """Per-scenario mean AoPI over the horizon. [K]"""
+        return self.aopi[policy].mean(axis=1)
+
+    def pct_aopi(self, policy: str, pct: float = 95.0) -> np.ndarray:
+        """Per-scenario tail (percentile over slots) AoPI. [K]"""
+        return np.percentile(self.aopi[policy], pct, axis=1)
+
+    def worst_aopi(self, policy: str) -> np.ndarray:
+        """Per-scenario worst slot AoPI. [K]"""
+        return self.aopi[policy].max(axis=1)
+
+    def mean_acc(self, policy: str) -> np.ndarray:
+        return self.acc[policy].mean(axis=1)
+
+
+def _reduced_policy(name: str, n_bcd_iters: int):
+    """One scenario's rollout -> [T] fleet means, with every policy knob a
+    traced scalar so one compiled program serves all knob values."""
+    def fn(tables: HorizonTables, v, p_min, dos_weight, jcab_cap):
+        if name == "lbcd":
+            res = lbcd.rollout(tables, v, p_min, n_bcd_iters=n_bcd_iters)
+        elif name == "min":
+            res = baselines.rollout_min(tables, v,
+                                        n_bcd_iters=n_bcd_iters)
+        elif name == "dos":
+            res = baselines.rollout_dos(tables, dos_weight)
+        elif name == "jcab":
+            res = baselines.rollout_jcab(tables, jcab_cap)
+        else:
+            raise ValueError(
+                f"unknown policy {name!r}; known: {POLICIES}")
+        return {"aopi": res.aopi.mean(axis=-1),
+                "acc": res.acc.mean(axis=-1),
+                "q": res.q}
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _vmapped(name: str, n_bcd_iters: int):
+    """The shared block program: vmap over scenarios, scalars broadcast.
+    Cached so repeat sweeps (and the fleet backend's per-device dispatch)
+    reuse one compiled executable per (policy, shapes)."""
+    return jax.jit(jax.vmap(_reduced_policy(name, n_bcd_iters),
+                            in_axes=(0, None, None, None, None)))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded(name: str, n_bcd_iters: int, devices: tuple):
+    mesh = Mesh(np.asarray(devices), ("scenario",))
+    return jax.jit(shard_map(
+        jax.vmap(_reduced_policy(name, n_bcd_iters),
+                 in_axes=(0, None, None, None, None)),
+        mesh=mesh, in_specs=(P("scenario"), P(), P(), P(), P()),
+        out_specs=P("scenario")))
+
+
+def _pad_scenarios(tables: HorizonTables, pad: int) -> HorizonTables:
+    """Repeat the last scenario ``pad`` times so K divides the mesh."""
+    if pad == 0:
+        return tables
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.repeat(x[-1:], pad, axis=0)], axis=0), tables)
+
+
+def _run_shard_map(name, n_bcd_iters, tables, knobs, n_scenarios,
+                   devices) -> dict:
+    pad = (-n_scenarios) % len(devices)
+    fn = _sharded(name, n_bcd_iters, tuple(devices))
+    out = fn(_pad_scenarios(tables, pad), *knobs)
+    return {k: np.asarray(x)[:n_scenarios] for k, x in out.items()}
+
+
+def _run_fleet(name, n_bcd_iters, tables, knobs, n_scenarios,
+               devices) -> dict:
+    """The vmap block program, one async dispatch per device."""
+    n_dev = len(devices)
+    pad = (-n_scenarios) % n_dev
+    padded = _pad_scenarios(tables, pad)
+    block_len = (n_scenarios + pad) // n_dev
+    block_fn = _vmapped(name, n_bcd_iters)
+    futures = []
+    for i, dev in enumerate(devices):
+        block = jax.tree.map(
+            lambda x: jax.device_put(
+                x[i * block_len:(i + 1) * block_len], dev), padded)
+        futures.append(block_fn(block, *knobs))  # async — all devices busy
+    keys = futures[0].keys()
+    return {k: np.concatenate([np.asarray(f[k]) for f in futures],
+                              axis=0)[:n_scenarios] for k in keys}
+
+
+def _run_vmap(name, n_bcd_iters, tables, knobs) -> dict:
+    out = _vmapped(name, n_bcd_iters)(tables, *knobs)
+    return {k: np.asarray(x) for k, x in out.items()}
+
+
+def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
+          p_min: float = 0.7, policies: Sequence[str] = POLICIES,
+          devices: Sequence | None = None, backend: str | None = None,
+          policy_params: Mapping | None = None) -> SweepResult:
+    """Run every policy over every stacked scenario; one sharded (or
+    vmapped) device-resident call per policy.
+
+    ``backend=None`` picks ``"shard_map"`` on >= 2 devices and ``"vmap"``
+    on one; pass ``"fleet"`` for the bitwise-reproducible multi-device
+    path (see module docstring).
+    """
+    if isinstance(suite_or_tables, Suite):
+        tables = suite_or_tables.tables
+        names = list(suite_or_tables.names)
+        fams = list(suite_or_tables.families)
+    else:
+        tables = suite_or_tables
+        if tables.acc.ndim != 5:
+            raise ValueError(
+                f"sweep() needs a *stacked* scenario axis (acc of rank 5, "
+                f"[K, T, N, M, R]); got acc{tuple(tables.acc.shape)}. "
+                f"Stack horizons with profiles.stack_horizons or pass a "
+                f"scenarios.suite(...)")
+        k = int(tables.acc.shape[0])
+        names = [f"scenario_{i}" for i in range(k)]
+        fams = ["unknown"] * k
+    n_scenarios = int(tables.acc.shape[0])
+    devices = list(devices) if devices is not None else jax.devices()
+    # Never spread K scenarios over more than K devices — a mesh larger
+    # than the batch axis just pads (and a num_partitions >> K module,
+    # e.g. under --xla_force_host_platform_device_count=512, takes
+    # pathologically long to compile for zero parallelism gain).
+    devices = devices[:max(n_scenarios, 1)]
+    if backend is None:
+        backend = "shard_map" if len(devices) > 1 else "vmap"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; known: {BACKENDS}")
+    params = dict(policy_params or {})
+    n_bcd_iters = int(params.get("n_bcd_iters", 4))
+    knobs = (jnp.float32(v), jnp.float32(p_min),
+             jnp.float32(params.get("dos_weight", 1.0)),
+             jnp.float32(params.get("jcab_latency_cap", 0.5)))
+
+    series = {}
+    for name in policies:
+        if name not in POLICIES:
+            raise ValueError(f"unknown policy {name!r}; known: {POLICIES}")
+        if backend == "shard_map" and len(devices) > 1:
+            series[name] = _run_shard_map(name, n_bcd_iters, tables, knobs,
+                                          n_scenarios, devices)
+        elif backend == "fleet" and len(devices) > 1:
+            series[name] = _run_fleet(name, n_bcd_iters, tables, knobs,
+                                      n_scenarios, devices)
+        else:
+            series[name] = _run_vmap(name, n_bcd_iters, tables, knobs)
+
+    tag = backend if len(devices) > 1 or backend == "vmap" else "vmap"
+    backend_str = (f"{tag}[{len(devices)}]" if tag != "vmap" else "vmap")
+    return SweepResult(
+        names=names, families=fams, policies=list(policies),
+        v=v, p_min=p_min, backend=backend_str,
+        aopi={p: s["aopi"] for p, s in series.items()},
+        acc={p: s["acc"] for p, s in series.items()},
+        q={p: s["q"] for p, s in series.items()})

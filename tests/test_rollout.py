@@ -134,6 +134,28 @@ def test_rollout_scenarios_over_stacked_horizons():
     assert (np.asarray(res.acc) > 0).all()
 
 
+def test_time_varying_eff_matches_static_when_constant():
+    """A broadcast eff[T, N] must reproduce the static eff[N] rollout
+    exactly, for the LBCD engine and every baseline scan."""
+    import dataclasses
+
+    from repro.core import baselines as bl
+
+    tables = _system().horizon(6)
+    tv = dataclasses.replace(
+        tables, eff=jnp.broadcast_to(tables.eff[None, :],
+                                     (6, tables.n_cameras)))
+    for name, fn in [("lbcd", lambda t: lbcd.rollout(t, 10.0, 0.7)),
+                     ("min", bl.rollout_min),
+                     ("dos", bl.rollout_dos),
+                     ("jcab", bl.rollout_jcab)]:
+        a, b = fn(tables), fn(tv)
+        np.testing.assert_array_equal(np.asarray(a.aopi),
+                                      np.asarray(b.aopi), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(a.assign),
+                                      np.asarray(b.assign), err_msg=name)
+
+
 def test_horizon_tables_match_legacy_tables():
     """horizon() pregenerates exactly what sequential tables(t) would."""
     sys_a = _system(seed=5)
