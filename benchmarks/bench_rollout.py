@@ -13,6 +13,10 @@ cameras against two legacy arms:
 
 Compile/warmup time is excluded everywhere. At N=3000 the scan engine
 still runs entirely on device — no host-loop fallback.
+
+Migration note: this bench previously emitted ``scaleout_rollout.json``;
+it now writes ``BENCH_rollout.json`` so the BENCH_* trajectory tracking
+picks it up (old files are not rewritten).
 """
 import jax
 
@@ -62,7 +66,7 @@ def run(full: bool = False):
 
         rows.append([n, slots, scan_sps, seed_sps, shared_sps,
                      scan_sps / seed_sps, scan_sps / shared_sps])
-    emit("scaleout_rollout", rows,
+    emit("BENCH_rollout", rows,
          ["n_cameras", "slots", "scan_slots_per_sec",
           "legacy_seed_slots_per_sec", "legacy_shared_slots_per_sec",
           "speedup_vs_seed", "speedup_vs_shared"])

@@ -1,0 +1,84 @@
+"""Fused slot solver: jnp vs pallas-interpret Algorithm-1 throughput.
+
+Measures, at N in {30, 300, 3000} cameras:
+
+  * one-slot ``bcd.solve_slot`` latency (ms) per backend;
+  * scan-rollout slots/sec per backend;
+  * slots/sec of an 8-point vmapped ``(V, P_min)`` grid
+    (``lbcd.rollout_grid``) per backend, in grid-point-slots/sec.
+
+On CPU the pallas backend runs in interpret mode (the same kernel code
+path that compiles on TPU), so the comparison is interpret-comparable:
+both arms execute XLA CPU programs of the same algorithm, differing only
+in dispatch structure — the pallas arm fuses each water-fill into one
+call and never materializes the [N, M, R, 2] config-score tensor (see
+``tests/test_slot_solver.py`` for the op-count assertions). Compiled-mode
+device wins ride the same structure for free. Compile/warmup excluded.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcd, lbcd, profiles
+
+from .common import emit, timer
+
+COUNTS = (30, 300, 3000)
+GRID_POINTS = 8
+
+
+def _best(fn, repeats):
+    best = np.inf
+    for _ in range(repeats):
+        with timer() as t:
+            jax.block_until_ready(fn())
+        best = min(best, t.elapsed)
+    return best
+
+
+def run(full: bool = False):
+    rows = []
+    vs = jnp.linspace(1.0, 50.0, GRID_POINTS)
+    p_mins = jnp.linspace(0.5, 0.85, GRID_POINTS)
+    for n in COUNTS:
+        slots = (20 if n <= 300 else 6) if full else (8 if n <= 300 else 2)
+        repeats = 3 if n <= 300 else 1
+        sys = profiles.EdgeSystem(n_cameras=n, n_servers=3, n_slots=slots)
+        tab = sys.horizon(slots)
+        rng = np.random.default_rng(0)
+        sid = jnp.asarray(rng.integers(0, 3, n).astype(np.int32))
+        slot_args = (tab.acc[0], tab.xi, tab.size, tab.eff, sid,
+                     tab.budgets_b[0], tab.budgets_c[0],
+                     jnp.float32(1.0), jnp.float32(10.0))
+
+        row = [n, slots]
+        for backend in ("jnp", "pallas"):
+            solve = functools.partial(bcd.solve_slot, n_servers=3,
+                                      solver_backend=backend)
+            jax.block_until_ready(solve(*slot_args))          # warmup
+            row.append(_best(lambda: solve(*slot_args), repeats) * 1e3)
+
+        for backend in ("jnp", "pallas"):
+            roll = functools.partial(lbcd.rollout, tab, 10.0, 0.7,
+                                     solver_backend=backend)
+            jax.block_until_ready(roll())                      # warmup
+            row.append(slots / _best(roll, repeats))
+
+        for backend in ("jnp", "pallas"):
+            grid = functools.partial(lbcd.rollout_grid, tab, vs, p_mins,
+                                     solver_backend=backend)
+            jax.block_until_ready(grid())                      # warmup
+            row.append(GRID_POINTS * slots / _best(grid, repeats))
+
+        row += [row[2] / row[3],            # solve speedup pallas vs jnp
+                row[5] / row[4],            # rollout speedup
+                row[7] / row[6]]            # grid speedup
+        rows.append(row)
+    emit("BENCH_slot_solver", rows,
+         ["n_cameras", "slots", "solve_ms_jnp", "solve_ms_pallas",
+          "rollout_sps_jnp", "rollout_sps_pallas",
+          "grid8_sps_jnp", "grid8_sps_pallas",
+          "solve_speedup", "rollout_speedup", "grid_speedup"])
+    return rows

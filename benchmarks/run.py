@@ -11,7 +11,7 @@ import time
 from . import (bench_bandwidth, bench_cameras, bench_compute,
                bench_energy, bench_frontier, bench_hyperparams,
                bench_overhead, bench_policy, bench_rollout,
-               bench_scenarios, bench_validation)
+               bench_scenarios, bench_slot_solver, bench_validation)
 
 ALL = {
     "fig14_15_validation": bench_validation.run,
@@ -23,8 +23,9 @@ ALL = {
     "fig11_cameras": bench_cameras.run,
     "fig12_overhead": bench_overhead.run,
     "beyond_energy": bench_energy.run,
-    "scaleout_rollout": bench_rollout.run,
+    "BENCH_rollout": bench_rollout.run,
     "BENCH_scenarios": bench_scenarios.run,
+    "BENCH_slot_solver": bench_slot_solver.run,
 }
 
 
@@ -34,12 +35,17 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     t0 = time.time()
+    matched = False
     for name, fn in ALL.items():
         if args.only and args.only not in name:
             continue
+        matched = True
         t = time.time()
         fn(full=args.full)
         print(f"[{name}: {time.time()-t:.1f}s]\n", flush=True)
+    if args.only and not matched:
+        sys.exit(f"--only {args.only!r} matched no benchmark; "
+                 f"known: {', '.join(ALL)}")
     print(f"total {time.time()-t0:.1f}s")
 
 

@@ -252,14 +252,16 @@ def _kkt_step(g, h, x, server_id, n_servers, target_fill):
     return dx
 
 
-def interior_point(score_elem, x0, lo, hi, server_id, budgets, n_servers,
+def interior_point(score_elem, x0, lo, hi, server_id, n_servers,
                    t0: float = 4.0, t_mult: float = 6.0, n_outer: int = 7,
                    n_inner: int = 14):
     """Minimize sum_n score_elem(x_n, n) s.t. per-server sum == budget,
     lo <= x <= hi. The paper's Algorithm-1 interior-point step.
 
     ``score_elem(x, idx)`` must be per-element (separable) and convex in x.
-    ``x0`` must be strictly feasible. All arguments in normalized units.
+    ``x0`` must be strictly feasible. All arguments in normalized
+    per-server units — the budget enters only through the callers'
+    normalization (x = allocation / budget), so no raw budgets are taken.
     """
     def phi_elem(x, idx, t):
         s = score_elem(x, idx)
@@ -323,7 +325,7 @@ def interior_point_bandwidth(k, p, pol, mu, server_id, budgets, n_servers):
         a_f = aopi.aopi_fcfs(lam_c, mu[idx], p[idx])
         return jnp.where(pol[idx] == aopi.LCFSP, a_l, a_f)
 
-    u = interior_point(score, x0, lo, hi, server_id, budgets, n_servers)
+    u = interior_point(score, x0, lo, hi, server_id, n_servers)
     return u * B
 
 
@@ -352,5 +354,5 @@ def interior_point_compute(inv_xi, p, pol, lam, server_id, budgets,
         a_f = aopi.aopi_fcfs(lam[idx], mu_c, p[idx])
         return jnp.where(pol[idx] == aopi.LCFSP, a_l, a_f)
 
-    v = interior_point(score, x0, lo, hi, server_id, budgets, n_servers)
+    v = interior_point(score, x0, lo, hi, server_id, n_servers)
     return v * C

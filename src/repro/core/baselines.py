@@ -69,10 +69,12 @@ def _scan_result(step, tables: HorizonTables) -> RolloutResult:
 
 
 @functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method",
-                                             "solver_effort"))
+                                             "solver_effort",
+                                             "solver_backend", "interpret"))
 def rollout_min(tables: HorizonTables, v=10.0, n_bcd_iters: int = 4,
-                method: str = "waterfill",
-                solver_effort: str = "fast") -> RolloutResult:
+                method: str = "waterfill", solver_effort: str = "fast",
+                solver_backend: str = "jnp",
+                interpret: bool | None = None) -> RolloutResult:
     """MIN lower bound over the whole horizon: one pooled virtual server,
     no accuracy queue (q == 0), as a single scan."""
     n = tables.acc.shape[1]
@@ -84,16 +86,22 @@ def rollout_min(tables: HorizonTables, v=10.0, n_bcd_iters: int = 4,
                              virt_id, jnp.sum(bb)[None], jnp.sum(bc)[None],
                              jnp.float32(0.0), v, n_servers=1,
                              n_iters=n_bcd_iters, method=method,
-                             solver_effort=solver_effort)
+                             solver_effort=solver_effort,
+                             solver_backend=solver_backend,
+                             interpret=interpret)
         return q, (dec, virt_id, q)
 
     return _scan_result(step, tables)
 
 
-@jax.jit
-def rollout_dos(tables: HorizonTables, weight=1.0) -> RolloutResult:
+@functools.partial(jax.jit, static_argnames=("solver_backend",))
+def rollout_dos(tables: HorizonTables, weight=1.0,
+                solver_backend: str = "jnp") -> RolloutResult:
     """DOS over the whole horizon as a single scan (same per-slot math as
-    ``DOSController.step``, with the jit-safe first-fit)."""
+    ``DOSController.step``, with the jit-safe first-fit).
+
+    ``solver_backend`` is accepted for sweep-API uniformity with the
+    Algorithm-1 policies; DOS runs no BCD solve, so it is a no-op here."""
     n = tables.acc.shape[1]
     n_servers = tables.budgets_b.shape[1]
     xi, size = tables.xi, tables.size
@@ -125,11 +133,15 @@ def rollout_dos(tables: HorizonTables, weight=1.0) -> RolloutResult:
     return _scan_result(step, tables)
 
 
-@functools.partial(jax.jit, static_argnames=("n_rounds",))
+@functools.partial(jax.jit, static_argnames=("n_rounds", "solver_backend"))
 def rollout_jcab(tables: HorizonTables, latency_cap=0.5,
-                 n_rounds: int = 3) -> RolloutResult:
+                 n_rounds: int = 3,
+                 solver_backend: str = "jnp") -> RolloutResult:
     """JCAB over the whole horizon as a single scan (same per-slot math as
-    ``JCABController.step``; the round-robin assignment is static)."""
+    ``JCABController.step``; the round-robin assignment is static).
+
+    ``solver_backend`` is accepted for sweep-API uniformity with the
+    Algorithm-1 policies; JCAB runs no BCD solve, so it is a no-op here."""
     n = tables.acc.shape[1]
     n_servers = tables.budgets_b.shape[1]
     xi, size = tables.xi, tables.size
@@ -209,7 +221,7 @@ class MINController(BaselineController):
                           assign=np.zeros(n, np.int32), decision=dec)
 
     def _rollout(self, tables: HorizonTables) -> RolloutResult:
-        known = {"n_iters", "method", "solver_effort"}
+        known = {"n_iters", "method", "solver_effort", "solver_backend"}
         unknown = set(self.kw) - known
         if unknown:
             raise TypeError(
@@ -219,7 +231,9 @@ class MINController(BaselineController):
                            n_bcd_iters=self.kw.get("n_iters", 4),
                            method=self.kw.get("method", "waterfill"),
                            solver_effort=self.kw.get("solver_effort",
-                                                     "fast"))
+                                                     "fast"),
+                           solver_backend=self.kw.get("solver_backend",
+                                                      "jnp"))
 
 
 class DOSController(BaselineController):

@@ -10,6 +10,12 @@ Three blocks, iterated M times (paper §V-B):
 
 Everything is jit-compiled with static (N, M, R, S); the whole solve runs in
 a few hundred microseconds for N=30 on CPU (benchmarks/bench_overhead.py).
+
+Both per-camera blocks have two implementations behind
+``solver_backend="jnp" | "pallas"``: the pure-jnp reference and the fused
+``repro.kernels.slot_solver`` kernels (streaming config argmin, one-dispatch
+on-chip water-filling) — float32-tolerance equivalent, benchmarked in
+``benchmarks/bench_slot_solver.py``.
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import allocate, aopi
+from ..kernels import slot_solver
 
 
 @jax.tree_util.register_dataclass
@@ -49,34 +56,16 @@ def _rates(b, c, r_idx, m_idx, eff, size, xi):
     return lam, mu
 
 
-def _config_step(b, c, acc, xi, size, eff, q, V, n):
-    """Algorithm 1 line 3: exhaustive search over (m, r, policy)."""
-    # lam[n, r]: resolution changes frame size; mu[n, m, r]: both change xi.
-    lam = (b * eff)[:, None] / size[None, :]
-    mu = c[:, None, None] / xi[None, :, :]
-    lam_b = lam[:, None, :]                            # [n, 1, r]
-    a_f = aopi.aopi_fcfs(jnp.broadcast_to(lam_b, mu.shape), mu,
-                         jnp.maximum(acc, 1e-3))
-    a_l = aopi.aopi_lcfsp(jnp.broadcast_to(lam_b, mu.shape), mu,
-                          jnp.maximum(acc, 1e-3))
-    a = jnp.stack([a_f, a_l], axis=-1)                 # [n, m, r, 2]
-    score = (V * a - q * acc[..., None]) / n
-    flat = score.reshape(score.shape[0], -1)
-    best = jnp.argmin(flat, axis=1)
-    n_m, n_r = xi.shape
-    m_idx = best // (n_r * 2)
-    r_idx = (best // 2) % n_r
-    pol = (best % 2).astype(jnp.int32)
-    return r_idx, m_idx, pol
-
-
 @functools.partial(jax.jit,
                    static_argnames=("n_servers", "n_iters", "method",
-                                    "solver_effort"))
+                                    "solver_effort", "solver_backend",
+                                    "interpret"))
 def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
                n_servers: int, n_iters: int = 4,
                method: Literal["waterfill", "interior"] = "waterfill",
-               solver_effort: Literal["fast", "seed"] = "fast"):
+               solver_effort: Literal["fast", "seed"] = "fast",
+               solver_backend: Literal["jnp", "pallas"] = "jnp",
+               interpret: bool | None = None):
     """Run Algorithm 1 and return a SlotDecision (of jnp arrays).
 
     Args:
@@ -91,7 +80,22 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
         the BCD loop plus one full-precision re-allocation; "seed"
         reproduces the pre-refactor flat high-iteration effort (kept for
         benchmarks measuring what the rollout-stack rework bought).
+      solver_backend: "jnp" (default) runs the pure-jnp config search and
+        water-filling; "pallas" fuses both into the
+        ``repro.kernels.slot_solver`` kernels (streaming config argmin, one
+        on-chip water-fill dispatch per allocation). Requires
+        ``method="waterfill"``; agrees with "jnp" to float32 tolerance.
+      interpret: pallas interpret-mode override (None = auto: interpret
+        everywhere except on real TPUs — the CPU/CI path).
     """
+    if solver_backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown solver_backend {solver_backend!r}; "
+                         "known: ('jnp', 'pallas')")
+    use_pallas = solver_backend == "pallas"
+    if use_pallas and method != "waterfill":
+        raise ValueError("solver_backend='pallas' fuses the water-filling "
+                         "solver; method='interior' only supports the jnp "
+                         "backend")
     n = acc.shape[0]
     counts = jax.ops.segment_sum(jnp.ones((n,)), server_id,
                                  num_segments=n_servers)
@@ -99,25 +103,40 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
     b = budgets_b[server_id] * share
     c = budgets_c[server_id] * share
 
+    if use_pallas:
+        # One static layout per solve: the (possibly traced) assignment is
+        # sorted/padded into per-server rows the kernel programs own.
+        layout = slot_solver.server_layout(server_id, n_servers)
+        config = functools.partial(slot_solver.config_argmin,
+                                   backend="pallas", interpret=interpret)
+        wf_b = functools.partial(slot_solver.waterfill_bandwidth,
+                                 layout=layout, interpret=interpret)
+        wf_c = functools.partial(slot_solver.waterfill_compute,
+                                 layout=layout, interpret=interpret)
+    else:
+        config = functools.partial(slot_solver.config_argmin, backend="jnp")
+        wf_b = allocate.waterfill_bandwidth
+        wf_c = allocate.waterfill_compute
+
     polish = method == "waterfill" and solver_effort == "fast"
     if polish:
         # Cheap solver effort inside the BCD loop (it only has to steer the
         # discrete config selection); one accurate re-allocation afterwards.
         cheap = dict(outer_iters=10, inner_iters=3, final_inner_iters=5)
-        fb = functools.partial(allocate.waterfill_bandwidth, **cheap)
-        fc = functools.partial(allocate.waterfill_compute, **cheap)
+        fb = functools.partial(wf_b, **cheap)
+        fc = functools.partial(wf_c, **cheap)
     elif method == "waterfill":
         # Pre-refactor effort: flat high-iteration water-filling each pass.
         seed_kw = dict(outer_iters=54, inner_iters=40, final_inner_iters=40)
-        fb = functools.partial(allocate.waterfill_bandwidth, **seed_kw)
-        fc = functools.partial(allocate.waterfill_compute, **seed_kw)
+        fb = functools.partial(wf_b, **seed_kw)
+        fc = functools.partial(wf_c, **seed_kw)
     else:
         fb = allocate.interior_point_bandwidth
         fc = allocate.interior_point_compute
 
     def body(_, state):
         b, c, r_idx, m_idx, pol = state
-        r_idx, m_idx, pol = _config_step(b, c, acc, xi, size, eff, q, V, n)
+        r_idx, m_idx, pol = config(b, c, acc, xi, size, eff, q, V, n)
         p = acc[jnp.arange(n), m_idx, r_idx]
         # line 4: bandwidth given (r, x, m, c).
         k = eff / size[r_idx]
@@ -138,11 +157,9 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
         p = acc[jnp.arange(n), m_idx, r_idx]
         k = eff / size[r_idx]
         mu = c / xi[m_idx, r_idx]
-        b = allocate.waterfill_bandwidth(k, p, pol, mu, server_id,
-                                         budgets_b, n_servers)
-        c = allocate.waterfill_compute(1.0 / xi[m_idx, r_idx], p, pol,
-                                       b * k, server_id, budgets_c,
-                                       n_servers)
+        b = wf_b(k, p, pol, mu, server_id, budgets_b, n_servers)
+        c = wf_c(1.0 / xi[m_idx, r_idx], p, pol, b * k, server_id,
+                 budgets_c, n_servers)
 
     lam, mu = _rates(b, c, r_idx, m_idx, eff, size, xi)
     p = acc[jnp.arange(n), m_idx, r_idx]

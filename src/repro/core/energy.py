@@ -50,12 +50,15 @@ class EnergyModel:
 
 
 @functools.partial(jax.jit, static_argnames=("n_scales", "n_bcd_iters",
-                                             "method", "solver_effort"))
+                                             "method", "solver_effort",
+                                             "solver_backend", "interpret"))
 def rollout_energy(tables: HorizonTables, v, p_min, kappa_tx, kappa_c,
                    e_max, q0=0.0, z0=0.0, n_scales: int = 13,
                    scale_base: float = 0.75, n_bcd_iters: int = 4,
                    method: str = "waterfill",
-                   solver_effort: str = "fast"):
+                   solver_effort: str = "fast",
+                   solver_backend: str = "jnp",
+                   interpret: bool | None = None):
     """Whole-horizon two-queue (accuracy + energy) LBCD as one scan.
 
     Per slot, both Algorithm-1 solves are vmapped over the budget-scale
@@ -72,7 +75,9 @@ def rollout_energy(tables: HorizonTables, v, p_min, kappa_tx, kappa_c,
     virt_id = jnp.zeros((n,), jnp.int32)
     scales = scale_base ** jnp.arange(n_scales, dtype=jnp.float32)
     solve = functools.partial(bcd.solve_slot, n_iters=n_bcd_iters,
-                              method=method, solver_effort=solver_effort)
+                              method=method, solver_effort=solver_effort,
+                              solver_backend=solver_backend,
+                              interpret=interpret)
 
     def solve_scaled(acc_t, eff_t, assign, bb, bc, q, z, n_srv):
         def at_scale(s):
@@ -144,7 +149,8 @@ class EnergyAwareLBCD(LBCDController):
                 tables, assign, budgets_b * s, budgets_c * s,
                 self.queue.q, self.v, n_servers=len(budgets_b),
                 n_iters=self.n_bcd_iters, method=self.method,
-                solver_effort=self.solver_effort)
+                solver_effort=self.solver_effort,
+                solver_backend=self.solver_backend)
             power = e.power(dec.b, dec.c).mean()
             score = float(dec.score) + z * power
             if best is None or score < best[0]:
@@ -187,7 +193,8 @@ class EnergyAwareLBCD(LBCDController):
             tables, self.v, self.queue.p_min, e.kappa_tx, e.kappa_c,
             e.e_max, q0=self.queue.q, z0=self.z_queue.q,
             n_bcd_iters=self.n_bcd_iters, method=self.method,
-            solver_effort=self.solver_effort)
+            solver_effort=self.solver_effort,
+            solver_backend=self.solver_backend)
         self.queue.q = float(res.q[-1])
         self.z_queue.q = float(zs[-1])
         summary = summarize(res, self.v, self.queue.p_min)

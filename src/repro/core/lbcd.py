@@ -118,10 +118,12 @@ class RolloutResult:
 
 
 @functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method",
-                                             "solver_effort"))
+                                             "solver_effort",
+                                             "solver_backend", "interpret"))
 def rollout(tables: HorizonTables, v, p_min, q0=0.0,
             n_bcd_iters: int = 4, method: str = "waterfill",
-            solver_effort: str = "fast") -> RolloutResult:
+            solver_effort: str = "fast", solver_backend: str = "jnp",
+            interpret: bool | None = None) -> RolloutResult:
     """Run Algorithm 3 for all T slots as one jitted ``lax.scan``.
 
     Args:
@@ -129,13 +131,18 @@ def rollout(tables: HorizonTables, v, p_min, q0=0.0,
       v, p_min: Lyapunov penalty weight and accuracy floor (traced scalars,
         so the function vmaps over hyperparameter grids).
       q0: initial virtual-queue value.
+      solver_backend: "jnp" | "pallas" — Algorithm-1 implementation (see
+        ``bcd.solve_slot``); ``interpret`` is the pallas interpret-mode
+        override (None = auto off-TPU).
     Returns a ``RolloutResult`` of device arrays.
     """
     n = tables.acc.shape[1]
     n_servers = tables.budgets_b.shape[1]
     virt_id = jnp.zeros((n,), jnp.int32)
     solve = functools.partial(bcd.solve_slot, n_iters=n_bcd_iters,
-                              method=method, solver_effort=solver_effort)
+                              method=method, solver_effort=solver_effort,
+                              solver_backend=solver_backend,
+                              interpret=interpret)
 
     def step(q, xs):
         acc_t, eff_t, bb, bc = xs
@@ -158,26 +165,34 @@ def rollout(tables: HorizonTables, v, p_min, q0=0.0,
                          decision=decs)
 
 
-@functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method"))
+@functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method",
+                                             "solver_backend", "interpret"))
 def rollout_grid(tables: HorizonTables, v, p_min, q0=0.0,
-                 n_bcd_iters: int = 4,
-                 method: str = "waterfill") -> RolloutResult:
+                 n_bcd_iters: int = 4, method: str = "waterfill",
+                 solver_backend: str = "jnp",
+                 interpret: bool | None = None) -> RolloutResult:
     """One vmapped call over a (V, P_min) hyperparameter grid.
 
     ``v``/``p_min`` are 1-D arrays of equal length G; returns a
     ``RolloutResult`` with leading axis G."""
-    fn = functools.partial(rollout, n_bcd_iters=n_bcd_iters, method=method)
+    fn = functools.partial(rollout, n_bcd_iters=n_bcd_iters, method=method,
+                           solver_backend=solver_backend,
+                           interpret=interpret)
     return jax.vmap(fn, in_axes=(None, 0, 0, None))(
         tables, jnp.asarray(v), jnp.asarray(p_min), q0)
 
 
-@functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method"))
+@functools.partial(jax.jit, static_argnames=("n_bcd_iters", "method",
+                                             "solver_backend", "interpret"))
 def rollout_scenarios(tables: HorizonTables, v, p_min, q0=0.0,
-                      n_bcd_iters: int = 4,
-                      method: str = "waterfill") -> RolloutResult:
+                      n_bcd_iters: int = 4, method: str = "waterfill",
+                      solver_backend: str = "jnp",
+                      interpret: bool | None = None) -> RolloutResult:
     """One vmapped call over stacked same-shape scenarios
     (``profiles.stack_horizons``); shared scalar hyperparameters."""
-    fn = functools.partial(rollout, n_bcd_iters=n_bcd_iters, method=method)
+    fn = functools.partial(rollout, n_bcd_iters=n_bcd_iters, method=method,
+                           solver_backend=solver_backend,
+                           interpret=interpret)
     return jax.vmap(fn, in_axes=(0, None, None, None))(
         tables, v, p_min, q0)
 
@@ -204,7 +219,8 @@ class LBCDController:
                  p_min: float = 0.7, n_bcd_iters: int = 4,
                  method: str = "waterfill",
                  assign_fn: Optional[Callable] = None,
-                 solver_effort: str = "fast"):
+                 solver_effort: str = "fast",
+                 solver_backend: str = "jnp"):
         self.system = system
         self.v = v
         self.queue = VirtualQueue(p_min=p_min)
@@ -212,6 +228,7 @@ class LBCDController:
         self.method = method
         self.assign_fn = assign_fn or binpack.first_fit
         self.solver_effort = solver_effort
+        self.solver_backend = solver_backend
 
     def step(self, t: int, tables=None) -> SlotRecord:
         sys = self.system
@@ -224,7 +241,8 @@ class LBCDController:
             tables, np.zeros(n, np.int32),
             np.array([budgets_b.sum()]), np.array([budgets_c.sum()]),
             self.queue.q, self.v, n_servers=1, n_iters=self.n_bcd_iters,
-            method=self.method, solver_effort=self.solver_effort)
+            method=self.method, solver_effort=self.solver_effort,
+            solver_backend=self.solver_backend)
 
         # --- Algorithm 2 lines 3-9: first-fit placement.
         assign = self.assign_fn(virt.b, virt.c, budgets_b, budgets_c)
@@ -233,7 +251,8 @@ class LBCDController:
         dec = bcd.solve_slot_np(
             tables, assign, budgets_b, budgets_c, self.queue.q, self.v,
             n_servers=len(budgets_b), n_iters=self.n_bcd_iters,
-            method=self.method, solver_effort=self.solver_effort)
+            method=self.method, solver_effort=self.solver_effort,
+            solver_backend=self.solver_backend)
 
         q = self.queue.update(float(np.mean(dec.acc)))    # Alg. 3 line 5
         return SlotRecord(t=t, aopi=dec.aopi, acc=dec.acc, q=q,
@@ -250,7 +269,8 @@ class LBCDController:
             tables = self.system.horizon(n_slots)
             res = rollout(tables, self.v, self.queue.p_min, q0=self.queue.q,
                           n_bcd_iters=self.n_bcd_iters, method=self.method,
-                          solver_effort=self.solver_effort)
+                          solver_effort=self.solver_effort,
+                          solver_backend=self.solver_backend)
             self.queue.q = float(res.q[-1])
             return summarize(res, self.v, self.queue.p_min)
         records = [self.step(t) for t in range(n_slots)]

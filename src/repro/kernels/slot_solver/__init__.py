@@ -1,0 +1,8 @@
+from .ops import (ServerLayout, config_argmin, server_layout,
+                  waterfill_bandwidth, waterfill_compute)
+from .ref import (config_argmin_ref, waterfill_bandwidth_ref,
+                  waterfill_compute_ref)
+
+__all__ = ["ServerLayout", "server_layout", "config_argmin",
+           "waterfill_bandwidth", "waterfill_compute", "config_argmin_ref",
+           "waterfill_bandwidth_ref", "waterfill_compute_ref"]

@@ -1,0 +1,250 @@
+"""Pallas TPU kernels for the Algorithm-1 slot-solver hot path.
+
+Two kernels, both pure VPU work (no MXU):
+
+  * ``config_argmin`` — Algorithm 1 line 3. The jnp backend materializes the
+    ``[N, M, R, 2]`` FCFS/LCFSP score tensor in HBM once per BCD pass (and
+    again for every vmap lane of a grid/scenario sweep). Here the camera
+    axis is tiled across the grid and the model axis is a static on-chip
+    loop: each program holds one ``[block_n, R]`` score slice in VMEM,
+    folds it into a running per-camera ``(best_value, best_flat_index)``
+    pair, and writes only the three ``[N]`` index vectors back to HBM. Tie
+    breaking matches the reference's flat argmin exactly (first index in
+    (m, r, policy) order, strict-``<`` fold over models).
+
+  * ``waterfill`` — Algorithm 1 lines 4/5. The grid program owns the whole
+    fleet: cameras arrive stably sorted into contiguous per-server blocks
+    and lane-padded to a ``[Np]`` vector (``ops.ServerLayout``), together
+    with the layout's static ``[S, Np]`` server-membership matrix. The
+    entire Illinois outer loop on the log-duals plus the bracketed inner
+    bisection runs on-chip: per-server duals/brackets/fill residuals are
+    ``[S, 1]`` registers, the per-camera allocation vectors live in VMEM,
+    and the two cross-camera couplings (per-server fill sums, dual
+    broadcast back to cameras) are membership-masked reductions — so the
+    per-camera h-evaluations stay O(N), not O(S*N). HBM traffic is one
+    read of the seven input vectors + membership and one write of the
+    allocation vector — the jnp path instead pays ~``outer_iters``
+    sequential ``segment_sum``/gather dispatches through HBM per solve.
+    The math (h-functions, closed forms, iteration budgets, Illinois
+    halving) mirrors ``repro.core.allocate._waterfill`` so the two
+    backends agree to float32 tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core import aopi
+
+_LOG_NU_LO = -34.0   # dual-variable search window (log domain)
+_LOG_NU_HI = 34.0
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Streaming config argmin (Algorithm 1 line 3)
+# ---------------------------------------------------------------------------
+
+def _config_kernel(qv_ref, b_ref, c_ref, eff_ref, acc_ref, xi_ref, size_ref,
+                   r_ref, m_ref, pol_ref, *, n_total: int, n_m: int,
+                   n_r: int):
+    q = qv_ref[0, 0]
+    v = qv_ref[0, 1]
+    b = b_ref[...]
+    c = c_ref[...]
+    eff = eff_ref[...]
+    size = size_ref[...]
+    bn = b.shape[0]
+    lam = (b * eff)[:, None] / size[None, :]               # [bn, R]
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, n_r), 1)
+
+    best_val = jnp.full((bn,), jnp.inf, jnp.float32)
+    best_flat = jnp.zeros((bn,), jnp.int32)
+    for m in range(n_m):                                   # static on-chip loop
+        mu = c[:, None] / xi_ref[m, :][None, :]            # [bn, R]
+        acc_m = acc_ref[:, m, :]                           # [bn, R]
+        p = jnp.maximum(acc_m, 1e-3)
+        s_f = (v * aopi.aopi_fcfs(lam, mu, p) - q * acc_m) / n_total
+        s_l = (v * aopi.aopi_lcfsp(lam, mu, p) - q * acc_m) / n_total
+        # Per resolution, LCFSP only wins a tie-free strict comparison —
+        # flat order is (r, policy), FCFS first, matching the reference.
+        l_wins = s_l < s_f
+        val = jnp.where(l_wins, s_l, s_f)                  # [bn, R]
+        pol_r = l_wins.astype(jnp.int32)
+        min_val = jnp.min(val, axis=1, keepdims=True)
+        first_r = jnp.min(jnp.where(val == min_val, r_iota, n_r), axis=1)
+        sel = r_iota == first_r[:, None]
+        loc_val = jnp.sum(jnp.where(sel, val, 0.0), axis=1)
+        loc_pol = jnp.sum(jnp.where(sel, pol_r, 0), axis=1)
+        loc_flat = m * (n_r * 2) + first_r * 2 + loc_pol
+        take = loc_val < best_val                          # keeps earliest m
+        best_val = jnp.where(take, loc_val, best_val)
+        best_flat = jnp.where(take, loc_flat, best_flat)
+
+    m_ref[...] = best_flat // (n_r * 2)
+    r_ref[...] = (best_flat // 2) % n_r
+    pol_ref[...] = best_flat % 2
+
+
+@functools.partial(jax.jit, static_argnames=("n_total", "block_n",
+                                             "interpret"))
+def config_argmin(b, c, acc, xi, size, eff, q, v, *, n_total: int,
+                  block_n: int = 1024, interpret: bool = False):
+    """Streaming (m, r, policy) argmin; returns ``(r_idx, m_idx, pol)``."""
+    n, n_m, n_r = acc.shape
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(n, block_n),)
+    qv = jnp.stack([jnp.asarray(q, jnp.float32),
+                    jnp.asarray(v, jnp.float32)]).reshape(1, 2)
+    kernel = functools.partial(_config_kernel, n_total=n_total, n_m=n_m,
+                               n_r=n_r)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),               # q, V
+            pl.BlockSpec((block_n,), lambda i: (i,)),            # b
+            pl.BlockSpec((block_n,), lambda i: (i,)),            # c
+            pl.BlockSpec((block_n,), lambda i: (i,)),            # eff
+            pl.BlockSpec((block_n, n_m, n_r), lambda i: (i, 0, 0)),  # acc
+            pl.BlockSpec((n_m, n_r), lambda i: (0, 0)),          # xi
+            pl.BlockSpec((n_r,), lambda i: (0,)),                # size
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)] * 3,
+        interpret=interpret,
+    )(qv, b, c, eff, acc, xi, size)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Per-server on-chip water-filling (Algorithm 1 lines 4/5)
+# ---------------------------------------------------------------------------
+
+def _waterfill_kernel(scale_ref, p_ref, pol_ref, other_ref, lo_ref, hi_ref,
+                      cf_ref, member_ref, x_ref, *, mode: str,
+                      outer_iters: int, inner_iters: int,
+                      final_inner_iters: int):
+    scale = scale_ref[...]                                # [Np]
+    p = p_ref[...]
+    is_l = pol_ref[...] == aopi.LCFSP
+    other = other_ref[...]                                # mu (bw) / lam (c)
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    cf = cf_ref[...]                                      # closed-form coeff
+    member = member_ref[...]                              # [S, Np] 0/1
+
+    def h_fn(x):
+        if mode == "bandwidth":
+            lam = jnp.maximum(scale * x, _EPS)
+            d_l = aopi.d_aopi_lcfsp_dlam(lam, other, p)
+            d_f = aopi.d_aopi_fcfs_dlam(jnp.minimum(lam, 0.999 * other),
+                                        other, p)
+        else:
+            mu = jnp.maximum(scale * x, _EPS)
+            d_l = aopi.d_aopi_lcfsp_dmu(other, mu, p)
+            d_f = aopi.d_aopi_fcfs_dmu(jnp.minimum(other, 0.999 * mu),
+                                       mu, p)
+        d = jnp.where(is_l, d_l, d_f)
+        return jnp.maximum(-d * scale, 0.0)
+
+    def solve_h_equals_nu(nu, blo, bhi, iters):
+        def body(_, state):
+            a, b = state
+            mid = 0.5 * (a + b)
+            go_up = h_fn(mid) >= nu
+            return jnp.where(go_up, mid, a), jnp.where(go_up, b, mid)
+        a, b = jax.lax.fori_loop(0, iters, body, (blo, bhi))
+        return 0.5 * (a + b)
+
+    n_servers = member.shape[0]
+
+    def per_camera(v_s):
+        """Broadcast a per-server [S, 1] value to cameras [Np] (zero on
+        padding slots, whose membership column is all-zero)."""
+        return jnp.sum(member * v_s, axis=0)
+
+    def alloc_at(log_nu_s, blo, bhi, iters):
+        nu = per_camera(jnp.exp(log_nu_s))                # [Np] duals
+        x_cl = jnp.sqrt(cf / jnp.maximum(scale * nu, _EPS))
+        x_bi = solve_h_equals_nu(nu, blo, bhi, iters)
+        return jnp.clip(jnp.where(is_l, x_cl, x_bi), lo, hi)
+
+    def bracket(xa, xb):
+        pad = 0.25 * jnp.maximum(xa - xb, 0.0) + 1e-7
+        return jnp.maximum(lo, xb - pad), jnp.minimum(hi, xa + pad)
+
+    def fill_at(log_nu_s, xa, xb, iters):
+        blo, bhi = bracket(xa, xb)
+        x = alloc_at(log_nu_s, blo, bhi, iters)
+        f = jnp.sum(member * x[None, :], axis=1,
+                    keepdims=True) - 1.0                  # [S, 1]
+        return x, f
+
+    a0 = jnp.full((n_servers, 1), _LOG_NU_LO, jnp.float32)
+    b0 = jnp.full((n_servers, 1), _LOG_NU_HI, jnp.float32)
+    xa0, fa0 = fill_at(a0, hi, lo, inner_iters + 4)
+    xb0, fb0 = fill_at(b0, hi, lo, inner_iters + 4)
+
+    def body(_, state):
+        a, b, fa, fb, xa, xb = state
+        denom = fa - fb
+        t = jnp.where(jnp.abs(denom) > 1e-12, fa / denom, 0.5)
+        t = jnp.clip(t, 0.05, 0.95)
+        mid = a + t * (b - a)
+        x, f = fill_at(mid, xa, xb, inner_iters)
+        over = f > 0.0             # over budget -> raise the price
+        over_n = per_camera(over.astype(jnp.float32)) > 0.5
+        return (jnp.where(over, mid, a), jnp.where(over, b, mid),
+                jnp.where(over, f, 0.5 * fa),    # Illinois halving of the
+                jnp.where(over, 0.5 * fb, f),    # retained endpoint
+                jnp.where(over_n, x, xa), jnp.where(over_n, xb, x))
+
+    a, b, _, _, xa, xb = jax.lax.fori_loop(
+        0, outer_iters, body, (a0, b0, fa0, fb0, xa0, xb0))
+    blo, bhi = bracket(xa, xb)
+    # If the total cap is below budget the constraint is slack: keep caps.
+    x_ref[...] = alloc_at(0.5 * (a + b), blo, bhi, final_inner_iters)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "outer_iters",
+                                             "inner_iters",
+                                             "final_inner_iters",
+                                             "interpret"))
+def waterfill(scale, p, pol, other, lo, hi, cf, member, *, mode: str,
+              outer_iters: int = 16, inner_iters: int = 6,
+              final_inner_iters: int = 20, interpret: bool = False):
+    """Run the fused water-fill on flat layout vectors.
+
+    The seven per-camera vectors are ``[Np]`` in the layout's sorted
+    (contiguous-per-server, lane-padded) order and ``member`` is the
+    layout's ``[S, Np]`` membership matrix (``ops.ServerLayout.member``).
+    Returns normalized allocations ``[Np]`` in the same order. One grid
+    program holds the whole fleet in VMEM (~9 f32 vectors + the
+    membership matrix — N up to ~10^5 at edge-scale server counts).
+    """
+    cap = scale.shape[0]
+    n_servers = member.shape[0]
+    kernel = functools.partial(_waterfill_kernel, mode=mode,
+                               outer_iters=outer_iters,
+                               inner_iters=inner_iters,
+                               final_inner_iters=final_inner_iters)
+    vec = pl.BlockSpec((cap,), lambda: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[vec] * 7 + [pl.BlockSpec((n_servers, cap),
+                                           lambda: (0, 0))],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((cap,), jnp.float32),
+        interpret=interpret,
+    )(scale, p, pol, other, lo, hi, cf, member)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the fused slot-solver kernels.
+
+``config_argmin_ref`` is the Algorithm-1 line-3 exhaustive search exactly as
+the jnp backend runs it — it materializes the full ``[N, M, R, 2]``
+config-score tensor (the HBM traffic the streaming Pallas kernel exists to
+avoid) and takes one flat argmin per camera. ``waterfill_bandwidth_ref`` /
+``waterfill_compute_ref`` re-export the production water-filling allocators
+(Illinois outer loop + bracketed inner root-find over ``segment_sum``
+round trips) so parity tests compare the kernel against the code the jnp
+backend actually dispatches.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import allocate, aopi
+
+waterfill_bandwidth_ref = allocate.waterfill_bandwidth
+waterfill_compute_ref = allocate.waterfill_compute
+
+
+def config_argmin_ref(b, c, acc, xi, size, eff, q, v, n_total):
+    """Algorithm 1 line 3: exhaustive search over (m, r, policy).
+
+    Returns per-camera ``(r_idx, m_idx, pol)`` minimizing the
+    drift-plus-penalty score ``(V * AoPI - q * acc) / n_total`` over the
+    full config grid. Ties break to the first flat index in
+    (m-major, r, policy) order — the Pallas kernel replicates this.
+    """
+    # lam[n, r]: resolution changes frame size; mu[n, m, r]: both change xi.
+    lam = (b * eff)[:, None] / size[None, :]
+    mu = c[:, None, None] / xi[None, :, :]
+    lam_b = lam[:, None, :]                            # [n, 1, r]
+    a_f = aopi.aopi_fcfs(jnp.broadcast_to(lam_b, mu.shape), mu,
+                         jnp.maximum(acc, 1e-3))
+    a_l = aopi.aopi_lcfsp(jnp.broadcast_to(lam_b, mu.shape), mu,
+                          jnp.maximum(acc, 1e-3))
+    a = jnp.stack([a_f, a_l], axis=-1)                 # [n, m, r, 2]
+    score = (v * a - q * acc[..., None]) / n_total
+    flat = score.reshape(score.shape[0], -1)
+    best = jnp.argmin(flat, axis=1)
+    n_r = xi.shape[1]
+    m_idx = (best // (n_r * 2)).astype(jnp.int32)
+    r_idx = ((best // 2) % n_r).astype(jnp.int32)
+    pol = (best % 2).astype(jnp.int32)
+    return r_idx, m_idx, pol

@@ -82,15 +82,17 @@ class SweepResult:
         return self.acc[policy].mean(axis=1)
 
 
-def _reduced_policy(name: str, n_bcd_iters: int):
+def _reduced_policy(name: str, n_bcd_iters: int, solver_backend: str):
     """One scenario's rollout -> [T] fleet means, with every policy knob a
     traced scalar so one compiled program serves all knob values."""
     def fn(tables: HorizonTables, v, p_min, dos_weight, jcab_cap):
         if name == "lbcd":
-            res = lbcd.rollout(tables, v, p_min, n_bcd_iters=n_bcd_iters)
+            res = lbcd.rollout(tables, v, p_min, n_bcd_iters=n_bcd_iters,
+                               solver_backend=solver_backend)
         elif name == "min":
             res = baselines.rollout_min(tables, v,
-                                        n_bcd_iters=n_bcd_iters)
+                                        n_bcd_iters=n_bcd_iters,
+                                        solver_backend=solver_backend)
         elif name == "dos":
             res = baselines.rollout_dos(tables, dos_weight)
         elif name == "jcab":
@@ -105,22 +107,26 @@ def _reduced_policy(name: str, n_bcd_iters: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _vmapped(name: str, n_bcd_iters: int):
+def _vmapped(name: str, n_bcd_iters: int, solver_backend: str):
     """The shared block program: vmap over scenarios, scalars broadcast.
     Cached so repeat sweeps (and the fleet backend's per-device dispatch)
     reuse one compiled executable per (policy, shapes)."""
-    return jax.jit(jax.vmap(_reduced_policy(name, n_bcd_iters),
-                            in_axes=(0, None, None, None, None)))
+    return jax.jit(jax.vmap(
+        _reduced_policy(name, n_bcd_iters, solver_backend),
+        in_axes=(0, None, None, None, None)))
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded(name: str, n_bcd_iters: int, devices: tuple):
+def _sharded(name: str, n_bcd_iters: int, solver_backend: str,
+             devices: tuple):
     mesh = Mesh(np.asarray(devices), ("scenario",))
+    # check_rep=False: jax has no replication rule for pallas_call; the
+    # sweep has no collectives, so the check adds nothing here.
     return jax.jit(shard_map(
-        jax.vmap(_reduced_policy(name, n_bcd_iters),
+        jax.vmap(_reduced_policy(name, n_bcd_iters, solver_backend),
                  in_axes=(0, None, None, None, None)),
         mesh=mesh, in_specs=(P("scenario"), P(), P(), P(), P()),
-        out_specs=P("scenario")))
+        out_specs=P("scenario"), check_rep=False))
 
 
 def _pad_scenarios(tables: HorizonTables, pad: int) -> HorizonTables:
@@ -132,22 +138,22 @@ def _pad_scenarios(tables: HorizonTables, pad: int) -> HorizonTables:
             [x, jnp.repeat(x[-1:], pad, axis=0)], axis=0), tables)
 
 
-def _run_shard_map(name, n_bcd_iters, tables, knobs, n_scenarios,
-                   devices) -> dict:
+def _run_shard_map(name, n_bcd_iters, solver_backend, tables, knobs,
+                   n_scenarios, devices) -> dict:
     pad = (-n_scenarios) % len(devices)
-    fn = _sharded(name, n_bcd_iters, tuple(devices))
+    fn = _sharded(name, n_bcd_iters, solver_backend, tuple(devices))
     out = fn(_pad_scenarios(tables, pad), *knobs)
     return {k: np.asarray(x)[:n_scenarios] for k, x in out.items()}
 
 
-def _run_fleet(name, n_bcd_iters, tables, knobs, n_scenarios,
-               devices) -> dict:
+def _run_fleet(name, n_bcd_iters, solver_backend, tables, knobs,
+               n_scenarios, devices) -> dict:
     """The vmap block program, one async dispatch per device."""
     n_dev = len(devices)
     pad = (-n_scenarios) % n_dev
     padded = _pad_scenarios(tables, pad)
     block_len = (n_scenarios + pad) // n_dev
-    block_fn = _vmapped(name, n_bcd_iters)
+    block_fn = _vmapped(name, n_bcd_iters, solver_backend)
     futures = []
     for i, dev in enumerate(devices):
         block = jax.tree.map(
@@ -159,21 +165,24 @@ def _run_fleet(name, n_bcd_iters, tables, knobs, n_scenarios,
                               axis=0)[:n_scenarios] for k in keys}
 
 
-def _run_vmap(name, n_bcd_iters, tables, knobs) -> dict:
-    out = _vmapped(name, n_bcd_iters)(tables, *knobs)
+def _run_vmap(name, n_bcd_iters, solver_backend, tables, knobs) -> dict:
+    out = _vmapped(name, n_bcd_iters, solver_backend)(tables, *knobs)
     return {k: np.asarray(x) for k, x in out.items()}
 
 
 def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
           p_min: float = 0.7, policies: Sequence[str] = POLICIES,
           devices: Sequence | None = None, backend: str | None = None,
-          policy_params: Mapping | None = None) -> SweepResult:
+          policy_params: Mapping | None = None,
+          solver_backend: str = "jnp") -> SweepResult:
     """Run every policy over every stacked scenario; one sharded (or
     vmapped) device-resident call per policy.
 
     ``backend=None`` picks ``"shard_map"`` on >= 2 devices and ``"vmap"``
     on one; pass ``"fleet"`` for the bitwise-reproducible multi-device
-    path (see module docstring).
+    path (see module docstring). ``solver_backend`` selects the
+    Algorithm-1 implementation inside LBCD/MIN ("jnp" | "pallas", see
+    ``bcd.solve_slot``; no-op for DOS/JCAB which run no BCD solve).
     """
     if isinstance(suite_or_tables, Suite):
         tables = suite_or_tables.tables
@@ -211,14 +220,17 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
     for name in policies:
         if name not in POLICIES:
             raise ValueError(f"unknown policy {name!r}; known: {POLICIES}")
+        # DOS/JCAB run no BCD solve: normalize their cache key so a pallas
+        # sweep reuses the same compiled block program as a jnp one.
+        sb = solver_backend if name in ("lbcd", "min") else "jnp"
         if backend == "shard_map" and len(devices) > 1:
-            series[name] = _run_shard_map(name, n_bcd_iters, tables, knobs,
-                                          n_scenarios, devices)
+            series[name] = _run_shard_map(name, n_bcd_iters, sb, tables,
+                                          knobs, n_scenarios, devices)
         elif backend == "fleet" and len(devices) > 1:
-            series[name] = _run_fleet(name, n_bcd_iters, tables, knobs,
+            series[name] = _run_fleet(name, n_bcd_iters, sb, tables, knobs,
                                       n_scenarios, devices)
         else:
-            series[name] = _run_vmap(name, n_bcd_iters, tables, knobs)
+            series[name] = _run_vmap(name, n_bcd_iters, sb, tables, knobs)
 
     tag = backend if len(devices) > 1 or backend == "vmap" else "vmap"
     backend_str = (f"{tag}[{len(devices)}]" if tag != "vmap" else "vmap")

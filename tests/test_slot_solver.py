@@ -1,0 +1,389 @@
+"""Fused slot-solver kernels vs the jnp backend: parity + dispatch shape.
+
+Pallas runs in interpret mode on CPU (the ops layer auto-selects it
+off-TPU), so everything here exercises the exact kernel code paths that
+compile on device.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import core as jax_core
+
+from repro.core import allocate, aopi, bcd, lbcd, profiles
+from repro.kernels import slot_solver
+from repro.kernels.slot_solver import ops as slot_ops
+
+
+def _setup(n, s, seed=0, lcfsp_frac=0.5, budget_lo=2e7, budget_hi=5e7,
+           server_id=None):
+    rng = np.random.default_rng(seed)
+    k = rng.uniform(1e-6, 5e-6, n)
+    p = rng.uniform(0.3, 0.95, n)
+    pol = (rng.random(n) < lcfsp_frac).astype(np.int32)
+    mu = rng.uniform(5.0, 40.0, n)
+    if server_id is None:
+        server_id = rng.integers(0, s, n).astype(np.int32)
+    budgets = rng.uniform(budget_lo, budget_hi, s)
+    return (jnp.asarray(k, jnp.float32), jnp.asarray(p, jnp.float32),
+            jnp.asarray(pol), jnp.asarray(mu, jnp.float32),
+            jnp.asarray(server_id), jnp.asarray(budgets, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# ServerLayout
+# ---------------------------------------------------------------------------
+
+def test_server_layout_roundtrip_and_padding():
+    sid = jnp.asarray([2, 0, 2, 1, 0, 2, 0], jnp.int32)
+    layout = slot_solver.server_layout(sid, 3)
+    n = sid.shape[0]
+    assert layout.capacity % 128 == 0 and layout.capacity >= n
+    np.testing.assert_array_equal(np.asarray(layout.counts), [3, 1, 3])
+    order = np.asarray(layout.order)
+    mask = np.asarray(layout.mask)
+    # Every camera appears exactly once, on its own server's row, in
+    # ascending original order (stable sort); padding slots carry the
+    # sentinel and zero mask.
+    real = order[mask > 0]
+    assert sorted(real.tolist()) == list(range(n))
+    for s in range(3):
+        row = order[s][mask[s] > 0]
+        assert all(np.asarray(sid)[i] == s for i in row)
+        assert list(row) == sorted(row)
+    assert (order[mask == 0] == n).all()
+    # gather -> scatter is the identity on per-camera vectors.
+    x = jnp.arange(1.0, n + 1.0)
+    np.testing.assert_allclose(
+        np.asarray(layout.scatter(layout.gather(x), n)), np.asarray(x))
+
+
+def test_server_layout_capacity_floor_and_overflow():
+    # Sub-lane capacities round up to the 128-lane floor: nothing drops.
+    sid = jnp.zeros((5,), jnp.int32)
+    layout = slot_solver.server_layout(sid, 1, capacity=2)
+    assert layout.capacity == 128
+    assert int(layout.mask.sum()) == 5
+    # A server loaded past the rounded capacity drops the overflow from
+    # its row view; the flat view still carries every camera.
+    sid = jnp.zeros((130,), jnp.int32)
+    layout = slot_solver.server_layout(sid, 1, capacity=100)
+    assert layout.capacity == 128
+    assert int(layout.mask.sum()) == 128          # 2 dropped from the row
+    assert int(layout.counts[0]) == 130
+    assert int(layout.flat_mask.sum()) == 130     # flat view is complete
+    x = jnp.arange(130.0)
+    np.testing.assert_allclose(
+        np.asarray(layout.scatter_flat(layout.gather_flat(x), 130)),
+        np.asarray(x))
+
+
+def test_server_layout_empty_server():
+    sid = jnp.asarray([0, 0, 2, 2], jnp.int32)
+    layout = slot_solver.server_layout(sid, 3)
+    assert int(layout.counts[1]) == 0
+    assert float(layout.mask[1].sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Water-filling kernel vs jnp _waterfill
+# ---------------------------------------------------------------------------
+
+def _assert_bandwidth_parity(n, s, seed, lcfsp_frac, budget_lo=2e7,
+                             budget_hi=5e7, server_id=None):
+    k, p, pol, mu, sid, B = _setup(n, s, seed=seed, lcfsp_frac=lcfsp_frac,
+                                   budget_lo=budget_lo, budget_hi=budget_hi,
+                                   server_id=server_id)
+    b_ref = np.asarray(allocate.waterfill_bandwidth(
+        k, p, pol, mu, sid, B, n_servers=s))
+    b_pl = np.asarray(slot_solver.waterfill_bandwidth(
+        k, p, pol, mu, sid, B, n_servers=s))
+    np.testing.assert_allclose(b_pl, b_ref, rtol=2e-4, atol=1e-2)
+    return b_pl, np.asarray(sid), np.asarray(B)
+
+
+def test_waterfill_bandwidth_parity_hypothesis():
+    """Random FCFS/LCFSP mixes: pallas-interpret == jnp ``_waterfill``."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([0.0, 0.3, 0.5, 1.0]))
+    def inner(seed, frac):
+        _assert_bandwidth_parity(10, 2, seed, frac)
+    inner()
+
+
+def test_waterfill_compute_parity_hypothesis():
+    """Compute side (FCFS stability floors active) parity."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([0.0, 0.5, 1.0]))
+    def inner(seed, frac):
+        rng = np.random.default_rng(seed)
+        n, s = 10, 2
+        inv_xi = jnp.asarray(rng.uniform(1e-12, 5e-12, n), jnp.float32)
+        p = jnp.asarray(rng.uniform(0.3, 0.95, n), jnp.float32)
+        pol = jnp.asarray((rng.random(n) < frac).astype(np.int32))
+        lam = jnp.asarray(rng.uniform(1.0, 10.0, n), jnp.float32)
+        sid = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+        C = jnp.asarray(rng.uniform(3e13, 8e13, s), jnp.float32)
+        c_ref = np.asarray(allocate.waterfill_compute(
+            inv_xi, p, pol, lam, sid, C, n_servers=s))
+        c_pl = np.asarray(slot_solver.waterfill_compute(
+            inv_xi, p, pol, lam, sid, C, n_servers=s))
+        np.testing.assert_allclose(c_pl, c_ref, rtol=2e-4, atol=1e4)
+    inner()
+
+
+def test_waterfill_slack_budget_keeps_caps():
+    """When the FCFS caps sum below the budget the constraint is slack:
+    both backends return the caps and stay (well) under budget."""
+    # All-FCFS + huge budgets -> hi = lam*/(k*B) << 1 per camera.
+    b, sid, B = _assert_bandwidth_parity(8, 2, seed=11, lcfsp_frac=0.0,
+                                         budget_lo=5e9, budget_hi=9e9)
+    for s in range(2):
+        m = sid == s
+        assert b[m].sum() < 0.9 * B[s]
+
+
+def test_waterfill_degenerate_single_camera_servers():
+    """One camera per server: the dual search degenerates to the
+    per-camera cap; backends must still agree."""
+    n = 6
+    _assert_bandwidth_parity(n, n, seed=3, lcfsp_frac=0.5,
+                             server_id=np.arange(n, dtype=np.int32))
+
+
+def test_waterfill_budget_respected_and_positive():
+    b, sid, B = _assert_bandwidth_parity(12, 3, seed=7, lcfsp_frac=0.5)
+    assert (b > 0).all() and np.isfinite(b).all()
+    for s in range(3):
+        assert b[sid == s].sum() <= float(B[s]) * 1.001
+
+
+# ---------------------------------------------------------------------------
+# Streaming config argmin vs materialized reference
+# ---------------------------------------------------------------------------
+
+def _config_inputs(n, seed=0, m=5, r=6):
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(rng.uniform(0.2, 0.95, (n, m, r)), jnp.float32)
+    xi = jnp.asarray(np.sort(rng.uniform(1e9, 2e11, (m, r)), axis=1),
+                     jnp.float32)
+    size = jnp.asarray(1.2 * np.asarray(profiles.RESOLUTIONS)[:r] ** 2,
+                       jnp.float32)
+    eff = jnp.asarray(rng.uniform(4.0, 7.0, n), jnp.float32)
+    b = jnp.asarray(rng.uniform(1e6, 1e7, n), jnp.float32)
+    c = jnp.asarray(rng.uniform(1e12, 1e13, n), jnp.float32)
+    return b, c, acc, xi, size, eff
+
+
+@pytest.mark.parametrize("n,block_n", [(7, 1024), (40, 16), (64, 64)])
+def test_config_argmin_matches_ref(n, block_n):
+    """Streaming kernel == flat argmin (incl. non-divisible tiling)."""
+    for seed in range(3):
+        b, c, acc, xi, size, eff = _config_inputs(n, seed=seed)
+        ref = slot_solver.config_argmin_ref(b, c, acc, xi, size, eff,
+                                            1.3, 10.0, n)
+        out = slot_solver.config_argmin(b, c, acc, xi, size, eff,
+                                        1.3, 10.0, n, backend="pallas",
+                                        block_n=block_n)
+        for name, a, o in zip(("r", "m", "pol"), ref, out):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(o),
+                                          err_msg=f"{name} seed={seed}")
+
+
+# ---------------------------------------------------------------------------
+# Full Algorithm-1 solve + rollout backend parity
+# ---------------------------------------------------------------------------
+
+def _slot_instance(seed, n=12, s=3):
+    rng = np.random.default_rng(seed)
+    sys = profiles.EdgeSystem(n_cameras=n, n_servers=s, n_slots=4,
+                              seed=seed)
+    tab = sys.horizon(1)
+    sid = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    return (tab.acc[0], tab.xi, tab.size, tab.eff, sid, tab.budgets_b[0],
+            tab.budgets_c[0], jnp.float32(rng.uniform(0.0, 3.0)),
+            jnp.float32(rng.uniform(1.0, 30.0)))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_solve_slot_pallas_matches_jnp(seed):
+    args = _slot_instance(seed)
+    d_jnp = bcd.solve_slot(*args, n_servers=3)
+    d_pl = bcd.solve_slot(*args, n_servers=3, solver_backend="pallas")
+    for f in ("r_idx", "m_idx", "pol"):
+        np.testing.assert_array_equal(np.asarray(getattr(d_jnp, f)),
+                                      np.asarray(getattr(d_pl, f)),
+                                      err_msg=f"{f} seed={seed}")
+    for f in ("b", "c", "lam", "mu", "acc", "aopi"):
+        np.testing.assert_allclose(np.asarray(getattr(d_pl, f)),
+                                   np.asarray(getattr(d_jnp, f)),
+                                   rtol=5e-4, err_msg=f"{f} seed={seed}")
+    assert float(d_pl.score) == pytest.approx(float(d_jnp.score), rel=1e-4)
+
+
+def test_solve_slot_pallas_rejects_interior_point():
+    args = _slot_instance(5)
+    with pytest.raises(ValueError, match="interior"):
+        bcd.solve_slot(*args, n_servers=3, method="interior",
+                       solver_backend="pallas")
+    with pytest.raises(ValueError, match="solver_backend"):
+        bcd.solve_slot(*args, n_servers=3, solver_backend="cuda")
+
+
+def test_rollout_backend_parity():
+    """Whole-horizon scan (first-fit assignments traced through the
+    layout build) agrees across backends.
+
+    Contract: per-slot parity is float32-tight *given the assignment*,
+    but the backends' different fp summation order can flip a knife-edge
+    first-fit tie into a different (equally valid) placement on rare
+    slots — same amplification the shard_map caveat documents. So slots
+    with identical assignments must match tightly, tie-flip slots must be
+    rare, and the fleet aggregate must agree closely either way."""
+    sys = profiles.EdgeSystem(n_cameras=10, n_servers=3, n_slots=8,
+                              mean_bandwidth_hz=15e6,
+                              mean_compute_flops=20e12)
+    tab = sys.horizon(8)
+    r_jnp = lbcd.rollout(tab, 10.0, 0.7)
+    r_pl = lbcd.rollout(tab, 10.0, 0.7, solver_backend="pallas")
+    same = np.all(np.asarray(r_jnp.assign) == np.asarray(r_pl.assign),
+                  axis=1)
+    assert same.mean() >= 0.75, f"tie flips on {(~same).sum()}/8 slots"
+    np.testing.assert_allclose(np.asarray(r_pl.aopi)[same],
+                               np.asarray(r_jnp.aopi)[same], rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(r_pl.aopi).mean(axis=1),
+                               np.asarray(r_jnp.aopi).mean(axis=1),
+                               rtol=5e-3)
+    np.testing.assert_allclose(np.asarray(r_pl.q), np.asarray(r_jnp.q),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_sweep_threads_solver_backend():
+    """``scenarios.sweep(..., solver_backend="pallas")`` reproduces the jnp
+    sweep. Strict parity is pinned on one device (vmap — no
+    ``num_partitions > 1`` rewrite involved); with more devices visible
+    (the CI kernel step's 4 virtual ones) the shard_map path must also run
+    and agree statistically, per the documented first-fit tie caveat."""
+    from repro import scenarios
+    from repro.core import profiles as prof
+
+    stacked = prof.stack_horizons(
+        [prof.EdgeSystem(n_cameras=6, n_servers=2, n_slots=3,
+                         seed=i).horizon(3) for i in range(2)])
+    one = jax.devices()[:1]
+    r_jnp = scenarios.sweep(stacked, policies=("lbcd", "min"), devices=one)
+    r_pl = scenarios.sweep(stacked, policies=("lbcd", "min"), devices=one,
+                           solver_backend="pallas")
+    for pol in ("lbcd", "min"):
+        np.testing.assert_allclose(r_pl.aopi[pol], r_jnp.aopi[pol],
+                                   rtol=1e-3, err_msg=pol)
+        np.testing.assert_allclose(r_pl.acc[pol], r_jnp.acc[pol],
+                                   rtol=1e-3, err_msg=pol)
+    if len(jax.devices()) > 1:
+        r_sh = scenarios.sweep(stacked, policies=("lbcd",),
+                               backend="shard_map",
+                               solver_backend="pallas")
+        assert r_sh.backend.startswith("shard_map")
+        np.testing.assert_allclose(r_sh.aopi["lbcd"].mean(),
+                                   r_jnp.aopi["lbcd"].mean(), rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch structure: one fused call per water-fill, no [N, M, R, 2] HBM
+# tensor on the pallas path.
+# ---------------------------------------------------------------------------
+
+def _walk_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _walk_eqns(sub)
+
+
+def _subjaxprs(v):
+    if isinstance(v, jax_core.ClosedJaxpr):
+        return [v.jaxpr]
+    if isinstance(v, jax_core.Jaxpr):
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for x in v for j in _subjaxprs(x)]
+    return []
+
+
+def _prim_counts(jaxpr):
+    counts = {}
+    for eqn in _walk_eqns(jaxpr):
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+    return counts
+
+
+def _has_aval_shape(jaxpr, shape):
+    return any(tuple(getattr(var.aval, "shape", ())) == tuple(shape)
+               for eqn in _walk_eqns(jaxpr) for var in eqn.outvars)
+
+
+def test_waterfill_pallas_is_single_dispatch():
+    """The fused allocator is ONE pallas_call; the jnp allocator's outer
+    loop re-dispatches segment_sum (scatter-add) every iteration."""
+    k, p, pol, mu, sid, B = _setup(12, 3)
+    fused = jax.make_jaxpr(functools.partial(
+        slot_solver.waterfill_bandwidth, n_servers=3))(k, p, pol, mu, sid, B)
+    counts = _prim_counts(fused.jaxpr)
+    assert counts.get("pallas_call", 0) == 1
+    # The whole dual search runs inside that one call: the only scatter-add
+    # is the one-time per-server camera count of the layout build, and the
+    # only scatters are the layout's gather table + the single allocation
+    # write-back — nothing per outer iteration.
+    assert counts.get("scatter-add", 0) <= 1
+    assert counts.get("scatter", 0) <= 2
+
+    ref = jax.make_jaxpr(functools.partial(
+        allocate.waterfill_bandwidth, n_servers=3))(k, p, pol, mu, sid, B)
+    ref_counts = _prim_counts(ref.jaxpr)
+    assert ref_counts.get("pallas_call", 0) == 0
+    assert ref_counts.get("scatter-add", 0) >= 3   # fill residual per phase
+
+
+def test_config_argmin_pallas_never_materializes_score_tensor():
+    n, m, r = 24, 5, 6
+    b, c, acc, xi, size, eff = _config_inputs(n, m=m, r=r)
+    args = (b, c, acc, xi, size, eff, 1.0, 10.0)
+
+    ref = jax.make_jaxpr(
+        lambda *a: slot_solver.config_argmin(*a, n_total=n,
+                                             backend="jnp"))(*args)
+    assert _has_aval_shape(ref.jaxpr, (n, m, r, 2))
+
+    fused = jax.make_jaxpr(
+        lambda *a: slot_solver.config_argmin(*a, n_total=n,
+                                             backend="pallas",
+                                             block_n=8))(*args)
+    assert not _has_aval_shape(fused.jaxpr, (n, m, r, 2))
+    assert _prim_counts(fused.jaxpr).get("pallas_call", 0) == 1
+
+
+def test_solve_slot_pallas_dispatch_structure():
+    """Whole Algorithm-1 solve: every BCD pass is 3 fused dispatches
+    (config + 2 water-fills) and the big score tensor never hits HBM."""
+    args = _slot_instance(0)
+    n, n_m, n_r = args[0].shape
+    fused = jax.make_jaxpr(functools.partial(
+        bcd.solve_slot, n_servers=3, solver_backend="pallas"))(*args)
+    counts = _prim_counts(fused.jaxpr)
+    # 1 config + 2 water-fills in the BCD body + 2 polish water-fills.
+    assert counts.get("pallas_call", 0) == 5
+    assert not _has_aval_shape(fused.jaxpr, (n, n_m, n_r, 2))
+
+    ref = jax.make_jaxpr(functools.partial(
+        bcd.solve_slot, n_servers=3))(*args)
+    assert _has_aval_shape(ref.jaxpr, (n, n_m, n_r, 2))
+    assert _prim_counts(ref.jaxpr).get("pallas_call", 0) == 0
