@@ -3,9 +3,11 @@
 Runs the full registered scenario suite through every policy (LBCD + the
 MIN/DOS/JCAB baselines) with ``repro.scenarios.sweep`` — shard_map across
 devices when more than one is visible, vmap otherwise — and emits one row
-per (scenario, policy): mean / p95 / worst-slot AoPI, mean accuracy, and
-the policy's sweep throughput in scenario-slots/sec (K * T / wall-clock,
-compile excluded).
+per (scenario, policy): mean / p95 / worst-slot AoPI, mean accuracy, the
+policy's sweep throughput in scenario-slots/sec (K * T / wall-clock,
+compile excluded), plus the data-plane columns: measured AoPI from the
+M/M/1 replay (``repro.serving.replay``) over the first ``n_replay``
+epochs and the relative measured-vs-predicted divergence on those epochs.
 """
 import jax
 
@@ -17,26 +19,39 @@ from .common import emit, timer
 def run(full: bool = False):
     n_cameras = 24 if full else 10
     n_slots = 96 if full else 24
+    n_replay = 24 if full else 8          # data-plane epochs (host-bound)
     suite = scenarios.suite(n_cameras=n_cameras, n_slots=n_slots,
                             n_servers=3)
     k = suite.n_scenarios
     rows = []
+    sps = {}
     for policy in scenarios.POLICIES:
         scenarios.sweep(suite, policies=(policy,))           # compile
         with timer() as t:
             res = scenarios.sweep(suite, policies=(policy,))
-        sps = k * n_slots / t.elapsed
+        sps[policy] = k * n_slots / t.elapsed
+    # One replayed sweep for every policy: closed-form series + measured
+    # M/M/1 data plane + matched predictions for the divergence column.
+    res = scenarios.sweep(suite, dataplane=True,
+                          dataplane_params=dict(n_epochs=n_replay,
+                                                epoch_duration=600.0))
+    for policy in scenarios.POLICIES:
         mean = res.mean_aopi(policy)
         p95 = res.pct_aopi(policy, 95.0)
         worst = res.worst_aopi(policy)
         acc = res.mean_acc(policy)
+        measured = res.measured_aopi[policy].mean(axis=1)
+        div = res.divergence(policy)
         for i, name in enumerate(suite.names):
             rows.append([name, suite.families[i], policy,
                          float(mean[i]), float(p95[i]), float(worst[i]),
-                         float(acc[i]), sps])
+                         float(acc[i]), sps[policy],
+                         float(measured[i]), float(div[i])])
     print(f"# suite: {k} scenarios x {n_slots} slots x {n_cameras} cameras"
-          f" on {len(jax.devices())} device(s) ({res.backend})")
+          f" on {len(jax.devices())} device(s) ({res.backend}); data plane"
+          f" replay: {n_replay} epochs/scenario")
     emit("BENCH_scenarios", rows,
          ["scenario", "family", "policy", "mean_aopi", "p95_aopi",
-          "worst_aopi", "mean_acc", "slots_per_sec"])
+          "worst_aopi", "mean_acc", "slots_per_sec", "measured_aopi",
+          "divergence"])
     return rows

@@ -9,9 +9,14 @@
    visible device (run with
    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to watch the
    sharded path on CPU), vmapped on one.
-3. Print the per-family robustness report and each policy's worst family.
+3. With ``--dataplane``, additionally replay every (policy, scenario)
+   pair through the event-driven M/M/1 data plane
+   (``repro.serving.replay``) so the report shows *measured* AoPI next to
+   the closed-form prediction, plus their divergence.
+4. Print the per-family robustness report and each policy's worst family
+   (and, with ``--dataplane``, its worst model-vs-measurement gap).
 
-    PYTHONPATH=src python examples/scenario_suite.py [--smoke]
+    PYTHONPATH=src python examples/scenario_suite.py [--smoke] [--dataplane]
 """
 import argparse
 
@@ -20,29 +25,42 @@ import jax
 from repro import scenarios
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, dataplane: bool = False):
     dims = (dict(n_cameras=6, n_slots=16, n_servers=2) if smoke
             else dict(n_cameras=16, n_slots=60, n_servers=3))
     s = scenarios.suite(**dims)
     print(f"suite: {s.n_scenarios} scenarios / "
           f"{len(set(s.families))} families -> {', '.join(s.names)}")
 
-    res = scenarios.sweep(s, v=10.0, p_min=0.7)
+    dp_params = (dict(n_epochs=6, epoch_duration=400.0) if smoke
+                 else dict(n_epochs=16, epoch_duration=600.0))
+    res = scenarios.sweep(s, v=10.0, p_min=0.7, dataplane=dataplane,
+                          dataplane_params=dp_params)
     print(f"sweep backend: {res.backend} "
-          f"({len(jax.devices())} visible device(s))\n")
+          f"({len(jax.devices())} visible device(s))"
+          + (f"; data plane: mm1 x {dp_params['n_epochs']} epochs"
+             if dataplane else "") + "\n")
 
     rep = scenarios.robustness(res)
     print(rep)
     print()
     for policy in res.policies:
         fam, stats = rep.worst_family(policy)
-        print(f"{policy:<5s} worst family: {fam} "
-              f"(worst-slot AoPI {stats.worst_aopi:.4f}, "
-              f"p95 {stats.pct_aopi:.4f})")
+        line = (f"{policy:<5s} worst family: {fam} "
+                f"(worst-slot AoPI {stats.worst_aopi:.4f}, "
+                f"p95 {stats.pct_aopi:.4f})")
+        if dataplane:
+            dfam, div = rep.worst_divergence(policy)
+            line += f"; worst model-vs-measured gap: {dfam} ({div:+.2%})"
+        print(line)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny dimensions for CI smoke runs")
-    main(ap.parse_args().smoke)
+    ap.add_argument("--dataplane", action="store_true",
+                    help="replay each (policy, scenario) through the M/M/1 "
+                         "data plane for measured-vs-predicted AoPI")
+    args = ap.parse_args()
+    main(args.smoke, args.dataplane)

@@ -30,6 +30,33 @@ import numpy as np
 from . import allocate, aopi
 from ..kernels import slot_solver
 
+# Fleet size at which the pallas kernels start winning. Below one 128-lane
+# tile the kernels pad every camera vector up to 128 lanes and lose to the
+# plain jnp path (BENCH_slot_solver.json: N=30 is 0.67x, N=300 is 1.2-1.6x),
+# so ``solver_backend="auto"`` stays on jnp under this threshold.
+AUTO_PALLAS_MIN_CAMERAS = 128
+
+SOLVER_BACKENDS = ("jnp", "pallas", "auto")
+
+
+def resolve_backend(solver_backend: str, n_cameras: int,
+                    method: str = "waterfill") -> str:
+    """Resolve ``solver_backend`` to a concrete backend for a fleet size.
+
+    ``"auto"`` picks jnp below :data:`AUTO_PALLAS_MIN_CAMERAS` (lane-padding
+    regime) and pallas at or above it; ``method="interior"`` is jnp-only so
+    auto never selects pallas for it. Explicit backends pass through
+    unchanged (including the pallas+interior error path in ``solve_slot``).
+    """
+    if solver_backend not in SOLVER_BACKENDS:
+        raise ValueError(f"unknown solver_backend {solver_backend!r}; "
+                         f"known: {SOLVER_BACKENDS}")
+    if solver_backend != "auto":
+        return solver_backend
+    if method != "waterfill":
+        return "jnp"
+    return "pallas" if n_cameras >= AUTO_PALLAS_MIN_CAMERAS else "jnp"
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -64,7 +91,7 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
                n_servers: int, n_iters: int = 4,
                method: Literal["waterfill", "interior"] = "waterfill",
                solver_effort: Literal["fast", "seed"] = "fast",
-               solver_backend: Literal["jnp", "pallas"] = "jnp",
+               solver_backend: Literal["jnp", "pallas", "auto"] = "jnp",
                interpret: bool | None = None):
     """Run Algorithm 1 and return a SlotDecision (of jnp arrays).
 
@@ -83,14 +110,15 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
       solver_backend: "jnp" (default) runs the pure-jnp config search and
         water-filling; "pallas" fuses both into the
         ``repro.kernels.slot_solver`` kernels (streaming config argmin, one
-        on-chip water-fill dispatch per allocation). Requires
+        on-chip water-fill dispatch per allocation); "auto" picks per fleet
+        size via :func:`resolve_backend` (jnp below
+        ``AUTO_PALLAS_MIN_CAMERAS``, pallas at/above). Pallas requires
         ``method="waterfill"``; agrees with "jnp" to float32 tolerance.
       interpret: pallas interpret-mode override (None = auto: interpret
         everywhere except on real TPUs — the CPU/CI path).
     """
-    if solver_backend not in ("jnp", "pallas"):
-        raise ValueError(f"unknown solver_backend {solver_backend!r}; "
-                         "known: ('jnp', 'pallas')")
+    solver_backend = resolve_backend(solver_backend, acc.shape[0],
+                                     method=method)
     use_pallas = solver_backend == "pallas"
     if use_pallas and method != "waterfill":
         raise ValueError("solver_backend='pallas' fuses the water-filling "

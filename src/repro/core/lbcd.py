@@ -131,9 +131,10 @@ def rollout(tables: HorizonTables, v, p_min, q0=0.0,
       v, p_min: Lyapunov penalty weight and accuracy floor (traced scalars,
         so the function vmaps over hyperparameter grids).
       q0: initial virtual-queue value.
-      solver_backend: "jnp" | "pallas" — Algorithm-1 implementation (see
-        ``bcd.solve_slot``); ``interpret`` is the pallas interpret-mode
-        override (None = auto off-TPU).
+      solver_backend: "jnp" | "pallas" | "auto" — Algorithm-1
+        implementation (see ``bcd.solve_slot``; "auto" switches on fleet
+        size); ``interpret`` is the pallas interpret-mode override (None =
+        auto off-TPU).
     Returns a ``RolloutResult`` of device arrays.
     """
     n = tables.acc.shape[1]
@@ -229,6 +230,20 @@ class LBCDController:
         self.assign_fn = assign_fn or binpack.first_fit
         self.solver_effort = solver_effort
         self.solver_backend = solver_backend
+
+    def plan(self, tables: HorizonTables, q0: float | None = None
+             ) -> RolloutResult:
+        """Lookahead / what-if epochs for the serving planner: run the
+        controller's hyperparameters over ``tables`` as ONE jitted scan
+        (``rollout``) from the live virtual-queue state. Does *not* advance
+        ``self.queue`` — the service commits epochs one at a time as the
+        data plane actually executes them (``AnalyticsService.run_epoch``).
+        """
+        return rollout(tables, self.v, self.queue.p_min,
+                       q0=self.queue.q if q0 is None else q0,
+                       n_bcd_iters=self.n_bcd_iters, method=self.method,
+                       solver_effort=self.solver_effort,
+                       solver_backend=self.solver_backend)
 
     def step(self, t: int, tables=None) -> SlotRecord:
         sys = self.system

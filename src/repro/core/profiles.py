@@ -238,6 +238,21 @@ class HorizonTables:
                           size=np.asarray(self.size),
                           eff=np.asarray(eff))
 
+    def window(self, t0: int, t1: int) -> "HorizonTables":
+        """Slots ``[t0, t1)`` of an (unbatched) horizon as a new
+        ``HorizonTables`` — the serving planner's lookahead view. Static
+        profile tables (``xi``/``size``) pass through; time-indexed leaves
+        are sliced (``eff`` only when it is the time-varying ``[T, N]``
+        form)."""
+        if not 0 <= t0 < t1 <= self.n_slots:
+            raise ValueError(f"window [{t0}, {t1}) outside horizon of "
+                             f"{self.n_slots} slots")
+        return HorizonTables(
+            acc=self.acc[t0:t1], xi=self.xi, size=self.size,
+            eff=self.eff if self.eff.ndim == 1 else self.eff[t0:t1],
+            budgets_b=self.budgets_b[t0:t1],
+            budgets_c=self.budgets_c[t0:t1])
+
 
 def eff_sequence(tables: HorizonTables) -> jnp.ndarray:
     """The per-slot link-efficiency sequence ``[T, N]`` of an (unbatched)

@@ -6,10 +6,17 @@ dynamics. :func:`robustness` folds a :class:`runner.SweepResult` into a
 per-(policy, family) table of mean / tail-percentile / worst-case AoPI
 (aggregated over the family's scenarios and slots), plus the policy's
 worst family — the number a capacity planner would provision against.
+
+When the sweep ran with ``dataplane=True`` the table grows a second
+column set: the *measured* AoPI from the M/M/1 data-plane replay
+(``repro.serving.replay``) with the same mean/percentile/worst
+aggregation, and the relative divergence ``measured/predicted - 1`` —
+the model-vs-measurement gap where config-adaptation policies break.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -22,6 +29,22 @@ class FamilyStats:
     pct_aopi: float           # tail percentile of slot-mean AoPI
     worst_aopi: float         # worst slot across the family
     mean_acc: float
+    # Data-plane (measured) columns — None unless dataplane=True replayed
+    # the sweep. ``mean_predicted`` is the planner prediction over the
+    # *replayed* epochs (the replay may cover fewer slots than the
+    # closed-form sweep), so divergence compares like with like.
+    measured_mean: Optional[float] = None
+    measured_pct: Optional[float] = None
+    measured_worst: Optional[float] = None
+    mean_predicted: Optional[float] = None
+
+    @property
+    def divergence(self) -> Optional[float]:
+        """Relative measured-vs-predicted gap of the family mean
+        (``measured/predicted - 1``); None without a data-plane replay."""
+        if self.measured_mean is None:
+            return None
+        return self.measured_mean / max(self.mean_predicted, 1e-12) - 1.0
 
 
 @dataclasses.dataclass
@@ -30,34 +53,91 @@ class RobustnessReport:
     families: list[str]
     pct: float
     table: dict            # policy -> family -> FamilyStats
+    # Slot coverage: the closed-form columns always span ``total_slots``;
+    # the measured block spans the first ``replay_slots`` of them (a
+    # truncated replay is flagged in ``__str__`` — compare truncated
+    # measured columns only through ``divergence``, which is computed
+    # against the predictions of the *same* epochs).
+    total_slots: int = 0
+    replay_slots: int = 0
+
+    @property
+    def has_measured(self) -> bool:
+        return any(s.measured_mean is not None
+                   for row in self.table.values() for s in row.values())
 
     def worst_family(self, policy: str) -> tuple[str, FamilyStats]:
         fam = max(self.families,
                   key=lambda f: self.table[policy][f].worst_aopi)
         return fam, self.table[policy][fam]
 
-    def rows(self) -> list[list]:
-        """Flat [policy, family, mean, pXX, worst, acc] rows (benchmarks)."""
-        return [[p, f, s.mean_aopi, s.pct_aopi, s.worst_aopi, s.mean_acc]
-                for p in self.policies
-                for f, s in ((f, self.table[p][f]) for f in self.families)]
+    def worst_divergence(self, policy: str) -> tuple[str, float]:
+        """The family where the data plane diverges most from the model
+        (largest absolute relative gap). Requires a dataplane sweep."""
+        if not self.has_measured:
+            raise ValueError("report has no measured columns; run "
+                             "sweep(..., dataplane=True)")
+        fam = max(self.families,
+                  key=lambda f: abs(self.table[policy][f].divergence))
+        return fam, self.table[policy][fam].divergence
 
-    def __str__(self) -> str:
-        w = max(len(f) for f in self.families)
-        lines = [f"{'policy':<6} {'family':<{w}} {'mean':>9} "
-                 f"{f'p{self.pct:.0f}':>9} {'worst':>9} {'acc':>6}"]
+    def rows(self) -> list[list]:
+        """Flat rows (benchmarks): [policy, family, mean, pXX, worst, acc]
+        plus [measured_mean, measured_pXX, measured_worst, divergence]
+        when the sweep was replayed through the data plane."""
+        out = []
         for p in self.policies:
             for f in self.families:
                 s = self.table[p][f]
-                lines.append(f"{p:<6} {f:<{w}} {s.mean_aopi:>9.4f} "
-                             f"{s.pct_aopi:>9.4f} {s.worst_aopi:>9.4f} "
-                             f"{s.mean_acc:>6.3f}")
+                row = [p, f, s.mean_aopi, s.pct_aopi, s.worst_aopi,
+                       s.mean_acc]
+                if self.has_measured:
+                    row += [s.measured_mean, s.measured_pct,
+                            s.measured_worst, s.divergence]
+                out.append(row)
+        return out
+
+    def __str__(self) -> str:
+        w = max(len(f) for f in self.families)
+        head = (f"{'policy':<6} {'family':<{w}} {'mean':>9} "
+                f"{f'p{self.pct:.0f}':>9} {'worst':>9} {'acc':>6}")
+        measured = self.has_measured
+        lines = []
+        if measured:
+            head += (f" | {'measured':>9} {f'p{self.pct:.0f}':>9} "
+                     f"{'worst':>9} {'diverge':>8}")
+            if 0 < self.replay_slots < self.total_slots:
+                lines.append(
+                    f"# measured block covers the first {self.replay_slots}"
+                    f"/{self.total_slots} slots; 'diverge' compares those "
+                    f"same slots' predictions")
+        lines.append(head)
+        for p in self.policies:
+            for f in self.families:
+                s = self.table[p][f]
+                line = (f"{p:<6} {f:<{w}} {s.mean_aopi:>9.4f} "
+                        f"{s.pct_aopi:>9.4f} {s.worst_aopi:>9.4f} "
+                        f"{s.mean_acc:>6.3f}")
+                if measured:
+                    line += (f" | {s.measured_mean:>9.4f} "
+                             f"{s.measured_pct:>9.4f} "
+                             f"{s.measured_worst:>9.4f} "
+                             f"{s.divergence:>+8.2%}")
+                lines.append(line)
         return "\n".join(lines)
 
 
 def robustness(result: SweepResult, pct: float = 95.0) -> RobustnessReport:
-    """Aggregate a sweep into per-(policy, family) AoPI robustness stats."""
+    """Aggregate a sweep into per-(policy, family) AoPI robustness stats.
+
+    Predicted (closed-form) columns always; measured columns when the
+    sweep carries a data-plane replay (``dataplane=True``)."""
     fams = sorted(set(result.families))
+    measured_aopi = getattr(result, "measured_aopi", None)
+    predicted_aopi = getattr(result, "predicted_aopi", None)
+    total_slots = next(iter(result.aopi.values())).shape[1]
+    replay_slots = (next(iter(measured_aopi.values())).shape[1]
+                    if measured_aopi else 0)
     table = {}
     for policy in result.policies:
         aopi = result.aopi[policy]                       # [K, T]
@@ -66,10 +146,20 @@ def robustness(result: SweepResult, pct: float = 95.0) -> RobustnessReport:
         for fam in fams:
             idx = [i for i, f in enumerate(result.families) if f == fam]
             a = aopi[idx]
-            table[policy][fam] = FamilyStats(
+            stats = FamilyStats(
                 mean_aopi=float(a.mean()),
                 pct_aopi=float(np.percentile(a, pct)),
                 worst_aopi=float(a.max()),
                 mean_acc=float(acc[idx].mean()))
+            if measured_aopi is not None:
+                m = measured_aopi[policy][idx]
+                pr = (predicted_aopi[policy][idx]
+                      if predicted_aopi is not None else a)
+                stats.measured_mean = float(m.mean())
+                stats.measured_pct = float(np.percentile(m, pct))
+                stats.measured_worst = float(m.max())
+                stats.mean_predicted = float(pr.mean())
+            table[policy][fam] = stats
     return RobustnessReport(policies=list(result.policies), families=fams,
-                            pct=pct, table=table)
+                            pct=pct, table=table, total_slots=total_slots,
+                            replay_slots=replay_slots)

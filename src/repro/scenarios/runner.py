@@ -49,12 +49,26 @@ POLICIES = ("lbcd", "min", "dos", "jcab")
 BACKENDS = ("vmap", "shard_map", "fleet")
 
 
+def divergence_series(measured: np.ndarray,
+                      predicted: np.ndarray) -> np.ndarray:
+    """Per-scenario relative divergence of horizon-mean measured vs
+    predicted AoPI (``measured/predicted - 1`` over matched epochs) — the
+    single definition shared by ``SweepResult`` and
+    ``serving.replay.ReplayResult``. [K, T] x [K, T] -> [K]."""
+    return (measured.mean(axis=1) /
+            np.maximum(predicted.mean(axis=1), 1e-12) - 1.0)
+
+
 @dataclasses.dataclass
 class SweepResult:
     """Per-scenario per-policy slot series (fleet means) + metadata.
 
     ``aopi``/``acc``/``q`` map policy name -> ``[K, T]`` numpy arrays
-    aligned with ``names``/``families``.
+    aligned with ``names``/``families``. When the sweep ran with
+    ``dataplane=True``, ``measured_aopi`` holds the M/M/1 data-plane
+    measurement per epoch (``[K, T_replay]``, possibly fewer slots than
+    the closed-form series when the replay was truncated) and
+    ``predicted_aopi`` the matching planner prediction.
     """
     names: list[str]
     families: list[str]
@@ -65,6 +79,8 @@ class SweepResult:
     aopi: dict[str, np.ndarray]
     acc: dict[str, np.ndarray]
     q: dict[str, np.ndarray]
+    measured_aopi: dict[str, np.ndarray] | None = None
+    predicted_aopi: dict[str, np.ndarray] | None = None
 
     def mean_aopi(self, policy: str) -> np.ndarray:
         """Per-scenario mean AoPI over the horizon. [K]"""
@@ -80,6 +96,15 @@ class SweepResult:
 
     def mean_acc(self, policy: str) -> np.ndarray:
         return self.acc[policy].mean(axis=1)
+
+    def divergence(self, policy: str) -> np.ndarray:
+        """Per-scenario measured/predicted - 1 over the replayed epochs
+        (requires ``dataplane=True``). [K]"""
+        if self.measured_aopi is None:
+            raise ValueError("sweep ran without dataplane=True; no "
+                             "measured series to diverge against")
+        return divergence_series(self.measured_aopi[policy],
+                                 self.predicted_aopi[policy])
 
 
 def _reduced_policy(name: str, n_bcd_iters: int, solver_backend: str):
@@ -174,15 +199,26 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
           p_min: float = 0.7, policies: Sequence[str] = POLICIES,
           devices: Sequence | None = None, backend: str | None = None,
           policy_params: Mapping | None = None,
-          solver_backend: str = "jnp") -> SweepResult:
+          solver_backend: str = "jnp", dataplane: bool = False,
+          dataplane_params: Mapping | None = None) -> SweepResult:
     """Run every policy over every stacked scenario; one sharded (or
     vmapped) device-resident call per policy.
 
     ``backend=None`` picks ``"shard_map"`` on >= 2 devices and ``"vmap"``
     on one; pass ``"fleet"`` for the bitwise-reproducible multi-device
     path (see module docstring). ``solver_backend`` selects the
-    Algorithm-1 implementation inside LBCD/MIN ("jnp" | "pallas", see
-    ``bcd.solve_slot``; no-op for DOS/JCAB which run no BCD solve).
+    Algorithm-1 implementation inside LBCD/MIN ("jnp" | "pallas" |
+    "auto", see ``bcd.solve_slot``; no-op for DOS/JCAB which run no BCD
+    solve).
+
+    ``dataplane=True`` additionally replays every (policy, scenario) pair
+    through the event-driven M/M/1 data plane
+    (``repro.serving.replay_suite``) and attaches *measured* per-epoch
+    AoPI (plus the matching planner predictions) to the result —
+    ``report.robustness`` then emits the two-column predicted-vs-measured
+    table. ``dataplane_params`` forwards replay knobs (``n_epochs``,
+    ``epoch_duration``, ``frames_cap``, ``seed``, ``telemetry_gain``,
+    ``plan_window`` — see ``serving.replay.replay_tables``).
     """
     if isinstance(suite_or_tables, Suite):
         tables = suite_or_tables.tables
@@ -232,6 +268,31 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         else:
             series[name] = _run_vmap(name, n_bcd_iters, sb, tables, knobs)
 
+    measured = predicted = None
+    if dataplane:
+        # Lazy import: repro.serving pulls the model/engine stack, and
+        # importing it here (not at module load) also keeps the
+        # scenarios <-> serving dependency one-directional per call.
+        from ..serving import replay as _replay
+        dp = dict(dataplane_params or {})
+        known = {"n_epochs", "epoch_duration", "frames_cap", "seed",
+                 "plan_window", "telemetry_gain"}
+        unknown = sorted(set(dp) - known)
+        if unknown:
+            raise ValueError(f"unknown dataplane_params {unknown}; "
+                             f"known: {sorted(known)}")
+        rres = _replay.replay_suite(
+            suite_or_tables, policies=list(policies), v=v, p_min=p_min,
+            policy_params=policy_params, solver_backend=solver_backend,
+            n_epochs=dp.get("n_epochs"),
+            epoch_duration=float(dp.get("epoch_duration", 300.0)),
+            frames_cap=int(dp.get("frames_cap", 200_000)),
+            seed=int(dp.get("seed", 0)),
+            plan_window=dp.get("plan_window"),
+            telemetry_gain=float(dp.get("telemetry_gain", 0.0)))
+        measured = rres.measured
+        predicted = rres.predicted
+
     tag = backend if len(devices) > 1 or backend == "vmap" else "vmap"
     backend_str = (f"{tag}[{len(devices)}]" if tag != "vmap" else "vmap")
     return SweepResult(
@@ -239,4 +300,5 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         v=v, p_min=p_min, backend=backend_str,
         aopi={p: s["aopi"] for p, s in series.items()},
         acc={p: s["acc"] for p, s in series.items()},
-        q={p: s["q"] for p, s in series.items()})
+        q={p: s["q"] for p, s in series.items()},
+        measured_aopi=measured, predicted_aopi=predicted)

@@ -1,6 +1,12 @@
 from .engine import Engine, Result
-from .scheduler import FCFS, LCFSP, AoPITracker, Frame, StreamQueue
-from .service import AnalyticsService, EpochReport
+from .replay import (ReplayResult, ScenarioReplay, TableSystem,
+                     make_controller, replay_suite, replay_tables)
+from .scheduler import (FCFS, LCFSP, AoPITracker, Frame, StreamQueue,
+                        StreamTelemetry)
+from .service import AnalyticsService, EpochReport, measure_mm1
 
 __all__ = ["Engine", "Result", "FCFS", "LCFSP", "AoPITracker", "Frame",
-           "StreamQueue", "AnalyticsService", "EpochReport"]
+           "StreamQueue", "StreamTelemetry", "AnalyticsService",
+           "EpochReport", "measure_mm1", "ReplayResult", "ScenarioReplay",
+           "TableSystem", "make_controller", "replay_suite",
+           "replay_tables"]

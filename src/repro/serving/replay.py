@@ -1,0 +1,232 @@
+"""Data-plane scenario replay: measured AoPI for every scenario family.
+
+The robustness story of ``repro.scenarios`` is closed-form: ``sweep``
+scores policies with the Theorem 1/2 AoPI expressions and never executes a
+data plane. This module replays a scenario's ``HorizonTables`` through
+``AnalyticsService`` (``mode="mm1"`` — the event-driven M/M/1 plane that
+validates Theorems 1-2), so every (policy, scenario) pair produces
+*measured* per-epoch AoPI next to the closed-form prediction:
+
+  * :class:`TableSystem` — an ``EdgeSystem`` facade over prebuilt
+    ``HorizonTables``, so the stateful controllers (and the service's
+    scan planner) consume scenario data instead of live traces;
+  * :func:`replay_tables` — one (policy, scenario) replay; the planner is
+    the jitted ``lbcd.rollout`` / ``baselines.rollout_*`` scan engine
+    (whole horizon in one dispatch by default), the data plane is
+    ``service.measure_mm1`` per epoch;
+  * :func:`replay_suite` — the full stacked suite -> :class:`ReplayResult`
+    with ``[K, T]`` predicted and measured fleet-mean AoPI per policy.
+
+``scenarios.sweep(..., dataplane=True)`` calls :func:`replay_suite` to
+attach measured series to its ``SweepResult``; ``scenarios.robustness``
+then reports predicted vs measured per (policy, family) with divergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+
+from ..core import baselines
+from ..core.lbcd import LBCDController
+from ..core.profiles import HorizonTables
+# The policy roster and the divergence definition are owned by the sweep
+# runner — one source of truth for closed-form and replayed results.
+# (scenarios.runner imports this module only lazily inside sweep(), so
+# the module-level import here is acyclic.)
+from ..scenarios.runner import POLICIES, divergence_series
+from .service import AnalyticsService
+
+
+class TableSystem:
+    """``EdgeSystem`` facade over prebuilt ``HorizonTables`` (one scenario).
+
+    Provides the three entry points the controllers and the service
+    planner use — ``capacities(t)`` / ``tables(t)`` for the legacy
+    per-slot path and ``horizon(n)`` for the scan engines — backed by the
+    scenario's pregenerated data instead of live stateful traces.
+    """
+
+    def __init__(self, tables: HorizonTables):
+        if tables.acc.ndim != 4:
+            raise ValueError(
+                f"TableSystem wraps ONE scenario's horizon (acc rank 4, "
+                f"[T, N, M, R]); got acc{tuple(tables.acc.shape)}. Index "
+                f"a stacked suite first (jax.tree.map(lambda x: x[k], ...))")
+        self._tables = tables
+        self.n_cameras = tables.n_cameras
+        self.n_servers = tables.n_servers
+        self.n_slots = tables.n_slots
+
+    def capacities(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        t = t % self.n_slots
+        return (np.asarray(self._tables.budgets_b[t]),
+                np.asarray(self._tables.budgets_c[t]))
+
+    def tables(self, t: int):
+        return self._tables.slot(t % self.n_slots)
+
+    def horizon(self, n_slots: int | None = None) -> HorizonTables:
+        n = self.n_slots if n_slots is None else n_slots
+        if n > self.n_slots:
+            raise ValueError(f"replay horizon {n} exceeds the scenario's "
+                             f"{self.n_slots} slots")
+        return self._tables.window(0, n)
+
+
+def make_controller(policy: str, system, *, v: float = 10.0,
+                    p_min: float = 0.7,
+                    policy_params: Mapping | None = None,
+                    solver_backend: str = "jnp"):
+    """The sweep-aligned controller for ``policy`` over ``system``."""
+    params = dict(policy_params or {})
+    n_bcd_iters = int(params.get("n_bcd_iters", 4))
+    if policy == "lbcd":
+        return LBCDController(system, v=v, p_min=p_min,
+                              n_bcd_iters=n_bcd_iters,
+                              solver_backend=solver_backend)
+    if policy == "min":
+        return baselines.MINController(system, v=v, n_iters=n_bcd_iters,
+                                       solver_backend=solver_backend)
+    if policy == "dos":
+        return baselines.DOSController(
+            system, weight=float(params.get("dos_weight", 1.0)))
+    if policy == "jcab":
+        return baselines.JCABController(
+            system, latency_cap=float(params.get("jcab_latency_cap", 0.5)))
+    raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+
+
+@dataclasses.dataclass
+class ScenarioReplay:
+    """One (policy, scenario) replay: per-epoch fleet means + the service
+    (whose ``reports`` hold per-stream detail and telemetry)."""
+    predicted: np.ndarray     # [T] fleet-mean closed-form AoPI per epoch
+    measured: np.ndarray      # [T] fleet-mean measured AoPI per epoch
+    acc: np.ndarray           # [T] fleet-mean planned accuracy
+    service: AnalyticsService
+
+
+def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
+                  n_epochs: int | None = None, v: float = 10.0,
+                  p_min: float = 0.7, policy_params: Mapping | None = None,
+                  epoch_duration: float = 300.0, frames_cap: int = 200_000,
+                  seed: int = 0, plan_window: int | None = None,
+                  solver_backend: str = "jnp",
+                  telemetry_gain: float = 0.0) -> ScenarioReplay:
+    """Replay one scenario's horizon through the M/M/1 data plane.
+
+    The planner runs the policy's scan engine over whole lookahead
+    windows in one jitted dispatch each. ``plan_window=None`` resolves to
+    the full horizon (one dispatch) when ``telemetry_gain`` is 0, and to
+    ``min(8, n_epochs)`` otherwise — telemetry can only re-enter the
+    planner at window boundaries, so a feedback replay must replan.
+    The data plane measures each epoch with ``service.measure_mm1``.
+    Bitwise deterministic in ``(seed, tables, n_epochs)``.
+    """
+    system = TableSystem(tables)
+    n_epochs = system.n_slots if n_epochs is None else n_epochs
+    if n_epochs > system.n_slots:
+        raise ValueError(f"n_epochs={n_epochs} exceeds the scenario's "
+                         f"{system.n_slots} slots")
+    if plan_window is None:
+        plan_window = (n_epochs if telemetry_gain <= 0.0
+                       else min(8, n_epochs))
+    ctrl = make_controller(policy, system, v=v, p_min=p_min,
+                           policy_params=policy_params,
+                           solver_backend=solver_backend)
+    svc = AnalyticsService(
+        ctrl, mode="mm1", epoch_duration=epoch_duration,
+        frames_cap=frames_cap, seed=seed, plan_window=plan_window,
+        tables=system.horizon(n_epochs), telemetry_gain=telemetry_gain)
+    reps = svc.run(n_epochs)
+    return ScenarioReplay(
+        predicted=np.array([r.predicted_aopi for r in reps]),
+        measured=np.array([r.measured_aopi for r in reps]),
+        acc=np.array([r.accuracy for r in reps]),
+        service=svc)
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    """Suite-wide replay: per-(policy, scenario) epoch series.
+
+    ``predicted``/``measured``/``acc`` map policy -> ``[K, T]`` arrays
+    aligned with ``names``/``families`` (the measured twins of
+    ``runner.SweepResult``'s closed-form series).
+    """
+    names: list[str]
+    families: list[str]
+    policies: list[str]
+    v: float
+    p_min: float
+    epoch_duration: float
+    predicted: dict[str, np.ndarray]
+    measured: dict[str, np.ndarray]
+    acc: dict[str, np.ndarray]
+
+    def divergence(self, policy: str) -> np.ndarray:
+        """Per-scenario relative divergence of horizon-mean measured vs
+        predicted AoPI (``runner.divergence_series``). [K]"""
+        return divergence_series(self.measured[policy],
+                                 self.predicted[policy])
+
+
+def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
+                 v: float = 10.0, p_min: float = 0.7,
+                 policy_params: Mapping | None = None,
+                 n_epochs: int | None = None,
+                 epoch_duration: float = 300.0, frames_cap: int = 200_000,
+                 seed: int = 0, plan_window: int | None = None,
+                 solver_backend: str = "jnp",
+                 telemetry_gain: float = 0.0) -> ReplayResult:
+    """Replay every scenario of a suite through the data plane, for every
+    policy — the measured counterpart of ``scenarios.sweep``.
+
+    Accepts a ``scenarios.Suite`` or raw stacked ``HorizonTables``
+    (leading scenario axis). One scan-engine plan + T measured epochs per
+    (policy, scenario); compiled planner executables are shared across
+    scenarios of identical shape.
+    """
+    if hasattr(suite_or_tables, "tables"):
+        tables = suite_or_tables.tables
+        names = list(suite_or_tables.names)
+        fams = list(suite_or_tables.families)
+    else:
+        tables = suite_or_tables
+        if tables.acc.ndim != 5:
+            raise ValueError(
+                f"replay_suite needs a stacked scenario axis (acc rank 5); "
+                f"got acc{tuple(tables.acc.shape)} — use replay_tables for "
+                f"a single scenario")
+        k = int(tables.acc.shape[0])
+        names = [f"scenario_{i}" for i in range(k)]
+        fams = ["unknown"] * k
+    k = int(tables.acc.shape[0])
+    for policy in policies:
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+
+    predicted: dict[str, list] = {p: [] for p in policies}
+    measured: dict[str, list] = {p: [] for p in policies}
+    acc: dict[str, list] = {p: [] for p in policies}
+    for i in range(k):
+        one = jax.tree.map(lambda x, i=i: x[i], tables)
+        for policy in policies:
+            rep = replay_tables(
+                one, policy, n_epochs=n_epochs, v=v, p_min=p_min,
+                policy_params=policy_params, epoch_duration=epoch_duration,
+                frames_cap=frames_cap, seed=seed, plan_window=plan_window,
+                solver_backend=solver_backend,
+                telemetry_gain=telemetry_gain)
+            predicted[policy].append(rep.predicted)
+            measured[policy].append(rep.measured)
+            acc[policy].append(rep.acc)
+    return ReplayResult(
+        names=names, families=fams, policies=list(policies),
+        v=v, p_min=p_min, epoch_duration=epoch_duration,
+        predicted={p: np.stack(s) for p, s in predicted.items()},
+        measured={p: np.stack(s) for p, s in measured.items()},
+        acc={p: np.stack(s) for p, s in acc.items()})

@@ -17,7 +17,32 @@ import dataclasses
 from collections import deque
 from typing import Optional
 
+import numpy as np
+
 FCFS, LCFSP = 0, 1
+
+
+@dataclasses.dataclass
+class StreamTelemetry:
+    """Measured per-stream data-plane rates for one epoch.
+
+    This is what re-enters ``HorizonTables`` for the next planning window
+    (``AnalyticsService``): the planner's profiled accuracy and link
+    efficiency are multiplicatively corrected toward what the data plane
+    actually delivered (Chameleon/AWStream-style profile-then-measure
+    adaptation).
+    """
+    acc_hat: np.ndarray      # accurate fraction among completed frames
+    lam_hat: np.ndarray      # measured frame arrival rate (frames/s)
+    mu_hat: np.ndarray       # measured frame completion rate (frames/s)
+    n_frames: np.ndarray     # frames offered to each stream's queue
+    n_completed: np.ndarray  # frames whose result was delivered
+
+    @staticmethod
+    def empty(n_streams: int) -> "StreamTelemetry":
+        z = np.zeros(n_streams)
+        return StreamTelemetry(z.copy(), z.copy(), z.copy(),
+                               z.copy(), z.copy())
 
 
 @dataclasses.dataclass

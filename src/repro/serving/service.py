@@ -1,17 +1,34 @@
 """The AoPI-tracked analytics service: LBCD in the serving control plane.
 
 Per controller epoch (= the paper's 5-minute slot):
-  1. LBCD solves (P2) from live telemetry -> per-stream (model candidate,
-     fidelity/resolution, FCFS/LCFSP policy, island assignment, ingest +
-     compute-share allocation);
+  1. the *planner* decides per-stream (model candidate, fidelity/resolution,
+     FCFS/LCFSP policy, island assignment, ingest + compute-share
+     allocation) by solving (P2);
   2. the data plane runs: frames arrive per the transmission model, are
      queued per-policy, and processed with the allocated compute rate;
-  3. measured AoPI (exact age integration) and accuracy feed the virtual
-     queue and the next epoch's profiles.
+  3. measured AoPI (exact age integration) and per-stream telemetry
+     (accurate fraction, arrival/completion rates) feed the virtual queue
+     and the next planning window's profiles.
+
+Two planners:
+  * ``planner="scan"`` (default) — lookahead windows of ``plan_window``
+    epochs are solved as ONE jitted ``lax.scan`` (``lbcd.rollout`` for the
+    LBCD controller, the ``baselines.rollout_*`` engines for MIN/DOS/JCAB)
+    over a ``profiles.HorizonTables`` window; ``plan_horizon(k)`` exposes
+    the same call for what-if queries. ``solver_backend`` (including
+    ``"auto"``/``"pallas"``) threads through from the controller, so
+    kernel-backed replay rides the fused slot solver.
+  * ``planner="step"`` — the legacy per-slot ``controller.step(t)`` path
+    (kept for custom ``assign_fn`` controllers and failover experiments).
 
 Two data planes ship:
   * ``mode="mm1"``  — event-driven M/M/1 execution (the paper's model;
-    validates Theorems 1-2 at scale, used by benchmarks);
+    validates Theorems 1-2 at scale, used by benchmarks and
+    ``repro.serving.replay``). The plane executes against the *unscaled*
+    scenario truth: measured accuracy uses the raw profile table and the
+    true link efficiency, while the planner sees the telemetry-corrected
+    beliefs — exactly the model-vs-measurement split where
+    config-adaptation policies break.
   * ``mode="engine"`` — a real continuous-batching Engine on a small model
     (examples/serve_e2e.py), with LCFSP preemption at step boundaries.
 """
@@ -20,53 +37,255 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from ..core import queues
+from ..core import baselines, binpack, lbcd, queues
 from ..core.lbcd import LBCDController
-from .scheduler import AoPITracker, Frame, StreamQueue
+from ..core.profiles import HorizonTables
+from .scheduler import AoPITracker, Frame, StreamQueue, StreamTelemetry
+
+
+def measure_mm1(lam, mu, p, pol, *, epoch_duration: float = 300.0,
+                frames_cap: int = 200_000, frames_floor: int = 200,
+                seed: int = 0, t: int = 0
+                ) -> tuple[np.ndarray, StreamTelemetry]:
+    """Run one epoch of the event-driven M/M/1 data plane for N streams.
+
+    Per stream: exponential transmissions at rate ``lam[i]``, exponential
+    service at ``mu[i]``, Bernoulli(``p[i]``) recognition, FCFS/LCFSP per
+    ``pol[i]`` — the exact frame-uploading model of §III-A, via the
+    vectorized ``queues.simulate`` oracle. Deterministic in
+    ``(seed, t, i)``: stream i of epoch t always draws from the stream
+    ``seed + 7919 * t + i``.
+
+    Returns ``(measured_aopi[N], StreamTelemetry)``.
+    """
+    lam = np.asarray(lam, np.float64)
+    mu = np.asarray(mu, np.float64)
+    p = np.asarray(p, np.float64)
+    pol = np.asarray(pol)
+    n = len(lam)
+    measured = np.zeros(n)
+    tel = StreamTelemetry.empty(n)
+    for i in range(n):
+        lam_i = max(float(lam[i]), 1e-6)
+        n_frames = int(min(lam_i * epoch_duration, frames_cap))
+        n_frames = max(n_frames, frames_floor)
+        sim = queues.simulate(
+            lam_i, max(float(mu[i]), 1e-6),
+            float(np.clip(p[i], 1e-3, 1.0)),
+            int(pol[i]), n_frames=n_frames,
+            seed=seed + 7919 * t + i)
+        measured[i] = sim.mean_aopi
+        horizon = max(sim.horizon, 1e-9)
+        tel.acc_hat[i] = sim.n_accurate / max(sim.n_completed, 1)
+        tel.lam_hat[i] = sim.n_frames / horizon
+        tel.mu_hat[i] = sim.n_completed / horizon
+        tel.n_frames[i] = sim.n_frames
+        tel.n_completed[i] = sim.n_completed
+    return measured, tel
 
 
 @dataclasses.dataclass
 class EpochReport:
     t: int
-    predicted_aopi: float       # closed-form, from the controller
+    predicted_aopi: float       # closed-form, from the planner
     measured_aopi: float        # data-plane measurement
     accuracy: float
     q: float
     per_stream_measured: np.ndarray
     per_stream_predicted: np.ndarray
+    telemetry: Optional[StreamTelemetry] = None
 
 
 class AnalyticsService:
-    def __init__(self, controller: LBCDController, *, mode: str = "mm1",
+    def __init__(self, controller, *, mode: str = "mm1",
                  epoch_duration: float = 300.0, engine=None,
-                 frames_cap: int = 200_000, seed: int = 0):
+                 frames_cap: int = 200_000, seed: int = 0,
+                 planner: str = "scan", plan_window: int = 8,
+                 tables: HorizonTables | None = None,
+                 telemetry_gain: float = 0.0):
+        """``controller`` is an ``LBCDController`` or one of the
+        ``baselines`` controllers (anything with ``step(t)`` and either
+        ``plan(tables)`` or ``_rollout(tables)``).
+
+        ``tables`` replays a prebuilt horizon (e.g. a ``repro.scenarios``
+        build) instead of the controller's live ``EdgeSystem``;
+        ``telemetry_gain`` > 0 lets measured accuracy / arrival rates
+        correct the next planning window's profiles (EWMA weight).
+        """
+        if planner not in ("scan", "step"):
+            raise ValueError(f"unknown planner {planner!r}; "
+                             "known: ('scan', 'step')")
+        # Scan planning needs a whole-horizon engine on the controller AND
+        # a horizon source (replay tables, or a system that can pregenerate
+        # one); duck-typed systems exposing only capacities(t)/tables(t)
+        # keep the legacy per-slot path.
+        if planner == "scan" and not (
+                self._supports_scan(controller) and
+                (tables is not None or
+                 hasattr(controller.system, "horizon"))):
+            planner = "step"
         self.controller = controller
         self.mode = mode
         self.engine = engine
         self.epoch_duration = epoch_duration
         self.frames_cap = frames_cap
         self.seed = seed
+        self.planner = planner
+        self.plan_window = max(int(plan_window), 1)
+        self.tables = tables
+        self.telemetry_gain = float(telemetry_gain)
         self.reports: list = []
+        n = self._n_streams()
+        self._acc_scale = np.ones(n)
+        self._eff_scale = np.ones(n)
+        self._base_cache: HorizonTables | None = tables
+        self._plan = None
+        self._plan_t0 = 0
+
+    # ------------------------------------------------------------------
+    # Planner: lookahead windows as one jitted scan
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _supports_scan(controller) -> bool:
+        if isinstance(controller, LBCDController):
+            # The scan engine is specialized to first-fit placement.
+            return controller.assign_fn is binpack.first_fit
+        # A _rollout *override* — the abstract BaselineController._rollout
+        # raises NotImplementedError, so step()-only controllers must fall
+        # back to the legacy planner.
+        rollout = getattr(type(controller), "_rollout", None)
+        return (rollout is not None and
+                rollout is not baselines.BaselineController._rollout)
+
+    def _n_streams(self) -> int:
+        if self.tables is not None:
+            return self.tables.n_cameras
+        return self.controller.system.n_cameras
+
+    def _base_window(self, t0: int, t1: int) -> HorizonTables:
+        """Slots [t0, t1) of the *uncorrected* source horizon (the truth
+        the data plane executes against)."""
+        if self._base_cache is None or self._base_cache.n_slots < t1:
+            # EdgeSystem.horizon is deterministic and prefix-stable in
+            # n_slots, so growing the cache never changes earlier slots;
+            # geometric growth keeps total generation work O(T) over a
+            # long-running service. Bounded systems (TableSystem) reject
+            # the over-request — retry with exactly what is needed.
+            cur = 0 if self._base_cache is None else self._base_cache.n_slots
+            try:
+                self._base_cache = self.controller.system.horizon(
+                    max(t1, 2 * cur))
+            except ValueError:
+                self._base_cache = self.controller.system.horizon(t1)
+        return self._base_cache.window(t0, t1)
+
+    def _window_tables(self, t0: int, t1: int) -> HorizonTables:
+        """The planner's view: source horizon with the telemetry
+        corrections (accuracy / link-efficiency scales) applied."""
+        base = self._base_window(t0, t1)
+        if self.telemetry_gain <= 0.0:
+            return base
+        acc = jnp.clip(
+            base.acc * self._acc_scale[None, :, None, None], 1e-3, 1.0)
+        scale = (self._eff_scale if base.eff.ndim == 1
+                 else self._eff_scale[None, :])
+        return dataclasses.replace(base, acc=acc, eff=base.eff * scale)
+
+    def plan_horizon(self, k: int, t0: int = 0) -> lbcd.RolloutResult:
+        """Plan epochs ``[t0, t0 + k)`` as ONE jitted ``lax.scan`` over the
+        (telemetry-corrected) horizon window — no per-epoch Python loop.
+
+        Pure lookahead: neither the controller's virtual queue nor the data
+        plane advances; ``run_epoch`` commits epochs as they execute.
+        """
+        tables = self._window_tables(t0, t0 + k)
+        ctrl = self.controller
+        if isinstance(ctrl, LBCDController):
+            return ctrl.plan(tables)
+        return ctrl._rollout(tables)
+
+    def _slot_record(self, t: int) -> lbcd.SlotRecord:
+        if self.planner != "scan":
+            return self.controller.step(t)
+        if self._plan is None or not (
+                self._plan_t0 <= t < self._plan_t0 + self._plan.q.shape[0]):
+            k = self.plan_window
+            if self.tables is not None:
+                k = min(k, self.tables.n_slots - t)
+            if k < 1:
+                raise ValueError(
+                    f"epoch {t} is past the replayed horizon of "
+                    f"{self.tables.n_slots} slots")
+            self._plan = jax.tree.map(np.asarray, self.plan_horizon(k, t))
+            self._plan_t0 = t
+        j = t - self._plan_t0
+        res = self._plan
+        q = float(res.q[j])
+        if isinstance(self.controller, LBCDController):
+            self.controller.queue.q = q      # commit Eq. 44 for this epoch
+        return lbcd.SlotRecord(
+            t=t, aopi=res.aopi[j], acc=res.acc[j], q=q,
+            assign=res.assign[j],
+            decision=jax.tree.map(lambda x: x[j], res.decision))
+
+    # ------------------------------------------------------------------
+    # Data plane
+    # ------------------------------------------------------------------
+    def _plane_rates(self, t: int, dec) -> tuple[np.ndarray, np.ndarray]:
+        """True arrival rate and accuracy of the chosen configs — from the
+        *uncorrected* tables (the planner may be acting on telemetry-scaled
+        beliefs; the plane executes against the world)."""
+        n = len(dec.lam)
+        r_idx = np.asarray(dec.r_idx)
+        m_idx = np.asarray(dec.m_idx)
+        try:
+            base = self._base_window(t, t + 1)
+        except AttributeError:
+            # No horizon source (bare controller on a custom system) —
+            # fall back to the planner's own beliefs. A ValueError (epoch
+            # past a bounded horizon) propagates: that is a real misuse,
+            # not a missing capability.
+            return np.asarray(dec.lam), np.asarray(dec.acc)
+        eff = np.asarray(base.eff if base.eff.ndim == 1 else base.eff[0])
+        size = np.asarray(base.size)
+        lam_true = np.asarray(dec.b) * eff / size[r_idx]
+        p_true = np.asarray(base.acc[0])[np.arange(n), m_idx, r_idx]
+        return lam_true, p_true
+
+    def _update_telemetry(self, dec, tel: StreamTelemetry):
+        """Fold measured rates back into the planner's belief scales
+        (EWMA toward measured/believed, clipped to [0.5, 2])."""
+        g = self.telemetry_gain
+        if g <= 0.0:
+            return
+        seen = tel.n_completed > 0
+        ratio_acc = np.where(
+            seen, tel.acc_hat / np.maximum(np.asarray(dec.acc), 1e-3), 1.0)
+        ratio_lam = np.where(
+            tel.n_frames > 0,
+            tel.lam_hat / np.maximum(np.asarray(dec.lam), 1e-9), 1.0)
+        self._acc_scale = np.clip(
+            (1 - g) * self._acc_scale + g * self._acc_scale * ratio_acc,
+            0.5, 2.0)
+        self._eff_scale = np.clip(
+            (1 - g) * self._eff_scale + g * self._eff_scale * ratio_lam,
+            0.5, 2.0)
 
     def run_epoch(self, t: int) -> EpochReport:
-        rec = self.controller.step(t)
+        rec = self._slot_record(t)
         dec = rec.decision
-        n = len(dec.lam)
-        measured = np.zeros(n)
+        tel = None
         if self.mode == "mm1":
-            for i in range(n):
-                lam = max(float(dec.lam[i]), 1e-6)
-                n_frames = int(min(lam * self.epoch_duration,
-                                   self.frames_cap))
-                n_frames = max(n_frames, 200)
-                sim = queues.simulate(
-                    lam, max(float(dec.mu[i]), 1e-6),
-                    float(np.clip(dec.acc[i], 1e-3, 1.0)),
-                    int(dec.pol[i]), n_frames=n_frames,
-                    seed=self.seed + 7919 * t + i)
-                measured[i] = sim.mean_aopi
+            lam_true, p_true = self._plane_rates(t, dec)
+            measured, tel = measure_mm1(
+                lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
+                epoch_duration=self.epoch_duration,
+                frames_cap=self.frames_cap, seed=self.seed, t=t)
+            self._update_telemetry(dec, tel)
         else:
             measured = self._run_engine_epoch(rec)
         rep = EpochReport(
@@ -74,7 +293,8 @@ class AnalyticsService:
             measured_aopi=float(np.mean(measured)),
             accuracy=float(np.mean(dec.acc)), q=rec.q,
             per_stream_measured=measured,
-            per_stream_predicted=np.asarray(dec.aopi))
+            per_stream_predicted=np.asarray(dec.aopi),
+            telemetry=tel)
         self.reports.append(rep)
         return rep
 

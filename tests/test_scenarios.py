@@ -291,3 +291,59 @@ def test_shard_map_and_fleet_match_vmap_on_four_virtual_devices():
                           timeout=1200)
     assert proc.returncode == 0, proc.stderr[-4000:]
     assert "SHARD-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# report.robustness aggregation math (hand-built inputs)
+# ---------------------------------------------------------------------------
+
+def _hand_sweep(measured=False):
+    """Two families ('a' x2 scenarios, 'b' x1), one policy, known values."""
+    aopi_ = np.array([[1.0, 3.0],     # family a, scenario 0
+                      [2.0, 4.0],     # family a, scenario 1
+                      [10.0, 30.0]])  # family b
+    acc = np.array([[0.5, 0.7], [0.6, 0.8], [0.9, 0.9]])
+    kw = {}
+    if measured:
+        kw = dict(measured_aopi={"lbcd": aopi_ * 1.5},
+                  predicted_aopi={"lbcd": aopi_})
+    from repro.scenarios.runner import SweepResult
+    return SweepResult(
+        names=["a0", "a1", "b0"], families=["a", "a", "b"],
+        policies=["lbcd"], v=10.0, p_min=0.7, backend="vmap",
+        aopi={"lbcd": aopi_}, acc={"lbcd": acc},
+        q={"lbcd": np.zeros((3, 2))}, **kw)
+
+
+def test_robustness_aggregation_math():
+    rep = scenarios.robustness(_hand_sweep(), pct=50.0)
+    a = rep.table["lbcd"]["a"]
+    assert a.mean_aopi == pytest.approx(2.5)          # mean of 1,3,2,4
+    assert a.pct_aopi == pytest.approx(2.5)           # median of 1,2,3,4
+    assert a.worst_aopi == pytest.approx(4.0)
+    assert a.mean_acc == pytest.approx(0.65)
+    b = rep.table["lbcd"]["b"]
+    assert b.mean_aopi == pytest.approx(20.0)
+    assert b.worst_aopi == pytest.approx(30.0)
+    assert rep.worst_family("lbcd")[0] == "b"
+    assert a.measured_mean is None and a.divergence is None
+    assert not rep.has_measured
+
+
+def test_robustness_divergence_columns():
+    rep = scenarios.robustness(_hand_sweep(measured=True), pct=50.0)
+    assert rep.has_measured
+    for fam, base_mean, base_worst in (("a", 2.5, 4.0), ("b", 20.0, 30.0)):
+        s = rep.table["lbcd"][fam]
+        assert s.measured_mean == pytest.approx(base_mean * 1.5)
+        assert s.measured_worst == pytest.approx(base_worst * 1.5)
+        assert s.mean_predicted == pytest.approx(base_mean)
+        assert s.divergence == pytest.approx(0.5)     # measured = 1.5x
+    fam, div = rep.worst_divergence("lbcd")
+    assert div == pytest.approx(0.5)
+    rows = rep.rows()
+    assert len(rows) == 2 and len(rows[0]) == 10
+    assert rows[0][:2] == ["lbcd", "a"]
+    assert rows[0][9] == pytest.approx(0.5)           # divergence column
+    txt = str(rep)
+    assert "measured" in txt and "+50.00%" in txt

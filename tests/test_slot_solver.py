@@ -387,3 +387,37 @@ def test_solve_slot_pallas_dispatch_structure():
         bcd.solve_slot, n_servers=3))(*args)
     assert _has_aval_shape(ref.jaxpr, (n, n_m, n_r, 2))
     assert _prim_counts(ref.jaxpr).get("pallas_call", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# solver_backend="auto": fleet-size dispatch (BENCH_slot_solver.json shows
+# N=30 jnp-favoured under 128-lane padding, N>=300 pallas-favoured).
+# ---------------------------------------------------------------------------
+
+def test_resolve_backend_switch_point():
+    thr = bcd.AUTO_PALLAS_MIN_CAMERAS
+    assert bcd.resolve_backend("auto", thr - 1) == "jnp"
+    assert bcd.resolve_backend("auto", thr) == "pallas"
+    assert bcd.resolve_backend("auto", 30) == "jnp"        # benched regime
+    assert bcd.resolve_backend("auto", 3000) == "pallas"   # benched regime
+    # interior-point is jnp-only: auto never hands it to pallas.
+    assert bcd.resolve_backend("auto", 10 * thr, method="interior") == "jnp"
+    # Explicit backends pass through regardless of fleet size.
+    assert bcd.resolve_backend("jnp", 10 * thr) == "jnp"
+    assert bcd.resolve_backend("pallas", 2) == "pallas"
+    with pytest.raises(ValueError, match="unknown solver_backend"):
+        bcd.resolve_backend("nope", 10)
+
+
+def test_auto_backend_dispatch_choice_pinned():
+    """Below the threshold an auto solve traces the pure-jnp program (no
+    pallas_call); at the threshold it traces the fused kernels."""
+    small = _slot_instance(0, n=bcd.AUTO_PALLAS_MIN_CAMERAS - 108)  # n=20
+    jx = jax.make_jaxpr(functools.partial(
+        bcd.solve_slot, n_servers=3, solver_backend="auto"))(*small)
+    assert _prim_counts(jx.jaxpr).get("pallas_call", 0) == 0
+
+    big = _slot_instance(0, n=bcd.AUTO_PALLAS_MIN_CAMERAS)
+    jx = jax.make_jaxpr(functools.partial(
+        bcd.solve_slot, n_servers=3, solver_backend="auto"))(*big)
+    assert _prim_counts(jx.jaxpr).get("pallas_call", 0) == 5
