@@ -9,9 +9,10 @@ import sys
 import time
 
 from . import (bench_bandwidth, bench_cameras, bench_compute,
-               bench_energy, bench_frontier, bench_hyperparams,
-               bench_overhead, bench_policy, bench_rollout,
-               bench_scenarios, bench_slot_solver, bench_validation)
+               bench_dataplane, bench_energy, bench_frontier,
+               bench_hyperparams, bench_overhead, bench_policy,
+               bench_rollout, bench_scenarios, bench_slot_solver,
+               bench_validation)
 
 ALL = {
     "fig14_15_validation": bench_validation.run,
@@ -26,6 +27,7 @@ ALL = {
     "BENCH_rollout": bench_rollout.run,
     "BENCH_scenarios": bench_scenarios.run,
     "BENCH_slot_solver": bench_slot_solver.run,
+    "BENCH_dataplane": bench_dataplane.run,
 }
 
 

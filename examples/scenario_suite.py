@@ -10,13 +10,17 @@
    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to watch the
    sharded path on CPU), vmapped on one.
 3. With ``--dataplane``, additionally replay every (policy, scenario)
-   pair through the event-driven M/M/1 data plane
+   pair through the batched device-resident GI/G/1 data plane
    (``repro.serving.replay``) so the report shows *measured* AoPI next to
-   the closed-form prediction, plus their divergence.
+   the closed-form prediction, plus their divergence. ``--delay-model``
+   picks the delay family: ``mm1`` (exponential — the paper's model),
+   ``uniform`` or ``gamma`` (the §III-B testbed regime where the
+   Theorem 1-2 predictions visibly drift).
 4. Print the per-family robustness report and each policy's worst family
    (and, with ``--dataplane``, its worst model-vs-measurement gap).
 
-    PYTHONPATH=src python examples/scenario_suite.py [--smoke] [--dataplane]
+    PYTHONPATH=src python examples/scenario_suite.py \
+        [--smoke] [--dataplane] [--delay-model mm1|uniform|gamma]
 """
 import argparse
 
@@ -25,7 +29,8 @@ import jax
 from repro import scenarios
 
 
-def main(smoke: bool = False, dataplane: bool = False):
+def main(smoke: bool = False, dataplane: bool = False,
+         delay_model: str = "mm1"):
     dims = (dict(n_cameras=6, n_slots=16, n_servers=2) if smoke
             else dict(n_cameras=16, n_slots=60, n_servers=3))
     s = scenarios.suite(**dims)
@@ -34,12 +39,13 @@ def main(smoke: bool = False, dataplane: bool = False):
 
     dp_params = (dict(n_epochs=6, epoch_duration=400.0) if smoke
                  else dict(n_epochs=16, epoch_duration=600.0))
+    dp_params["delay_model"] = delay_model
     res = scenarios.sweep(s, v=10.0, p_min=0.7, dataplane=dataplane,
                           dataplane_params=dp_params)
     print(f"sweep backend: {res.backend} "
           f"({len(jax.devices())} visible device(s))"
-          + (f"; data plane: mm1 x {dp_params['n_epochs']} epochs"
-             if dataplane else "") + "\n")
+          + (f"; data plane: {delay_model} x {dp_params['n_epochs']} "
+             f"epochs" if dataplane else "") + "\n")
 
     rep = scenarios.robustness(res)
     print(rep)
@@ -60,7 +66,12 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny dimensions for CI smoke runs")
     ap.add_argument("--dataplane", action="store_true",
-                    help="replay each (policy, scenario) through the M/M/1 "
-                         "data plane for measured-vs-predicted AoPI")
+                    help="replay each (policy, scenario) through the "
+                         "batched data plane for measured-vs-predicted "
+                         "AoPI")
+    ap.add_argument("--delay-model", default="mm1",
+                    choices=("mm1", "uniform", "gamma"),
+                    help="data-plane delay family (non-exponential models "
+                         "show how far Theorems 1-2 drift)")
     args = ap.parse_args()
-    main(args.smoke, args.dataplane)
+    main(args.smoke, args.dataplane, args.delay_model)

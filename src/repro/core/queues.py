@@ -17,13 +17,30 @@ over frames) so multi-million-frame runs used by the validation tests and
 Generalized (non-exponential) delay draws are supported via the ``t_sampler``
 / ``o_sampler`` hooks, mirroring the paper's testbed observation (§III-B)
 that real delays are "more evenly distributed than exponential".
+
+Two implementations live here:
+
+  * the per-stream **numpy oracle** (``simulate_fcfs`` / ``simulate_lcfsp``)
+    — the reference the validation tests trust;
+  * the **batched device-resident GI/G/1 engine** (``gi_g1_window``) — both
+    closed-form recurrences as one jitted JAX program shaped
+    ``[n_epochs, n_streams, n_frames]``, with pluggable delay families
+    (``DELAY_MODELS``) keyed by collision-free folded ``jax.random`` keys
+    and exact age integration truncated at the epoch horizon. One dispatch
+    simulates a whole replay window; this is the serving data plane's hot
+    path (``serving.service.measure_window``).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
+from jax.experimental import enable_x64
 
 Sampler = Callable[[np.random.Generator, int], np.ndarray]
 
@@ -129,3 +146,243 @@ def uniform_sampler(mean: float, spread: float = 0.9) -> Sampler:
 
 def gamma_sampler(mean: float, shape: float = 2.0) -> Sampler:
     return lambda rng, n: rng.gamma(shape, mean / shape, size=n)
+
+
+def oracle_samplers(delay_model: str, lam: float, mu: float) -> dict:
+    """``t_sampler``/``o_sampler`` kwargs for :func:`simulate` matching a
+    batched-engine ``delay_model`` — the single mapping the loop oracle
+    and the parity tests share (empty for "mm1": the simulators default
+    to exponential draws)."""
+    if delay_model == "mm1":
+        return {}
+    if delay_model == "uniform":
+        return dict(t_sampler=uniform_sampler(1.0 / lam),
+                    o_sampler=uniform_sampler(1.0 / mu))
+    if delay_model == "gamma":
+        return dict(t_sampler=gamma_sampler(1.0 / lam),
+                    o_sampler=gamma_sampler(1.0 / mu))
+    raise ValueError(
+        f"unknown delay_model {delay_model!r}; known: {DELAY_MODELS}")
+
+
+# ---------------------------------------------------------------------------
+# Batched device-resident GI/G/1 engine (JAX)
+# ---------------------------------------------------------------------------
+
+#: Delay families of the batched engine. Means always match the numpy
+#: ``Sampler`` helpers: "mm1" is exponential with mean 1/rate,
+#: "uniform"/"gamma" keep that mean but change the shape (the §III-B
+#: testbed regime where Theorems 1-2 drift).
+DELAY_MODELS = ("mm1", "uniform", "gamma")
+UNIFORM_SPREAD = 0.9     # matches uniform_sampler's default
+GAMMA_SHAPE = 2.0        # matches gamma_sampler's default
+
+#: Host-side dispatch counter: +1 per batched device call. The hot-path
+#: tests assert the replay suite runs entirely through here (no per-stream
+#: Python-loop simulation).
+BATCH_DISPATCHES = 0
+
+
+def stream_seed_sequence(seed: int, t: int, i: int) -> np.random.SeedSequence:
+    """Collision-free numpy RNG stream for (epoch ``t``, stream ``i``).
+
+    ``SeedSequence(entropy=seed, spawn_key=(t, i))`` hashes the pair into
+    the stream key, so distinct ``(t, i)`` never collide — unlike the old
+    ``seed + 7919 * t + i`` arithmetic (t=0,i=7919 == t=1,i=0)."""
+    return np.random.SeedSequence(entropy=seed, spawn_key=(t, i))
+
+
+def epoch_key(seed: int, t: int):
+    """Folded jax.random key for epoch ``t``; streams fold in their index
+    on top (``_window_sim``), so (epoch, stream) keys never collide."""
+    return jax.random.fold_in(jax.random.key(seed), t)
+
+
+def frames_budget(max_lam: float, horizon: float, frames_cap: int,
+                  frames_floor: int = 200) -> int:
+    """Frames to simulate so arrivals cover ``[0, horizon]`` w.h.p. for
+    the fastest stream: ``lam*H`` plus a 2-sigma margin (a rare shortfall
+    only shrinks the *measured* window ``h_eff`` — unbiased — instead of
+    skewing the estimate), rounded up to a quarter-power-of-two bucket
+    (bounds jit recompiles across windows at <= 25% overshoot), capped at
+    ``frames_cap``. The floor keeps tiny epochs statistically meaningful;
+    age integration truncates at the horizon regardless, so the floor
+    never inflates measured AoPI past the epoch."""
+    need = float(max_lam) * float(horizon)
+    need = max(need + 2.0 * np.sqrt(max(need, 1.0)) + 16.0,
+               float(frames_floor), 2.0)
+    p2 = 2.0 ** np.floor(np.log2(need))
+    for m in (1.0, 1.25, 1.5, 1.75, 2.0):
+        if p2 * m >= need:
+            return int(min(np.ceil(p2 * m), frames_cap))
+    raise AssertionError("unreachable")
+
+
+#: Compute dtype switch: short per-stream frame budgets run the whole
+#: engine in float32 (sequential-sum error ~ n_frames^1.5 * eps stays
+#: below 1e-2 of a mean delay up to ~1k frames), longer horizons switch
+#: to float64 so multi-hour epochs keep sub-millisecond age resolution
+#: (matching the numpy oracle). Deterministic per workload: the dtype is
+#: a pure function of the frame budget.
+F32_MAX_FRAMES = 1024
+
+
+def _n_uniforms(delay_model: str) -> int:
+    """Uniform variates consumed per frame: T + O + the accuracy coin.
+    The Erlang-``k`` gamma family needs ``k`` uniforms per delay."""
+    if delay_model == "gamma" and float(GAMMA_SHAPE) == int(GAMMA_SHAPE):
+        return 2 * int(GAMMA_SHAPE) + 1
+    return 3
+
+
+def _delays_from_uniforms(u, mean, delay_model: str):
+    """``u`` is ``[k, n]`` uniforms -> ``[n]`` positive delays with mean
+    ``mean`` (matching the numpy ``Sampler`` helpers)."""
+    if delay_model == "mm1":
+        return -jnp.log1p(-u[0]) * mean
+    if delay_model == "uniform":
+        lo = mean * (1.0 - UNIFORM_SPREAD)
+        return lo + u[0] * (2.0 * UNIFORM_SPREAD * mean)
+    if delay_model == "gamma":
+        # Integer shape -> Erlang: an exact sum of k exponentials. Orders
+        # of magnitude faster than jax.random.gamma's rejection sampler
+        # (a vmapped while_loop) on CPU at data-plane frame counts.
+        k = int(GAMMA_SHAPE)
+        if float(GAMMA_SHAPE) == k:
+            return -jnp.log1p(-u).sum(axis=0) * (mean / GAMMA_SHAPE)
+    raise ValueError(
+        f"unknown delay_model {delay_model!r}; known: {DELAY_MODELS}")
+
+
+@functools.partial(jax.jit, static_argnames=("n_frames", "delay_model"))
+def _window_sim(lam, mu, p, pol, keys, horizon, n_frames: int,
+                delay_model: str):
+    """The fused data-plane program: ONE ``lax.scan`` over the frame axis
+    with ``[E * N]``-wide vector carries.
+
+    Single-pass recurrences (like the numpy oracle's cumsums, unlike
+    XLA's O(n log n) associative cumulative ops) batched across every
+    (epoch, stream) pair of the window, with the exact piecewise-linear
+    age integral accumulated forward in the same pass — so the whole
+    window is one dispatch whose per-step body is a handful of fused
+    elementwise ops on the flattened stream vector.
+    """
+    e, n = lam.shape
+    dtype = lam.dtype
+    flat = lambda x: x.reshape(e * n)
+    lam, mu, p = flat(lam), flat(mu), flat(p)
+    is_lcfsp = flat(pol) == 1
+
+    # Collision-free per-(epoch, stream) keys; all of a stream's variates
+    # come from one bulk uniform draw under its own key.
+    stream_keys = jax.vmap(
+        lambda ke: jax.vmap(jax.random.fold_in, (None, 0))(
+            ke, jnp.arange(n)))(keys)
+    k = _n_uniforms(delay_model)
+    ku, ko = k // 2, (k - 1) - k // 2
+
+    def draw(key):
+        u = jax.random.uniform(key, (k, n_frames), dtype)
+        return u
+
+    u = jax.vmap(draw)(stream_keys.reshape(e * n))       # [EN, k, F]
+    T = _delays_from_uniforms(
+        jnp.moveaxis(u[:, :ku], 0, -1), 1.0 / lam, delay_model)
+    O = _delays_from_uniforms(
+        jnp.moveaxis(u[:, ku:ku + ko], 0, -1), 1.0 / mu, delay_model)
+    coin = jnp.moveaxis(u[:, -1], 0, -1)                 # [F, EN]
+    # LCFSP completion needs the NEXT transmission time at each step.
+    T_next = jnp.concatenate(
+        [T[1:], jnp.full((1, e * n), jnp.inf, dtype)])
+    # Effective horizon: the epoch, unless the frame budget (frames_cap)
+    # ran out of arrivals first — then measure over the simulated window
+    # instead of counting the uncovered tail as pure age growth.
+    h_eff = jnp.minimum(jnp.asarray(horizon, dtype), T.sum(axis=0))
+    zero = jnp.zeros(e * n, dtype)
+
+    def step(carry, xs):
+        a, s, m, last_t, age0, area, n_arr, n_done, n_acc = carry
+        t_f, t_nxt, o_f, u_f = xs
+        a = a + t_f                            # arrival a_i = tau_{i+1}
+        gen = a - t_f                          # generation tau_i
+        s = s + o_f                            # cumsum of service times
+        m = jnp.maximum(m, a - (s - o_f))      # running max idle slack
+        finish = jnp.where(is_lcfsp, a + o_f, s + m)
+        completed = jnp.where(is_lcfsp, o_f < t_nxt, True)
+        done = completed & (finish <= h_eff)
+        valid = done & (u_f < p)
+        # Age resets to finish - gen at each valid event; events are
+        # nondecreasing in time, so accumulate the closed segment.
+        seg = jnp.where(valid, finish - last_t, zero)
+        area = area + age0 * seg + 0.5 * seg * seg
+        last_t = jnp.where(valid, finish, last_t)
+        age0 = jnp.where(valid, finish - gen, age0)
+        n_arr = n_arr + (a <= h_eff)
+        n_done = n_done + done
+        n_acc = n_acc + valid
+        return (a, s, m, last_t, age0, area, n_arr, n_done, n_acc), None
+
+    init = (zero, zero, jnp.full(e * n, -jnp.inf, dtype), zero, zero,
+            zero, zero, zero, zero)
+    (a, s, m, last_t, age0, area, n_arr, n_done, n_acc), _ = lax.scan(
+        step, init, (T, T_next, O, coin))
+    # Final open segment up to the effective horizon.
+    seg = jnp.maximum(h_eff - last_t, zero)
+    area = area + age0 * seg + 0.5 * seg * seg
+    shape = lambda x: x.reshape(e, n)
+    return {
+        "aopi": shape(area / h_eff),
+        "horizon": shape(h_eff),
+        "n_frames": shape(n_arr),
+        "n_completed": shape(n_done),
+        "n_accurate": shape(n_acc),
+    }
+
+
+def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
+                 n_frames: int, horizon: float,
+                 delay_model: str = "mm1") -> dict:
+    """Simulate ``[E, N]`` GI/G/1 streams (E epochs x N streams) in ONE
+    jitted device dispatch.
+
+    Per (epoch ``t0+e``, stream ``i``): ``n_frames`` transmission/service
+    delays are drawn from ``delay_model`` with means ``1/lam``/``1/mu``
+    under the collision-free key ``fold_in(fold_in(key(seed), t), i)``,
+    both queueing recurrences are solved in closed vectorized form, and
+    the exact age integral is truncated at ``horizon`` seconds — measured
+    AoPI reflects the epoch even when ``n_frames`` extends past it. If a
+    stream's frame budget runs out *before* the horizon (``frames_cap``),
+    the integral covers the simulated window instead (the per-stream
+    effective horizon is returned).
+
+    One ``lax.scan`` over the frame axis carries every (epoch, stream)
+    recurrence as an ``[E*N]`` vector — single-pass like the numpy
+    oracle's cumsums, but batched across the whole window. Short frame
+    budgets (<= ``F32_MAX_FRAMES``) run in float32; longer horizons
+    switch to float64 (scoped ``enable_x64``) so multi-hour epochs keep
+    sub-millisecond age resolution, matching the oracle. Returns host
+    numpy: ``aopi``/``horizon``/``n_frames``/``n_completed``/
+    ``n_accurate``, each ``[E, N]``.
+    """
+    if delay_model not in DELAY_MODELS:
+        raise ValueError(
+            f"unknown delay_model {delay_model!r}; known: {DELAY_MODELS}")
+    global BATCH_DISPATCHES
+    n_frames = int(n_frames)
+    dtype = np.float32 if n_frames <= F32_MAX_FRAMES else np.float64
+    lam = np.atleast_2d(np.asarray(lam, dtype))
+    e, n = lam.shape
+    with enable_x64():
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(
+            jax.random.key(int(seed)), jnp.arange(t0, t0 + e))
+        out = _window_sim(
+            jnp.asarray(np.maximum(lam, dtype(1e-6))),
+            jnp.asarray(np.maximum(
+                np.atleast_2d(np.asarray(mu, dtype)), dtype(1e-6))),
+            jnp.asarray(np.clip(
+                np.atleast_2d(np.asarray(p, dtype)), 1e-3, 1.0)),
+            jnp.asarray(np.atleast_2d(np.asarray(pol, np.int32))),
+            keys, float(horizon), n_frames, str(delay_model))
+        out = {k: np.asarray(v, np.float64) for k, v in out.items()}
+    BATCH_DISPATCHES += 1
+    return out

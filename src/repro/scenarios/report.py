@@ -37,6 +37,9 @@ class FamilyStats:
     measured_pct: Optional[float] = None
     measured_worst: Optional[float] = None
     mean_predicted: Optional[float] = None
+    # model name -> family-mean divergence, one entry per replayed delay
+    # family (the primary model's entry equals ``divergence``).
+    divergence_models: Optional[dict] = None
 
     @property
     def divergence(self) -> Optional[float]:
@@ -60,6 +63,9 @@ class RobustnessReport:
     # against the predictions of the *same* epochs).
     total_slots: int = 0
     replay_slots: int = 0
+    # Replayed delay families (first = primary, backing the ``diverge``
+    # column); extra models add one ``div:<model>`` column each.
+    delay_models: tuple = ()
 
     @property
     def has_measured(self) -> bool:
@@ -81,10 +87,16 @@ class RobustnessReport:
                   key=lambda f: abs(self.table[policy][f].divergence))
         return fam, self.table[policy][fam].divergence
 
+    @property
+    def _extra_models(self) -> tuple:
+        """Replayed delay families beyond the primary one."""
+        return tuple(self.delay_models[1:]) if self.delay_models else ()
+
     def rows(self) -> list[list]:
         """Flat rows (benchmarks): [policy, family, mean, pXX, worst, acc]
         plus [measured_mean, measured_pXX, measured_worst, divergence]
-        when the sweep was replayed through the data plane."""
+        when the sweep was replayed through the data plane, plus one
+        divergence per extra replayed delay model."""
         out = []
         for p in self.policies:
             for f in self.families:
@@ -94,6 +106,8 @@ class RobustnessReport:
                 if self.has_measured:
                     row += [s.measured_mean, s.measured_pct,
                             s.measured_worst, s.divergence]
+                    row += [s.divergence_models[dm]
+                            for dm in self._extra_models]
                 out.append(row)
         return out
 
@@ -102,10 +116,19 @@ class RobustnessReport:
         head = (f"{'policy':<6} {'family':<{w}} {'mean':>9} "
                 f"{f'p{self.pct:.0f}':>9} {'worst':>9} {'acc':>6}")
         measured = self.has_measured
+        extra = self._extra_models
         lines = []
         if measured:
             head += (f" | {'measured':>9} {f'p{self.pct:.0f}':>9} "
                      f"{'worst':>9} {'diverge':>8}")
+            for dm in extra:
+                head += f" {'div:' + dm:>12}"
+            if len(self.delay_models) > 1 or (
+                    self.delay_models and self.delay_models[0] != "mm1"):
+                lines.append("# data plane delay model(s): "
+                             + ", ".join(self.delay_models)
+                             + " (measured block = "
+                             + self.delay_models[0] + ")")
             if 0 < self.replay_slots < self.total_slots:
                 lines.append(
                     f"# measured block covers the first {self.replay_slots}"
@@ -123,6 +146,8 @@ class RobustnessReport:
                              f"{s.measured_pct:>9.4f} "
                              f"{s.measured_worst:>9.4f} "
                              f"{s.divergence:>+8.2%}")
+                    for dm in extra:
+                        line += f" {s.divergence_models[dm]:>+12.2%}"
                 lines.append(line)
         return "\n".join(lines)
 
@@ -135,6 +160,9 @@ def robustness(result: SweepResult, pct: float = 95.0) -> RobustnessReport:
     fams = sorted(set(result.families))
     measured_aopi = getattr(result, "measured_aopi", None)
     predicted_aopi = getattr(result, "predicted_aopi", None)
+    delay_models = getattr(result, "delay_models", None) or ()
+    measured_by_model = getattr(result, "measured_by_model", None) or {}
+    predicted_by_model = getattr(result, "predicted_by_model", None) or {}
     total_slots = next(iter(result.aopi.values())).shape[1]
     replay_slots = (next(iter(measured_aopi.values())).shape[1]
                     if measured_aopi else 0)
@@ -159,7 +187,13 @@ def robustness(result: SweepResult, pct: float = 95.0) -> RobustnessReport:
                 stats.measured_pct = float(np.percentile(m, pct))
                 stats.measured_worst = float(m.max())
                 stats.mean_predicted = float(pr.mean())
+                stats.divergence_models = {
+                    dm: float(measured_by_model[dm][policy][idx].mean() /
+                              max(predicted_by_model[dm][policy][idx]
+                                  .mean(), 1e-12) - 1.0)
+                    for dm in delay_models}
             table[policy][fam] = stats
     return RobustnessReport(policies=list(result.policies), families=fams,
                             pct=pct, table=table, total_slots=total_slots,
-                            replay_slots=replay_slots)
+                            replay_slots=replay_slots,
+                            delay_models=tuple(delay_models))

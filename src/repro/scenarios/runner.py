@@ -65,10 +65,13 @@ class SweepResult:
 
     ``aopi``/``acc``/``q`` map policy name -> ``[K, T]`` numpy arrays
     aligned with ``names``/``families``. When the sweep ran with
-    ``dataplane=True``, ``measured_aopi`` holds the M/M/1 data-plane
+    ``dataplane=True``, ``measured_aopi`` holds the data-plane
     measurement per epoch (``[K, T_replay]``, possibly fewer slots than
     the closed-form series when the replay was truncated) and
-    ``predicted_aopi`` the matching planner prediction.
+    ``predicted_aopi`` the matching planner prediction — both for the
+    *primary* (first) delay model. ``delay_models`` lists every replayed
+    delay family; ``measured_by_model``/``predicted_by_model`` map
+    model -> policy -> ``[K, T_replay]`` for all of them.
     """
     names: list[str]
     families: list[str]
@@ -81,6 +84,9 @@ class SweepResult:
     q: dict[str, np.ndarray]
     measured_aopi: dict[str, np.ndarray] | None = None
     predicted_aopi: dict[str, np.ndarray] | None = None
+    delay_models: tuple[str, ...] | None = None
+    measured_by_model: dict[str, dict[str, np.ndarray]] | None = None
+    predicted_by_model: dict[str, dict[str, np.ndarray]] | None = None
 
     def mean_aopi(self, policy: str) -> np.ndarray:
         """Per-scenario mean AoPI over the horizon. [K]"""
@@ -97,14 +103,25 @@ class SweepResult:
     def mean_acc(self, policy: str) -> np.ndarray:
         return self.acc[policy].mean(axis=1)
 
-    def divergence(self, policy: str) -> np.ndarray:
+    def divergence(self, policy: str,
+                   delay_model: str | None = None) -> np.ndarray:
         """Per-scenario measured/predicted - 1 over the replayed epochs
-        (requires ``dataplane=True``). [K]"""
+        (requires ``dataplane=True``). ``delay_model=None`` uses the
+        primary model; pass a name from ``delay_models`` for another. [K]
+        """
         if self.measured_aopi is None:
             raise ValueError("sweep ran without dataplane=True; no "
                              "measured series to diverge against")
-        return divergence_series(self.measured_aopi[policy],
-                                 self.predicted_aopi[policy])
+        if delay_model is None:
+            return divergence_series(self.measured_aopi[policy],
+                                     self.predicted_aopi[policy])
+        if (self.measured_by_model is None
+                or delay_model not in self.measured_by_model):
+            raise ValueError(
+                f"delay model {delay_model!r} was not replayed; "
+                f"available: {self.delay_models}")
+        return divergence_series(self.measured_by_model[delay_model][policy],
+                                 self.predicted_by_model[delay_model][policy])
 
 
 def _reduced_policy(name: str, n_bcd_iters: int, solver_backend: str):
@@ -212,13 +229,22 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
     solve).
 
     ``dataplane=True`` additionally replays every (policy, scenario) pair
-    through the event-driven M/M/1 data plane
+    through the batched GI/G/1 data plane
     (``repro.serving.replay_suite``) and attaches *measured* per-epoch
     AoPI (plus the matching planner predictions) to the result —
     ``report.robustness`` then emits the two-column predicted-vs-measured
-    table. ``dataplane_params`` forwards replay knobs (``n_epochs``,
+    table with a divergence column per replayed delay model.
+    ``dataplane_params`` forwards replay knobs (``n_epochs``,
     ``epoch_duration``, ``frames_cap``, ``seed``, ``telemetry_gain``,
-    ``plan_window`` — see ``serving.replay.replay_tables``).
+    ``plan_window``, ``replan_threshold``, and ``delay_model`` — a name
+    from ``queues.DELAY_MODELS`` or a tuple of them; the first is the
+    primary model backing ``measured_aopi``/``divergence()``, the rest
+    land in ``measured_by_model`` — see ``serving.replay.replay_tables``).
+    Each extra delay model is a full extra replay, planner included
+    (telemetry feedback couples planning to the plane, and at
+    ``telemetry_gain > 0`` the per-model plans genuinely differ);
+    compiled planner executables are reused across models, so the
+    repeated cost is execution, not compilation.
     """
     if isinstance(suite_or_tables, Suite):
         tables = suite_or_tables.tables
@@ -269,6 +295,8 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
             series[name] = _run_vmap(name, n_bcd_iters, sb, tables, knobs)
 
     measured = predicted = None
+    delay_models = None
+    measured_by_model = predicted_by_model = None
     if dataplane:
         # Lazy import: repro.serving pulls the model/engine stack, and
         # importing it here (not at module load) also keeps the
@@ -276,22 +304,33 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         from ..serving import replay as _replay
         dp = dict(dataplane_params or {})
         known = {"n_epochs", "epoch_duration", "frames_cap", "seed",
-                 "plan_window", "telemetry_gain"}
+                 "plan_window", "telemetry_gain", "delay_model",
+                 "replan_threshold"}
         unknown = sorted(set(dp) - known)
         if unknown:
             raise ValueError(f"unknown dataplane_params {unknown}; "
                              f"known: {sorted(known)}")
-        rres = _replay.replay_suite(
-            suite_or_tables, policies=list(policies), v=v, p_min=p_min,
-            policy_params=policy_params, solver_backend=solver_backend,
-            n_epochs=dp.get("n_epochs"),
-            epoch_duration=float(dp.get("epoch_duration", 300.0)),
-            frames_cap=int(dp.get("frames_cap", 200_000)),
-            seed=int(dp.get("seed", 0)),
-            plan_window=dp.get("plan_window"),
-            telemetry_gain=float(dp.get("telemetry_gain", 0.0)))
-        measured = rres.measured
-        predicted = rres.predicted
+        models = dp.get("delay_model", "mm1")
+        if isinstance(models, str):
+            models = (models,)
+        delay_models = tuple(models)
+        measured_by_model, predicted_by_model = {}, {}
+        for dm in delay_models:
+            rres = _replay.replay_suite(
+                suite_or_tables, policies=list(policies), v=v, p_min=p_min,
+                policy_params=policy_params, solver_backend=solver_backend,
+                n_epochs=dp.get("n_epochs"),
+                epoch_duration=float(dp.get("epoch_duration", 300.0)),
+                frames_cap=int(dp.get("frames_cap", 200_000)),
+                seed=int(dp.get("seed", 0)),
+                plan_window=dp.get("plan_window"),
+                telemetry_gain=float(dp.get("telemetry_gain", 0.0)),
+                delay_model=dm,
+                replan_threshold=dp.get("replan_threshold"))
+            measured_by_model[dm] = rres.measured
+            predicted_by_model[dm] = rres.predicted
+        measured = measured_by_model[delay_models[0]]
+        predicted = predicted_by_model[delay_models[0]]
 
     tag = backend if len(devices) > 1 or backend == "vmap" else "vmap"
     backend_str = (f"{tag}[{len(devices)}]" if tag != "vmap" else "vmap")
@@ -301,4 +340,6 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         aopi={p: s["aopi"] for p, s in series.items()},
         acc={p: s["acc"] for p, s in series.items()},
         q={p: s["q"] for p, s in series.items()},
-        measured_aopi=measured, predicted_aopi=predicted)
+        measured_aopi=measured, predicted_aopi=predicted,
+        delay_models=delay_models, measured_by_model=measured_by_model,
+        predicted_by_model=predicted_by_model)

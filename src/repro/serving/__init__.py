@@ -3,10 +3,12 @@ from .replay import (ReplayResult, ScenarioReplay, TableSystem,
                      make_controller, replay_suite, replay_tables)
 from .scheduler import (FCFS, LCFSP, AoPITracker, Frame, StreamQueue,
                         StreamTelemetry)
-from .service import AnalyticsService, EpochReport, measure_mm1
+from .service import (AnalyticsService, EpochReport, measure_mm1,
+                      measure_mm1_loop, measure_window)
 
 __all__ = ["Engine", "Result", "FCFS", "LCFSP", "AoPITracker", "Frame",
            "StreamQueue", "StreamTelemetry", "AnalyticsService",
-           "EpochReport", "measure_mm1", "ReplayResult", "ScenarioReplay",
+           "EpochReport", "measure_mm1", "measure_mm1_loop",
+           "measure_window", "ReplayResult", "ScenarioReplay",
            "TableSystem", "make_controller", "replay_suite",
            "replay_tables"]

@@ -12,8 +12,10 @@ validates Theorems 1-2), so every (policy, scenario) pair produces
     scan planner) consume scenario data instead of live traces;
   * :func:`replay_tables` — one (policy, scenario) replay; the planner is
     the jitted ``lbcd.rollout`` / ``baselines.rollout_*`` scan engine
-    (whole horizon in one dispatch by default), the data plane is
-    ``service.measure_mm1`` per epoch;
+    (whole horizon in one dispatch by default), the data plane is the
+    batched GI/G/1 engine, one ``service.measure_window`` dispatch per
+    plan window (``delay_model`` selects exponential/uniform/gamma
+    delays);
   * :func:`replay_suite` — the full stacked suite -> :class:`ReplayResult`
     with ``[K, T]`` predicted and measured fleet-mean AoPI per policy.
 
@@ -103,10 +105,11 @@ def make_controller(policy: str, system, *, v: float = 10.0,
 class ScenarioReplay:
     """One (policy, scenario) replay: per-epoch fleet means + the service
     (whose ``reports`` hold per-stream detail and telemetry)."""
-    predicted: np.ndarray     # [T] fleet-mean closed-form AoPI per epoch
+    predicted: np.ndarray     # [T] fleet-mean calibrated-prediction AoPI
     measured: np.ndarray      # [T] fleet-mean measured AoPI per epoch
     acc: np.ndarray           # [T] fleet-mean planned accuracy
     service: AnalyticsService
+    delay_model: str = "mm1"
 
 
 def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
@@ -115,15 +118,21 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
                   epoch_duration: float = 300.0, frames_cap: int = 200_000,
                   seed: int = 0, plan_window: int | None = None,
                   solver_backend: str = "jnp",
-                  telemetry_gain: float = 0.0) -> ScenarioReplay:
-    """Replay one scenario's horizon through the M/M/1 data plane.
+                  telemetry_gain: float = 0.0,
+                  delay_model: str = "mm1",
+                  replan_threshold: float | None = None) -> ScenarioReplay:
+    """Replay one scenario's horizon through the batched data plane.
 
     The planner runs the policy's scan engine over whole lookahead
     windows in one jitted dispatch each. ``plan_window=None`` resolves to
     the full horizon (one dispatch) when ``telemetry_gain`` is 0, and to
     ``min(8, n_epochs)`` otherwise — telemetry can only re-enter the
     planner at window boundaries, so a feedback replay must replan.
-    The data plane measures each epoch with ``service.measure_mm1``.
+    The data plane measures each plan window in ONE batched GI/G/1
+    dispatch (``service.measure_window``); ``delay_model`` picks the
+    delay family ("mm1" exponential / "uniform" / "gamma" — the §III-B
+    regime where Theorems 1-2 drift), and ``replan_threshold`` arms
+    divergence-triggered early replanning (see ``AnalyticsService``).
     Bitwise deterministic in ``(seed, tables, n_epochs)``.
     """
     system = TableSystem(tables)
@@ -140,13 +149,14 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
     svc = AnalyticsService(
         ctrl, mode="mm1", epoch_duration=epoch_duration,
         frames_cap=frames_cap, seed=seed, plan_window=plan_window,
-        tables=system.horizon(n_epochs), telemetry_gain=telemetry_gain)
+        tables=system.horizon(n_epochs), telemetry_gain=telemetry_gain,
+        delay_model=delay_model, replan_threshold=replan_threshold)
     reps = svc.run(n_epochs)
     return ScenarioReplay(
         predicted=np.array([r.predicted_aopi for r in reps]),
         measured=np.array([r.measured_aopi for r in reps]),
         acc=np.array([r.accuracy for r in reps]),
-        service=svc)
+        service=svc, delay_model=delay_model)
 
 
 @dataclasses.dataclass
@@ -166,6 +176,7 @@ class ReplayResult:
     predicted: dict[str, np.ndarray]
     measured: dict[str, np.ndarray]
     acc: dict[str, np.ndarray]
+    delay_model: str = "mm1"
 
     def divergence(self, policy: str) -> np.ndarray:
         """Per-scenario relative divergence of horizon-mean measured vs
@@ -181,7 +192,9 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
                  epoch_duration: float = 300.0, frames_cap: int = 200_000,
                  seed: int = 0, plan_window: int | None = None,
                  solver_backend: str = "jnp",
-                 telemetry_gain: float = 0.0) -> ReplayResult:
+                 telemetry_gain: float = 0.0,
+                 delay_model: str = "mm1",
+                 replan_threshold: float | None = None) -> ReplayResult:
     """Replay every scenario of a suite through the data plane, for every
     policy — the measured counterpart of ``scenarios.sweep``.
 
@@ -220,7 +233,8 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
                 policy_params=policy_params, epoch_duration=epoch_duration,
                 frames_cap=frames_cap, seed=seed, plan_window=plan_window,
                 solver_backend=solver_backend,
-                telemetry_gain=telemetry_gain)
+                telemetry_gain=telemetry_gain, delay_model=delay_model,
+                replan_threshold=replan_threshold)
             predicted[policy].append(rep.predicted)
             measured[policy].append(rep.measured)
             acc[policy].append(rep.acc)
@@ -229,4 +243,5 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
         v=v, p_min=p_min, epoch_duration=epoch_duration,
         predicted={p: np.stack(s) for p, s in predicted.items()},
         measured={p: np.stack(s) for p, s in measured.items()},
-        acc={p: np.stack(s) for p, s in acc.items()})
+        acc={p: np.stack(s) for p, s in acc.items()},
+        delay_model=delay_model)

@@ -37,12 +37,13 @@ class StreamTelemetry:
     mu_hat: np.ndarray       # measured frame completion rate (frames/s)
     n_frames: np.ndarray     # frames offered to each stream's queue
     n_completed: np.ndarray  # frames whose result was delivered
+    aopi_hat: np.ndarray = None  # measured per-stream AoPI over the epoch
 
     @staticmethod
     def empty(n_streams: int) -> "StreamTelemetry":
         z = np.zeros(n_streams)
         return StreamTelemetry(z.copy(), z.copy(), z.copy(),
-                               z.copy(), z.copy())
+                               z.copy(), z.copy(), z.copy())
 
 
 @dataclasses.dataclass

@@ -22,13 +22,18 @@ Two planners:
     (kept for custom ``assign_fn`` controllers and failover experiments).
 
 Two data planes ship:
-  * ``mode="mm1"``  — event-driven M/M/1 execution (the paper's model;
-    validates Theorems 1-2 at scale, used by benchmarks and
-    ``repro.serving.replay``). The plane executes against the *unscaled*
-    scenario truth: measured accuracy uses the raw profile table and the
-    true link efficiency, while the planner sees the telemetry-corrected
-    beliefs — exactly the model-vs-measurement split where
-    config-adaptation policies break.
+  * ``mode="mm1"``  — the batched device-resident GI/G/1 engine
+    (``queues.gi_g1_window``): every stream of a whole plan window is
+    simulated in ONE jitted dispatch shaped ``[E, N, F]``, with
+    ``delay_model`` selecting exponential ("mm1", the paper's model that
+    validates Theorems 1-2 at scale), uniform, or gamma delays (the
+    §III-B testbed regime where the closed forms drift). The plane
+    executes against the *unscaled* scenario truth: measured accuracy
+    uses the raw profile table and the true link efficiency, while the
+    planner sees the telemetry-corrected beliefs — exactly the
+    model-vs-measurement split where config-adaptation policies break.
+    ``replan_threshold`` arms divergence-triggered replanning: a mid-
+    window drift past the threshold cuts the window and replans early.
   * ``mode="engine"`` — a real continuous-batching Engine on a small model
     (examples/serve_e2e.py), with LCFSP preemption at step boundaries.
 """
@@ -47,21 +52,93 @@ from ..core.profiles import HorizonTables
 from .scheduler import AoPITracker, Frame, StreamQueue, StreamTelemetry
 
 
+#: Element budget (epochs x streams x frames) of one batched data-plane
+#: dispatch; larger windows are chunked along the epoch axis so peak
+#: device memory stays bounded (~a few hundred MB of f64 intermediates).
+MAX_BATCH_ELEMS = 1 << 25
+
+
+def measure_window(lam, mu, p, pol, *, epoch_duration: float = 300.0,
+                   frames_cap: int = 200_000, frames_floor: int = 200,
+                   seed: int = 0, t0: int = 0, delay_model: str = "mm1"
+                   ) -> tuple[np.ndarray, list[StreamTelemetry]]:
+    """Measure epochs ``[t0, t0+E)`` of an N-stream data plane in ONE
+    batched device dispatch (``queues.gi_g1_window``; chunked along the
+    epoch axis only past ``MAX_BATCH_ELEMS``).
+
+    ``lam``/``mu``/``p``/``pol`` are ``[E, N]``: per stream, ``delay_model``
+    transmissions with mean ``1/lam[e, i]``, service with mean
+    ``1/mu[e, i]``, Bernoulli(``p[e, i]``) recognition, FCFS/LCFSP per
+    ``pol[e, i]`` — the frame-uploading model of §III-A, generalized to
+    the GI/G/1 delay families of ``queues.DELAY_MODELS``. Deterministic in
+    ``(seed, t, i)`` via collision-free folded keys; age integration is
+    truncated at ``epoch_duration`` so measured AoPI reflects the epoch
+    even for low-rate streams padded up to the frame floor.
+
+    Returns ``(measured_aopi[E, N], [StreamTelemetry] * E)``.
+    """
+    lam = np.atleast_2d(np.asarray(lam, np.float64))
+    mu = np.atleast_2d(np.asarray(mu, np.float64))
+    p = np.atleast_2d(np.asarray(p, np.float64))
+    pol = np.atleast_2d(np.asarray(pol))
+    n_epochs, n = lam.shape
+    horizon = float(epoch_duration)
+    n_frames = queues.frames_budget(max(lam.max(), 1e-6), horizon,
+                                    frames_cap, frames_floor)
+    e_chunk = max(int(MAX_BATCH_ELEMS // max(n * n_frames, 1)), 1)
+    measured = np.zeros((n_epochs, n))
+    tels: list[StreamTelemetry] = []
+    for e0 in range(0, n_epochs, e_chunk):
+        e1 = min(e0 + e_chunk, n_epochs)
+        out = queues.gi_g1_window(
+            lam[e0:e1], mu[e0:e1], p[e0:e1], pol[e0:e1],
+            seed=seed, t0=t0 + e0, n_frames=n_frames, horizon=horizon,
+            delay_model=delay_model)
+        measured[e0:e1] = out["aopi"]
+        for j in range(e1 - e0):
+            h_eff = np.maximum(out["horizon"][j], 1e-9)
+            tels.append(StreamTelemetry(
+                acc_hat=out["n_accurate"][j] /
+                np.maximum(out["n_completed"][j], 1),
+                lam_hat=out["n_frames"][j] / h_eff,
+                mu_hat=out["n_completed"][j] / h_eff,
+                n_frames=out["n_frames"][j].astype(np.float64),
+                n_completed=out["n_completed"][j].astype(np.float64),
+                aopi_hat=out["aopi"][j].copy()))
+    return measured, tels
+
+
 def measure_mm1(lam, mu, p, pol, *, epoch_duration: float = 300.0,
                 frames_cap: int = 200_000, frames_floor: int = 200,
-                seed: int = 0, t: int = 0
+                seed: int = 0, t: int = 0, delay_model: str = "mm1"
                 ) -> tuple[np.ndarray, StreamTelemetry]:
-    """Run one epoch of the event-driven M/M/1 data plane for N streams.
-
-    Per stream: exponential transmissions at rate ``lam[i]``, exponential
-    service at ``mu[i]``, Bernoulli(``p[i]``) recognition, FCFS/LCFSP per
-    ``pol[i]`` — the exact frame-uploading model of §III-A, via the
-    vectorized ``queues.simulate`` oracle. Deterministic in
-    ``(seed, t, i)``: stream i of epoch t always draws from the stream
-    ``seed + 7919 * t + i``.
+    """One epoch of the event-driven data plane for N streams — a single
+    batched device dispatch (see :func:`measure_window`; the historical
+    name survives because "mm1" is still the default delay family).
 
     Returns ``(measured_aopi[N], StreamTelemetry)``.
     """
+    lam = np.asarray(lam, np.float64)
+    measured, tels = measure_window(
+        lam[None], np.asarray(mu, np.float64)[None],
+        np.asarray(p, np.float64)[None], np.asarray(pol)[None],
+        epoch_duration=epoch_duration, frames_cap=frames_cap,
+        frames_floor=frames_floor, seed=seed, t0=t,
+        delay_model=delay_model)
+    return measured[0], tels[0]
+
+
+def measure_mm1_loop(lam, mu, p, pol, *, epoch_duration: float = 300.0,
+                     frames_cap: int = 200_000, frames_floor: int = 200,
+                     seed: int = 0, t: int = 0, delay_model: str = "mm1"
+                     ) -> tuple[np.ndarray, StreamTelemetry]:
+    """The PR-4 per-stream numpy loop — kept as the parity reference for
+    the batched engine (``tests/test_dataplane.py``) and the baseline of
+    ``benchmarks/bench_dataplane.py``. Seeded with collision-free
+    ``SeedSequence(entropy=seed, spawn_key=(t, i))`` streams (the old
+    ``seed + 7919*t + i`` arithmetic collided across (t, i) pairs). Note
+    the loop integrates age over the *simulated* horizon (the historical
+    semantics), not the truncated epoch."""
     lam = np.asarray(lam, np.float64)
     mu = np.asarray(mu, np.float64)
     p = np.asarray(p, np.float64)
@@ -71,13 +148,14 @@ def measure_mm1(lam, mu, p, pol, *, epoch_duration: float = 300.0,
     tel = StreamTelemetry.empty(n)
     for i in range(n):
         lam_i = max(float(lam[i]), 1e-6)
+        mu_i = max(float(mu[i]), 1e-6)
         n_frames = int(min(lam_i * epoch_duration, frames_cap))
         n_frames = max(n_frames, frames_floor)
+        samplers = queues.oracle_samplers(delay_model, lam_i, mu_i)
         sim = queues.simulate(
-            lam_i, max(float(mu[i]), 1e-6),
-            float(np.clip(p[i], 1e-3, 1.0)),
+            lam_i, mu_i, float(np.clip(p[i], 1e-3, 1.0)),
             int(pol[i]), n_frames=n_frames,
-            seed=seed + 7919 * t + i)
+            seed=queues.stream_seed_sequence(seed, t, i), **samplers)
         measured[i] = sim.mean_aopi
         horizon = max(sim.horizon, 1e-9)
         tel.acc_hat[i] = sim.n_accurate / max(sim.n_completed, 1)
@@ -85,6 +163,7 @@ def measure_mm1(lam, mu, p, pol, *, epoch_duration: float = 300.0,
         tel.mu_hat[i] = sim.n_completed / horizon
         tel.n_frames[i] = sim.n_frames
         tel.n_completed[i] = sim.n_completed
+        tel.aopi_hat[i] = sim.mean_aopi
     return measured, tel
 
 
@@ -106,19 +185,34 @@ class AnalyticsService:
                  frames_cap: int = 200_000, seed: int = 0,
                  planner: str = "scan", plan_window: int = 8,
                  tables: HorizonTables | None = None,
-                 telemetry_gain: float = 0.0):
+                 telemetry_gain: float = 0.0,
+                 delay_model: str = "mm1",
+                 replan_threshold: float | None = None):
         """``controller`` is an ``LBCDController`` or one of the
         ``baselines`` controllers (anything with ``step(t)`` and either
         ``plan(tables)`` or ``_rollout(tables)``).
 
         ``tables`` replays a prebuilt horizon (e.g. a ``repro.scenarios``
         build) instead of the controller's live ``EdgeSystem``;
-        ``telemetry_gain`` > 0 lets measured accuracy / arrival rates
-        correct the next planning window's profiles (EWMA weight).
+        ``telemetry_gain`` > 0 lets measured accuracy / arrival rates /
+        AoPI correct the next planning window's beliefs (EWMA weight).
+        ``delay_model`` selects the data plane's delay family
+        (``queues.DELAY_MODELS``; "mm1" keeps the paper's exponential
+        model, "uniform"/"gamma" the §III-B testbed regime where
+        Theorems 1-2 drift). ``replan_threshold`` (relative
+        measured-vs-predicted divergence, e.g. 0.1) arms
+        divergence-triggered replanning: when an epoch's divergence
+        crosses it mid-window, the remaining plan window is cut and
+        ``plan_horizon`` re-runs from the next epoch with fresh telemetry
+        instead of waiting for the fixed ``plan_window`` boundary.
         """
         if planner not in ("scan", "step"):
             raise ValueError(f"unknown planner {planner!r}; "
                              "known: ('scan', 'step')")
+        if delay_model not in queues.DELAY_MODELS:
+            raise ValueError(
+                f"unknown delay_model {delay_model!r}; "
+                f"known: {queues.DELAY_MODELS}")
         # Scan planning needs a whole-horizon engine on the controller AND
         # a horizon source (replay tables, or a system that can pregenerate
         # one); duck-typed systems exposing only capacities(t)/tables(t)
@@ -138,13 +232,20 @@ class AnalyticsService:
         self.plan_window = max(int(plan_window), 1)
         self.tables = tables
         self.telemetry_gain = float(telemetry_gain)
+        self.delay_model = delay_model
+        self.replan_threshold = (None if replan_threshold is None
+                                 else float(replan_threshold))
         self.reports: list = []
+        self.divergences: list[float] = []   # per-epoch measured/pred - 1
+        self.early_replans: list[int] = []   # epochs where a window was cut
         n = self._n_streams()
         self._acc_scale = np.ones(n)
         self._eff_scale = np.ones(n)
+        self._aopi_scale = np.ones(n)        # measured/closed-form residual
         self._base_cache: HorizonTables | None = tables
         self._plan = None
         self._plan_t0 = 0
+        self._plan_meas = None               # window-batched measurements
 
     # ------------------------------------------------------------------
     # Planner: lookahead windows as one jitted scan
@@ -222,6 +323,7 @@ class AnalyticsService:
                     f"{self.tables.n_slots} slots")
             self._plan = jax.tree.map(np.asarray, self.plan_horizon(k, t))
             self._plan_t0 = t
+            self._plan_meas = None           # re-measure the new window
         j = t - self._plan_t0
         res = self._plan
         q = float(res.q[j])
@@ -256,9 +358,66 @@ class AnalyticsService:
         p_true = np.asarray(base.acc[0])[np.arange(n), m_idx, r_idx]
         return lam_true, p_true
 
+    def _plane_rates_window(self, t0: int, n_epochs: int,
+                            dec) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``_plane_rates`` for a whole plan window: ``dec``
+        holds stacked ``[E, N]`` decision arrays."""
+        n = dec.lam.shape[-1]
+        r_idx = np.asarray(dec.r_idx)
+        m_idx = np.asarray(dec.m_idx)
+        try:
+            base = self._base_window(t0, t0 + n_epochs)
+        except AttributeError:
+            return np.asarray(dec.lam), np.asarray(dec.acc)
+        eff = np.asarray(base.eff)
+        if eff.ndim == 1:
+            eff = np.broadcast_to(eff, (n_epochs, n))
+        size = np.asarray(base.size)
+        lam_true = np.asarray(dec.b) * eff / size[r_idx]
+        acc = np.asarray(base.acc)                       # [E, N, M, R]
+        p_true = acc[np.arange(n_epochs)[:, None],
+                     np.arange(n)[None, :], m_idx, r_idx]
+        return lam_true, p_true
+
+    def _measure_plan_window(self):
+        """Measure every epoch of the current plan window in ONE batched
+        device dispatch — the plane's inputs (planned configs + unscaled
+        truth tables) are fully known the moment the window is planned."""
+        res, t0 = self._plan, self._plan_t0
+        n_epochs = int(res.q.shape[0])
+        dec = res.decision
+        lam_true, p_true = self._plane_rates_window(t0, n_epochs, dec)
+        return measure_window(
+            lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
+            epoch_duration=self.epoch_duration, frames_cap=self.frames_cap,
+            seed=self.seed, t0=t0, delay_model=self.delay_model)
+
+    def _measure_epoch(self, t: int, dec):
+        """Measured AoPI + telemetry for epoch ``t``. On the scan path the
+        whole plan window is measured in one batched dispatch and cached;
+        the step path measures the epoch as one ``[1, N]`` dispatch.
+        Armed divergence replanning (``replan_threshold``) also measures
+        per epoch: a tripped threshold discards the rest of the window,
+        so eagerly simulating it would be wasted work in exactly the
+        badly-modeled regime replanning exists for."""
+        if (self.planner == "scan" and self._plan is not None
+                and self.replan_threshold is None):
+            if self._plan_meas is None:
+                self._plan_meas = self._measure_plan_window()
+            measured_w, tels = self._plan_meas
+            j = t - self._plan_t0
+            return measured_w[j], tels[j]
+        lam_true, p_true = self._plane_rates(t, dec)
+        return measure_mm1(
+            lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
+            epoch_duration=self.epoch_duration, frames_cap=self.frames_cap,
+            seed=self.seed, t=t, delay_model=self.delay_model)
+
     def _update_telemetry(self, dec, tel: StreamTelemetry):
         """Fold measured rates back into the planner's belief scales
-        (EWMA toward measured/believed, clipped to [0.5, 2])."""
+        (EWMA toward measured/believed, clipped to [0.5, 2]) and the
+        AoPI residual scale (measured/closed-form, clipped to [0.25, 4])
+        that calibrates predictions under non-exponential delays."""
         g = self.telemetry_gain
         if g <= 0.0:
             return
@@ -268,35 +427,64 @@ class AnalyticsService:
         ratio_lam = np.where(
             tel.n_frames > 0,
             tel.lam_hat / np.maximum(np.asarray(dec.lam), 1e-9), 1.0)
+        # Residual of the *calibrated* prediction, so the scale's fixed
+        # point is measured == aopi_scale * closed_form.
+        pred = self._aopi_scale * np.asarray(dec.aopi)
+        ratio_aopi = np.where(
+            (tel.aopi_hat > 0) & np.isfinite(pred) & (pred > 0),
+            tel.aopi_hat / np.maximum(pred, 1e-9), 1.0)
         self._acc_scale = np.clip(
             (1 - g) * self._acc_scale + g * self._acc_scale * ratio_acc,
             0.5, 2.0)
         self._eff_scale = np.clip(
             (1 - g) * self._eff_scale + g * self._eff_scale * ratio_lam,
             0.5, 2.0)
+        self._aopi_scale = np.clip(
+            (1 - g) * self._aopi_scale + g * self._aopi_scale * ratio_aopi,
+            0.25, 4.0)
 
     def run_epoch(self, t: int) -> EpochReport:
         rec = self._slot_record(t)
         dec = rec.decision
+        # The reported prediction is the *calibrated* belief: closed form
+        # times the telemetry AoPI residual (identity at gain 0). Taken
+        # BEFORE this epoch's telemetry folds in — the scale only carries
+        # information from epochs < t, so divergence is out-of-sample.
+        predicted = self._aopi_scale * np.asarray(dec.aopi)
         tel = None
         if self.mode == "mm1":
-            lam_true, p_true = self._plane_rates(t, dec)
-            measured, tel = measure_mm1(
-                lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
-                epoch_duration=self.epoch_duration,
-                frames_cap=self.frames_cap, seed=self.seed, t=t)
+            measured, tel = self._measure_epoch(t, dec)
             self._update_telemetry(dec, tel)
         else:
             measured = self._run_engine_epoch(rec)
         rep = EpochReport(
-            t=t, predicted_aopi=float(np.mean(dec.aopi)),
+            t=t, predicted_aopi=float(np.mean(predicted)),
             measured_aopi=float(np.mean(measured)),
             accuracy=float(np.mean(dec.acc)), q=rec.q,
             per_stream_measured=measured,
-            per_stream_predicted=np.asarray(dec.aopi),
+            per_stream_predicted=predicted,
             telemetry=tel)
         self.reports.append(rep)
+        div = rep.measured_aopi / max(rep.predicted_aopi, 1e-12) - 1.0
+        self.divergences.append(div)
+        self._maybe_replan(t, div)
         return rep
+
+    def _maybe_replan(self, t: int, div: float):
+        """Divergence-triggered replanning: cut the rest of the plan
+        window when the data plane drifted past ``replan_threshold`` from
+        the (calibrated) prediction, so ``plan_horizon`` re-runs at
+        ``t + 1`` with fresh telemetry instead of waiting for the fixed
+        ``plan_window`` boundary."""
+        if (self.replan_threshold is None or self.mode != "mm1"
+                or self.planner != "scan" or self._plan is None
+                or abs(div) <= self.replan_threshold):
+            return
+        remaining = self._plan_t0 + int(self._plan.q.shape[0]) - (t + 1)
+        if remaining > 0:
+            self._plan = None
+            self._plan_meas = None
+            self.early_replans.append(t + 1)
 
     # ------------------------------------------------------------------
     def _run_engine_epoch(self, rec) -> np.ndarray:

@@ -327,6 +327,161 @@ def test_sweep_without_dataplane_has_no_measured_columns():
 
 
 # ---------------------------------------------------------------------------
+# Batched data plane on the hot path (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_replay_suite_hot_path_is_batched(monkeypatch):
+    """``replay_suite`` over ALL registered families must never fall into
+    per-stream Python-loop simulation: the numpy oracle is monkeypatched
+    to explode, and the batched engine's dispatch counter must show
+    exactly ONE device dispatch per (policy, scenario) plan window."""
+    from repro.core import queues
+
+    def _boom(*a, **k):
+        raise AssertionError("per-stream loop simulation on the hot path")
+
+    monkeypatch.setattr(queues, "simulate", _boom)
+    monkeypatch.setattr(queues, "simulate_fcfs", _boom)
+    monkeypatch.setattr(queues, "simulate_lcfsp", _boom)
+    s = scenarios.suite(**DIMS)
+    assert len(set(s.families)) >= 6
+    before = queues.BATCH_DISPATCHES
+    res = replay.replay_suite(s, n_epochs=3, epoch_duration=300.0)
+    dispatches = queues.BATCH_DISPATCHES - before
+    # telemetry_gain=0 -> one plan window per (policy, scenario), each
+    # measured as one [E, N, F] dispatch.
+    assert dispatches == s.n_scenarios * len(res.policies)
+    for p in res.policies:
+        assert np.isfinite(res.measured[p]).all()
+        assert (res.measured[p] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Non-exponential delay models: drift + telemetry closing the gap
+# ---------------------------------------------------------------------------
+
+def test_uniform_delays_drift_from_theorems_and_telemetry_closes_gap():
+    """§III-B regime: uniform delays with M/M/1 means make measured AoPI
+    diverge from the Theorem 1/2 predictions; with ``telemetry_gain > 0``
+    the AoPI residual scale calibrates the next windows' predictions and
+    shrinks the gap."""
+    tab = scenarios.build("steady_ar1", DIMS)
+    rep0 = replay.replay_tables(tab, "lbcd", epoch_duration=600.0, seed=0,
+                                delay_model="uniform")
+    div0 = rep0.service.divergences
+    # mm1 replay of the same scenario stays unbiased...
+    rep_mm1 = replay.replay_tables(tab, "lbcd", epoch_duration=600.0,
+                                   seed=0)
+    assert abs(np.mean(rep_mm1.service.divergences)) < 0.05
+    # ...while the uniform plane visibly drifts from the closed forms.
+    assert abs(np.mean(div0)) > 0.05
+    # Telemetry feedback (replanning windows) calibrates the gap away.
+    rep1 = replay.replay_tables(tab, "lbcd", epoch_duration=600.0, seed=0,
+                                delay_model="uniform", telemetry_gain=0.7,
+                                plan_window=2)
+    tail0 = np.abs(div0[-4:]).mean()
+    tail1 = np.abs(rep1.service.divergences[-4:]).mean()
+    assert tail1 < tail0 * 0.6
+    assert rep1.delay_model == "uniform"
+
+
+def test_gamma_delays_drift_check():
+    tab = scenarios.build("steady_ar1", {**DIMS, "n_slots": 6})
+    rep = replay.replay_tables(tab, "lbcd", epoch_duration=600.0, seed=0,
+                               delay_model="gamma")
+    assert abs(np.mean(rep.service.divergences)) > 0.03
+    assert np.isfinite(rep.measured).all()
+
+
+def test_service_rejects_unknown_delay_model():
+    system = profiles.EdgeSystem(n_cameras=3, n_servers=2, n_slots=6,
+                                 seed=0)
+    ctrl = lbcd.LBCDController(system, v=10.0, p_min=0.6)
+    with pytest.raises(ValueError, match="delay_model"):
+        AnalyticsService(ctrl, delay_model="weibull")
+
+
+# ---------------------------------------------------------------------------
+# Divergence-triggered replanning
+# ---------------------------------------------------------------------------
+
+def test_divergence_triggered_replanning_cuts_windows():
+    """With a hair-trigger threshold every epoch's (nonzero) divergence
+    cuts the rest of the plan window, so the planner re-runs each epoch;
+    without a threshold (or without remaining epochs) windows never cut."""
+    svc, system, ctrl = _service(plan_window=6, telemetry_gain=0.3,
+                                 replan_threshold=1e-9)
+    svc.run(5)
+    assert svc.early_replans == [1, 2, 3, 4, 5]
+    assert svc._plan_t0 == 4               # replanned at every epoch
+    # No threshold -> fixed windows (the PR-4 behaviour).
+    svc0, *_ = _service(plan_window=6, telemetry_gain=0.3)
+    svc0.run(5)
+    assert svc0.early_replans == [] and svc0._plan_t0 == 0
+    # A loose threshold on a well-modeled plane never triggers.
+    svc1, *_ = _service(plan_window=6, replan_threshold=5.0)
+    svc1.run(5)
+    assert svc1.early_replans == []
+    # A one-epoch window has nothing left to cut.
+    svc2, *_ = _service(plan_window=1, replan_threshold=1e-9)
+    svc2.run(3)
+    assert svc2.early_replans == []
+
+
+def test_replay_threads_replan_threshold():
+    tab = scenarios.build("steady_ar1", {**DIMS, "n_slots": 6})
+    rep = replay.replay_tables(tab, "lbcd", epoch_duration=400.0,
+                               telemetry_gain=0.5, plan_window=4,
+                               replan_threshold=1e-9)
+    assert rep.service.early_replans != []
+    assert np.isfinite(rep.measured).all()
+
+
+# ---------------------------------------------------------------------------
+# Per-delay-model divergence columns in the sweep/report
+# ---------------------------------------------------------------------------
+
+def test_sweep_dataplane_multi_delay_model():
+    s = scenarios.suite(["steady_ar1", "server_outage"],
+                        **{**DIMS, "n_slots": 4})
+    res = scenarios.sweep(
+        s, devices=jax.devices()[:1], dataplane=True,
+        dataplane_params=dict(n_epochs=2, epoch_duration=300.0,
+                              delay_model=("mm1", "uniform")))
+    assert res.delay_models == ("mm1", "uniform")
+    assert set(res.measured_by_model) == {"mm1", "uniform"}
+    for p in res.policies:
+        np.testing.assert_array_equal(res.measured_aopi[p],
+                                      res.measured_by_model["mm1"][p])
+        assert np.isfinite(res.divergence(p, "uniform")).all()
+    with pytest.raises(ValueError, match="not replayed"):
+        res.divergence("lbcd", "gamma")
+    rep = scenarios.robustness(res)
+    assert rep.delay_models == ("mm1", "uniform")
+    # 6 closed-form + 4 measured + 1 extra divergence column.
+    assert len(rep.rows()[0]) == 11
+    for p in res.policies:
+        for f in rep.families:
+            dm = rep.table[p][f].divergence_models
+            assert set(dm) == {"mm1", "uniform"}
+            assert dm["mm1"] == pytest.approx(rep.table[p][f].divergence)
+    txt = str(rep)
+    assert "div:uniform" in txt and "delay model" in txt
+
+
+def test_sweep_dataplane_single_uniform_model():
+    s = scenarios.suite(["steady_ar1"], **{**DIMS, "n_slots": 4})
+    res = scenarios.sweep(
+        s, devices=jax.devices()[:1], dataplane=True,
+        dataplane_params=dict(n_epochs=2, epoch_duration=300.0,
+                              delay_model="uniform"))
+    assert res.delay_models == ("uniform",)
+    rep = scenarios.robustness(res)
+    assert len(rep.rows()[0]) == 10        # no extra columns
+    assert "delay model(s): uniform" in str(rep)
+
+
+# ---------------------------------------------------------------------------
 # TableSystem guard rails
 # ---------------------------------------------------------------------------
 
