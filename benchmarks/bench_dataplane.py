@@ -23,7 +23,7 @@ import numpy as np
 from repro.core import queues
 from repro.serving import service
 
-from .common import emit, timer
+from .common import best_of, emit
 
 EPOCH = 300.0          # the paper's 5-minute slot (seconds)
 
@@ -37,15 +37,6 @@ def _workload(n: int, seed: int = 0):
     return lam, mu, p, pol
 
 
-def _best_of(fn, repeats: int) -> float:
-    best = np.inf
-    for _ in range(repeats):
-        with timer() as t:
-            fn()
-        best = min(best, t.elapsed)
-    return best
-
-
 def run(full: bool = False):
     sizes = (30, 300, 3000)
     repeats = 3 if full else 2
@@ -54,13 +45,13 @@ def run(full: bool = False):
         lam, mu, p, pol = _workload(n)
         for dm in queues.DELAY_MODELS:
             kw = dict(epoch_duration=EPOCH, seed=0, t=0, delay_model=dm)
-            loop_s = _best_of(
+            loop_s = best_of(
                 lambda: service.measure_mm1_loop(lam, mu, p, pol, **kw),
-                repeats)
+                repeats, block=False)
             service.measure_mm1(lam, mu, p, pol, **kw)     # compile
-            bat_s = _best_of(
+            bat_s = best_of(
                 lambda: service.measure_mm1(lam, mu, p, pol, **kw),
-                repeats)
+                repeats, block=False)
             rows.append([n, dm, n / loop_s, n / bat_s, loop_s / bat_s])
             print(f"# N={n:<5d} {dm:<8s} loop {n / loop_s:9.0f} str/s | "
                   f"batched {n / bat_s:9.0f} str/s | "

@@ -22,7 +22,7 @@ import jax
 
 from repro.core import lbcd, profiles
 
-from .common import emit, timer
+from .common import best_of, emit
 
 COUNTS = (30, 300, 3000)
 
@@ -35,13 +35,12 @@ def _time_legacy(n, slots, legacy_slots, repeats, effort):
     ctrl = lbcd.LBCDController(_system(n, slots), v=10.0, p_min=0.7,
                                solver_effort=effort)
     ctrl.step(0)                                             # warmup
-    best = 0.0
-    for _ in range(repeats):
-        with timer() as t:
-            for tt in range(1, legacy_slots + 1):
-                ctrl.step(tt)
-        best = max(best, legacy_slots / t.elapsed)
-    return best
+
+    def run_window():
+        for tt in range(1, legacy_slots + 1):
+            ctrl.step(tt)
+
+    return legacy_slots / best_of(run_window, repeats, block=False)
 
 
 def run(full: bool = False):
@@ -55,11 +54,8 @@ def run(full: bool = False):
         # --- scan engine: compile once, then time whole-horizon calls.
         tables = _system(n, slots).horizon(slots)
         jax.block_until_ready(lbcd.rollout(tables, 10.0, 0.7))   # warmup
-        scan_sps = 0.0
-        for _ in range(repeats):
-            with timer() as t:
-                jax.block_until_ready(lbcd.rollout(tables, 10.0, 0.7))
-            scan_sps = max(scan_sps, slots / t.elapsed)
+        scan_sps = slots / best_of(lambda: lbcd.rollout(tables, 10.0, 0.7),
+                                   repeats)
 
         seed_sps = _time_legacy(n, slots, legacy_slots, repeats, "seed")
         shared_sps = _time_legacy(n, slots, legacy_slots, repeats, "fast")

@@ -8,17 +8,34 @@ import time
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
 
 
+def run_metadata() -> dict:
+    """Environment stamp for every ``BENCH_*.json`` header: jax/device
+    identity and whether pallas kernels ran in interpret mode (CPU/CI) or
+    compiled (real TPU) — so trajectory comparisons across machines are
+    honest about what was actually measured."""
+    import jax
+    backend = jax.default_backend()
+    return {
+        "jax_version": jax.__version__,
+        "backend": backend,
+        "device_kind": jax.devices()[0].device_kind,
+        "n_devices": jax.device_count(),
+        "pallas_interpret": backend != "tpu",
+    }
+
+
 def emit(name: str, rows: list, header: list):
     """Print CSV to stdout and persist JSON under results/bench."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     print(f"## {name}")
     print(",".join(header))
     for r in rows:
-        print(",".join(f"{v:.6g}" if isinstance(v, float) else str(v)
+        print(",".join("" if v is None else
+                       f"{v:.6g}" if isinstance(v, float) else str(v)
                        for v in r))
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
-        json.dump({"header": header, "rows": rows}, f, indent=1,
-                  default=float)
+        json.dump({"meta": run_metadata(), "header": header, "rows": rows},
+                  f, indent=1, default=float)
 
 
 class timer:
@@ -28,3 +45,21 @@ class timer:
 
     def __exit__(self, *a):
         self.elapsed = time.perf_counter() - self.t0
+
+
+def best_of(fn, repeats: int = 3, block: bool = True) -> float:
+    """Best-of-``repeats`` wall time of ``fn()`` in seconds.
+
+    ``block=True`` waits on the returned jax arrays
+    (``jax.block_until_ready``) so async dispatch doesn't flatter the
+    number; pass ``block=False`` for host-side (numpy/legacy) callables.
+    """
+    import jax
+    best = float("inf")
+    for _ in range(repeats):
+        with timer() as t:
+            out = fn()
+            if block:
+                jax.block_until_ready(out)
+        best = min(best, t.elapsed)
+    return best

@@ -24,6 +24,7 @@ import numpy as np
 from . import aopi, bcd, binpack, profiles
 from .lbcd import RolloutResult, RunSummary, SlotRecord, summarize
 from .profiles import EdgeSystem, HorizonTables
+from ..kernels import slot_solver
 
 
 def _evaluate(lam, mu, p, pol):
@@ -94,30 +95,42 @@ def rollout_min(tables: HorizonTables, v=10.0, n_bcd_iters: int = 4,
     return _scan_result(step, tables)
 
 
+def _baseline_scan(solver_backend: str, n: int):
+    """Resolve the DOS/JCAB config-scan backend and return the scan fn.
+
+    The pallas path streams camera tiles through
+    ``slot_solver.baseline_argmax`` so the ``[N, M, R]`` latency/score
+    tensors are never materialized; indices are bitwise identical to the
+    jnp path. ``"auto"`` follows the same fleet-size switch point as the
+    Algorithm-1 solver (jnp below ``AUTO_PALLAS_MIN_CAMERAS``).
+    """
+    spec = bcd.resolve_spec(solver_backend, n)
+    return functools.partial(slot_solver.baseline_argmax,
+                             backend=spec.backend,
+                             block_n=spec.tile_n or 1024)
+
+
 @functools.partial(jax.jit, static_argnames=("solver_backend",))
 def rollout_dos(tables: HorizonTables, weight=1.0,
                 solver_backend: str = "jnp") -> RolloutResult:
     """DOS over the whole horizon as a single scan (same per-slot math as
     ``DOSController.step``, with the jit-safe first-fit).
 
-    ``solver_backend`` is accepted for sweep-API uniformity with the
-    Algorithm-1 policies; DOS runs no BCD solve, so it is a no-op here."""
+    ``solver_backend`` selects the config-scan engine: "jnp" materializes
+    the ``[N, M, R]`` score tensor, "pallas" streams camera tiles through
+    the ``slot_solver.baseline_argmax`` kernel (bitwise-identical
+    indices); "auto" switches on fleet size like ``bcd.solve_slot``."""
     n = tables.acc.shape[1]
     n_servers = tables.budgets_b.shape[1]
     xi, size = tables.xi, tables.size
-    n_r = xi.shape[1]
+    scan = _baseline_scan(solver_backend, n)
 
     def step(q, xs):
         acc_t, eff_t, bb, bc = xs
         b0 = jnp.sum(bb) / n
         c0 = jnp.sum(bc) / n
-        lam0 = b0 * eff_t[:, None, None] / size[None, None, :]
-        mu0 = c0 / xi[None, :, :]
-        latency = 1.0 / jnp.maximum(lam0, 1e-9) + 1.0 / jnp.maximum(mu0, 1e-9)
-        score = acc_t - weight * latency
-        best = jnp.argmax(score.reshape(n, -1), axis=1)
-        m_idx = (best // n_r).astype(jnp.int32)
-        r_idx = (best % n_r).astype(jnp.int32)
+        m_idx, r_idx = scan(jnp.full((n,), b0), jnp.full((n,), c0), acc_t,
+                            xi, size, eff_t, mode="dos", threshold=weight)
 
         w_b = jnp.sqrt(size[r_idx] / eff_t)
         w_c = jnp.sqrt(xi[m_idx, r_idx])
@@ -140,12 +153,13 @@ def rollout_jcab(tables: HorizonTables, latency_cap=0.5,
     """JCAB over the whole horizon as a single scan (same per-slot math as
     ``JCABController.step``; the round-robin assignment is static).
 
-    ``solver_backend`` is accepted for sweep-API uniformity with the
-    Algorithm-1 policies; JCAB runs no BCD solve, so it is a no-op here."""
+    ``solver_backend`` selects the config-scan engine exactly as in
+    :func:`rollout_dos` (the cap check, -inf masking and min-latency
+    fallback all run inside the streaming kernel on the pallas path)."""
     n = tables.acc.shape[1]
     n_servers = tables.budgets_b.shape[1]
     xi, size = tables.xi, tables.size
-    n_r = xi.shape[1]
+    scan = _baseline_scan(solver_backend, n)
     assign = (jnp.arange(n) % n_servers).astype(jnp.int32)
     counts = jax.ops.segment_sum(jnp.ones((n,)), assign,
                                  num_segments=n_servers)
@@ -158,19 +172,8 @@ def rollout_jcab(tables: HorizonTables, latency_cap=0.5,
         m_idx = jnp.zeros((n,), jnp.int32)
         r_idx = jnp.zeros((n,), jnp.int32)
         for _ in range(n_rounds):
-            lam = b[:, None, None] * eff_t[:, None, None] / \
-                size[None, None, :]
-            mu = c[:, None, None] / xi[None, :, :]
-            latency = 1.0 / jnp.maximum(lam, 1e-9) + \
-                1.0 / jnp.maximum(mu, 1e-9)
-            ok = latency <= latency_cap
-            score = jnp.where(ok, acc_t, -jnp.inf)
-            best = jnp.argmax(score.reshape(n, -1), axis=1)
-            none_ok = ~ok.reshape(n, -1).any(axis=1)
-            fallback = jnp.argmin(latency.reshape(n, -1), axis=1)
-            best = jnp.where(none_ok, fallback, best)
-            m_idx = (best // n_r).astype(jnp.int32)
-            r_idx = (best % n_r).astype(jnp.int32)
+            m_idx, r_idx = scan(b, c, acc_t, xi, size, eff_t, mode="jcab",
+                                threshold=latency_cap)
             size_n = size[r_idx]
             xi_n = xi[m_idx, r_idx]
             den_b = jax.ops.segment_sum(size_n, assign,
@@ -247,9 +250,11 @@ class DOSController(BaselineController):
     demands), per §VI-A.
     """
 
-    def __init__(self, system: EdgeSystem, weight: float = 1.0):
+    def __init__(self, system: EdgeSystem, weight: float = 1.0,
+                 solver_backend: str = "jnp"):
         super().__init__(system, name="DOS")
         self.weight = weight
+        self.solver_backend = solver_backend
 
     def step(self, t: int, tables=None) -> SlotRecord:
         sys = self.system
@@ -297,7 +302,8 @@ class DOSController(BaselineController):
                           decision=dec)
 
     def _rollout(self, tables: HorizonTables) -> RolloutResult:
-        return rollout_dos(tables, self.weight)
+        return rollout_dos(tables, self.weight,
+                           solver_backend=self.solver_backend)
 
 
 class JCABController(BaselineController):
@@ -305,10 +311,11 @@ class JCABController(BaselineController):
     computation allocated proportional to the configuration's xi [48]."""
 
     def __init__(self, system: EdgeSystem, latency_cap: float = 0.5,
-                 n_rounds: int = 3):
+                 n_rounds: int = 3, solver_backend: str = "jnp"):
         super().__init__(system, name="JCAB")
         self.latency_cap = latency_cap
         self.n_rounds = n_rounds
+        self.solver_backend = solver_backend
 
     def step(self, t: int, tables=None) -> SlotRecord:
         sys = self.system
@@ -365,7 +372,8 @@ class JCABController(BaselineController):
 
     def _rollout(self, tables: HorizonTables) -> RolloutResult:
         return rollout_jcab(tables, self.latency_cap,
-                            n_rounds=self.n_rounds)
+                            n_rounds=self.n_rounds,
+                            solver_backend=self.solver_backend)
 
 
 def make(name: str, system: EdgeSystem, **kw):

@@ -32,30 +32,103 @@ from ..kernels import slot_solver
 
 # Fleet size at which the pallas kernels start winning. Below one 128-lane
 # tile the kernels pad every camera vector up to 128 lanes and lose to the
-# plain jnp path (BENCH_slot_solver.json: N=30 is 0.67x, N=300 is 1.2-1.6x),
-# so ``solver_backend="auto"`` stays on jnp under this threshold.
+# plain jnp path (BENCH_slot_solver.json: N=30 is 0.4-0.7x, N=300 is
+# 1.2-1.6x), so ``solver_backend="auto"`` stays on jnp under this threshold
+# — everywhere the flag goes, including the grid/scenario vmap paths.
 AUTO_PALLAS_MIN_CAMERAS = 128
+
+# Fleet size at which "auto" switches the water-fills to the camera-tiled
+# streaming kernel (default tile below): past this the single-program
+# kernel's [S, Np] membership matrix + whole-fleet vectors start crowding
+# VMEM, while one [2, 8, tile] double-buffered window always fits. The
+# threshold sits where the streaming kernel measurably wins (~1.3x at
+# 32k cameras in interpret mode, ~2x at 100k); below it the whole-fleet
+# kernel is faster because it pays no per-sweep DMA machinery.
+AUTO_TILE_MIN_CAMERAS = 32768
+DEFAULT_TILE_N = 16384
 
 SOLVER_BACKENDS = ("jnp", "pallas", "auto")
 
 
-def resolve_backend(solver_backend: str, n_cameras: int,
-                    method: str = "waterfill") -> str:
-    """Resolve ``solver_backend`` to a concrete backend for a fleet size.
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """Parsed ``solver_backend`` spec: backend plus tiling/fusion knobs."""
+    backend: str              # "jnp" | "pallas" | "auto" (pre-resolution)
+    tile_n: int | None = None  # water-fill camera tile (None = untiled)
+    fuse: bool = True          # one fused kernel for both water-fills
 
-    ``"auto"`` picks jnp below :data:`AUTO_PALLAS_MIN_CAMERAS` (lane-padding
-    regime) and pallas at or above it; ``method="interior"`` is jnp-only so
-    auto never selects pallas for it. Explicit backends pass through
-    unchanged (including the pallas+interior error path in ``solve_slot``).
+
+def parse_backend(solver_backend) -> SolverSpec:
+    """Parse a ``solver_backend`` string into a :class:`SolverSpec`.
+
+    Grammar: ``<backend>[:<knob>]*`` with knobs ``tile=<int>`` (camera
+    tile for the streaming water-fill; ``tile=0`` pins the untiled
+    single-program kernel even at auto-tile fleet sizes), ``fuse`` /
+    ``nofuse`` (one vs two water-fill dispatches per BCD pass). Examples:
+    ``"pallas"``, ``"auto"``, ``"pallas:tile=4096"``,
+    ``"pallas:nofuse"``, ``"auto:tile=2048:nofuse"``.
     """
-    if solver_backend not in SOLVER_BACKENDS:
-        raise ValueError(f"unknown solver_backend {solver_backend!r}; "
-                         f"known: {SOLVER_BACKENDS}")
-    if solver_backend != "auto":
+    if isinstance(solver_backend, SolverSpec):
         return solver_backend
-    if method != "waterfill":
-        return "jnp"
-    return "pallas" if n_cameras >= AUTO_PALLAS_MIN_CAMERAS else "jnp"
+    parts = str(solver_backend).split(":")
+    if parts[0] not in SOLVER_BACKENDS:
+        raise ValueError(f"unknown solver_backend {parts[0]!r}; "
+                         f"known: {SOLVER_BACKENDS}")
+    tile_n = None
+    fuse = True
+    for tok in parts[1:]:
+        if tok == "fuse":
+            fuse = True
+        elif tok == "nofuse":
+            fuse = False
+        elif tok.startswith("tile="):
+            tile_n = int(tok[len("tile="):])
+        else:
+            raise ValueError(f"unknown solver_backend knob {tok!r} in "
+                             f"{solver_backend!r}; known: tile=<int>, "
+                             "fuse, nofuse")
+    return SolverSpec(parts[0], tile_n, fuse)
+
+
+def resolve_spec(solver_backend, n_cameras: int,
+                 method: str = "waterfill") -> SolverSpec:
+    """Resolve a spec (or spec string) to concrete knobs for a fleet size.
+
+    ``"auto"`` picks jnp below :data:`AUTO_PALLAS_MIN_CAMERAS`
+    (lane-padding regime) and pallas at or above it, and — unless the
+    spec pins ``tile=``— engages the tiled water-fill with
+    :data:`DEFAULT_TILE_N` from :data:`AUTO_TILE_MIN_CAMERAS` cameras.
+    ``method="interior"`` is jnp-only so auto never selects pallas for
+    it. Explicit backends pass through unchanged (including the
+    pallas+interior error path in ``solve_slot``). ``tile=0`` resolves
+    to untiled, and so does any tile the whole fleet fits inside
+    (``n_cameras <= tile_n``) — streaming a single tile would just be
+    the whole-fleet kernel plus DMA overhead, and dropping the tile
+    keeps the fused two-water-fill dispatch available. The resolved
+    spec never carries backend ``"auto"``.
+    """
+    spec = parse_backend(solver_backend)
+    backend = spec.backend
+    if backend == "auto":
+        if method != "waterfill" or n_cameras < AUTO_PALLAS_MIN_CAMERAS:
+            backend = "jnp"
+        else:
+            backend = "pallas"
+    tile_n = spec.tile_n
+    if backend == "pallas":
+        if tile_n is None and n_cameras >= AUTO_TILE_MIN_CAMERAS:
+            tile_n = DEFAULT_TILE_N
+        if tile_n == 0 or (tile_n is not None and n_cameras <= tile_n):
+            tile_n = None
+    else:
+        tile_n = None
+    return SolverSpec(backend, tile_n, spec.fuse)
+
+
+def resolve_backend(solver_backend, n_cameras: int,
+                    method: str = "waterfill") -> str:
+    """Backend name only (see :func:`resolve_spec` for the full knobs)."""
+    return resolve_spec(solver_backend, n_cameras, method=method).backend
 
 
 @jax.tree_util.register_dataclass
@@ -91,7 +164,7 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
                n_servers: int, n_iters: int = 4,
                method: Literal["waterfill", "interior"] = "waterfill",
                solver_effort: Literal["fast", "seed"] = "fast",
-               solver_backend: Literal["jnp", "pallas", "auto"] = "jnp",
+               solver_backend: str = "jnp",
                interpret: bool | None = None):
     """Run Algorithm 1 and return a SlotDecision (of jnp arrays).
 
@@ -109,17 +182,19 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
         benchmarks measuring what the rollout-stack rework bought).
       solver_backend: "jnp" (default) runs the pure-jnp config search and
         water-filling; "pallas" fuses both into the
-        ``repro.kernels.slot_solver`` kernels (streaming config argmin, one
-        on-chip water-fill dispatch per allocation); "auto" picks per fleet
-        size via :func:`resolve_backend` (jnp below
-        ``AUTO_PALLAS_MIN_CAMERAS``, pallas at/above). Pallas requires
-        ``method="waterfill"``; agrees with "jnp" to float32 tolerance.
+        ``repro.kernels.slot_solver`` kernels (streaming config argmin, by
+        default one fused water-fill dispatch per BCD pass); "auto" picks
+        per fleet size via :func:`resolve_spec` (jnp below
+        ``AUTO_PALLAS_MIN_CAMERAS``, pallas at/above, camera-tiled
+        streaming water-fills from ``AUTO_TILE_MIN_CAMERAS``). Knobs ride
+        the string — ``"pallas:tile=4096"``, ``"pallas:nofuse"`` (see
+        :func:`parse_backend`). Pallas requires ``method="waterfill"``;
+        agrees with "jnp" to float32 tolerance.
       interpret: pallas interpret-mode override (None = auto: interpret
         everywhere except on real TPUs — the CPU/CI path).
     """
-    solver_backend = resolve_backend(solver_backend, acc.shape[0],
-                                     method=method)
-    use_pallas = solver_backend == "pallas"
+    spec = resolve_spec(solver_backend, acc.shape[0], method=method)
+    use_pallas = spec.backend == "pallas"
     if use_pallas and method != "waterfill":
         raise ValueError("solver_backend='pallas' fuses the water-filling "
                          "solver; method='interior' only supports the jnp "
@@ -136,44 +211,72 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
         # sorted/padded into per-server rows the kernel programs own.
         layout = slot_solver.server_layout(server_id, n_servers)
         config = functools.partial(slot_solver.config_argmin,
-                                   backend="pallas", interpret=interpret)
-        wf_b = functools.partial(slot_solver.waterfill_bandwidth,
-                                 layout=layout, interpret=interpret)
-        wf_c = functools.partial(slot_solver.waterfill_compute,
-                                 layout=layout, interpret=interpret)
+                                   backend="pallas", interpret=interpret,
+                                   block_n=spec.tile_n or 1024)
+        # The fused pair kernel holds the whole fleet in one program; the
+        # camera-tiled water-fills stream it in two (bandwidth, compute).
+        if spec.fuse and spec.tile_n is None:
+            def make_pair(kw):
+                def pair(k, p, pol, mu, inv_xi):
+                    return slot_solver.waterfill_pair(
+                        k, p, pol, mu, inv_xi, server_id, budgets_b,
+                        budgets_c, n_servers, layout=layout,
+                        interpret=interpret, **kw)
+                return pair
+        else:
+            def make_pair(kw):
+                def pair(k, p, pol, mu, inv_xi):
+                    b = slot_solver.waterfill_bandwidth(
+                        k, p, pol, mu, server_id, budgets_b, n_servers,
+                        layout=layout, tile_n=spec.tile_n,
+                        interpret=interpret, **kw)
+                    c = slot_solver.waterfill_compute(
+                        inv_xi, p, pol, b * k, server_id, budgets_c,
+                        n_servers, layout=layout, tile_n=spec.tile_n,
+                        interpret=interpret, **kw)
+                    return b, c
+                return pair
     else:
         config = functools.partial(slot_solver.config_argmin, backend="jnp")
-        wf_b = allocate.waterfill_bandwidth
-        wf_c = allocate.waterfill_compute
+
+        def make_pair(kw):
+            def pair(k, p, pol, mu, inv_xi):
+                b = allocate.waterfill_bandwidth(
+                    k, p, pol, mu, server_id, budgets_b, n_servers, **kw)
+                c = allocate.waterfill_compute(
+                    inv_xi, p, pol, b * k, server_id, budgets_c,
+                    n_servers, **kw)
+                return b, c
+            return pair
 
     polish = method == "waterfill" and solver_effort == "fast"
     if polish:
         # Cheap solver effort inside the BCD loop (it only has to steer the
         # discrete config selection); one accurate re-allocation afterwards.
-        cheap = dict(outer_iters=10, inner_iters=3, final_inner_iters=5)
-        fb = functools.partial(wf_b, **cheap)
-        fc = functools.partial(wf_c, **cheap)
+        pair_loop = make_pair(dict(outer_iters=10, inner_iters=3,
+                                   final_inner_iters=5))
+        pair_full = make_pair({})
     elif method == "waterfill":
         # Pre-refactor effort: flat high-iteration water-filling each pass.
-        seed_kw = dict(outer_iters=54, inner_iters=40, final_inner_iters=40)
-        fb = functools.partial(wf_b, **seed_kw)
-        fc = functools.partial(wf_c, **seed_kw)
+        pair_loop = make_pair(dict(outer_iters=54, inner_iters=40,
+                                   final_inner_iters=40))
     else:
-        fb = allocate.interior_point_bandwidth
-        fc = allocate.interior_point_compute
+        def pair_loop(k, p, pol, mu, inv_xi):
+            b = allocate.interior_point_bandwidth(
+                k, p, pol, mu, server_id, budgets_b, n_servers)
+            c = allocate.interior_point_compute(
+                inv_xi, p, pol, b * k, server_id, budgets_c, n_servers)
+            return b, c
 
     def body(_, state):
         b, c, r_idx, m_idx, pol = state
         r_idx, m_idx, pol = config(b, c, acc, xi, size, eff, q, V, n)
         p = acc[jnp.arange(n), m_idx, r_idx]
-        # line 4: bandwidth given (r, x, m, c).
+        # lines 4-5: bandwidth given (r, x, m, c), then compute given the
+        # fresh arrival rate lam = b * k.
         k = eff / size[r_idx]
         mu = c / xi[m_idx, r_idx]
-        b = fb(k, p, pol, mu, server_id, budgets_b, n_servers)
-        # line 5: compute given (r, x, m, b).
-        lam = b * k
-        inv_xi = 1.0 / xi[m_idx, r_idx]
-        c = fc(inv_xi, p, pol, lam, server_id, budgets_c, n_servers)
+        b, c = pair_loop(k, p, pol, mu, 1.0 / xi[m_idx, r_idx])
         return b, c, r_idx, m_idx, pol
 
     z = jnp.zeros((n,), jnp.int32)
@@ -185,9 +288,7 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
         p = acc[jnp.arange(n), m_idx, r_idx]
         k = eff / size[r_idx]
         mu = c / xi[m_idx, r_idx]
-        b = wf_b(k, p, pol, mu, server_id, budgets_b, n_servers)
-        c = wf_c(1.0 / xi[m_idx, r_idx], p, pol, b * k, server_id,
-                 budgets_c, n_servers)
+        b, c = pair_full(k, p, pol, mu, 1.0 / xi[m_idx, r_idx])
 
     lam, mu = _rates(b, c, r_idx, m_idx, eff, size, xi)
     p = acc[jnp.arange(n), m_idx, r_idx]

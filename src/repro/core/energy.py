@@ -68,6 +68,10 @@ def rollout_energy(tables: HorizonTables, v, p_min, kappa_tx, kappa_c,
     empty (z == 0) the ladder collapses to the single full-budget solve via
     ``lax.cond``, so a slack energy budget costs the same as plain LBCD.
 
+    ``solver_backend`` threads verbatim into every ladder solve — spec
+    strings with tiling/fusion knobs (``"pallas:tile=4096"``,
+    ``"pallas:nofuse"``; see ``bcd.parse_backend``) work here too.
+
     Returns ``(RolloutResult, power[T], z[T])``.
     """
     n = tables.acc.shape[1]

@@ -133,8 +133,10 @@ def rollout(tables: HorizonTables, v, p_min, q0=0.0,
       q0: initial virtual-queue value.
       solver_backend: "jnp" | "pallas" | "auto" — Algorithm-1
         implementation (see ``bcd.solve_slot``; "auto" switches on fleet
-        size); ``interpret`` is the pallas interpret-mode override (None =
-        auto off-TPU).
+        size), optionally with tiling/fusion knobs riding the string
+        (``"pallas:tile=4096"``, ``"pallas:nofuse"`` — see
+        ``bcd.parse_backend``); ``interpret`` is the pallas
+        interpret-mode override (None = auto off-TPU).
     Returns a ``RolloutResult`` of device arrays.
     """
     n = tables.acc.shape[1]

@@ -1,8 +1,10 @@
-from .ops import (ServerLayout, config_argmin, server_layout,
-                  waterfill_bandwidth, waterfill_compute)
-from .ref import (config_argmin_ref, waterfill_bandwidth_ref,
-                  waterfill_compute_ref)
+from .ops import (ServerLayout, baseline_argmax, config_argmin,
+                  server_layout, waterfill_bandwidth, waterfill_compute,
+                  waterfill_pair)
+from .ref import (baseline_argmax_ref, config_argmin_ref,
+                  waterfill_bandwidth_ref, waterfill_compute_ref)
 
 __all__ = ["ServerLayout", "server_layout", "config_argmin",
-           "waterfill_bandwidth", "waterfill_compute", "config_argmin_ref",
+           "baseline_argmax", "waterfill_bandwidth", "waterfill_compute",
+           "waterfill_pair", "config_argmin_ref", "baseline_argmax_ref",
            "waterfill_bandwidth_ref", "waterfill_compute_ref"]

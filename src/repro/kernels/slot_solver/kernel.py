@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the Algorithm-1 slot-solver hot path.
 
-Two kernels, both pure VPU work (no MXU):
+Four kernels, all pure VPU work (no MXU):
 
   * ``config_argmin`` — Algorithm 1 line 3. The jnp backend materializes the
     ``[N, M, R, 2]`` FCFS/LCFSP score tensor in HBM once per BCD pass (and
@@ -28,6 +28,29 @@ Two kernels, both pure VPU work (no MXU):
     The math (h-functions, closed forms, iteration budgets, Illinois
     halving) mirrors ``repro.core.allocate._waterfill`` so the two
     backends agree to float32 tolerance.
+
+  * ``waterfill_pair`` — lines 4 *and* 5 in one dispatch. The bandwidth
+    solve, the FCFS stability floors for the compute step, and the compute
+    solve share one program, so a BCD pass costs one kernel launch instead
+    of two and the intermediate ``lam`` never round-trips through HBM.
+
+  * ``waterfill_tiled`` — the same Illinois search with the camera axis
+    streamed through VMEM one tile at a time (double-buffered manual DMA
+    out of HBM), for fleets past the single-program VMEM ceiling. The
+    per-server Illinois state stays in ``[S, 1]`` registers across tiles;
+    per-camera brackets persist in an HBM scratch between dual
+    evaluations, and each dual evaluation is one sweep over the tiles.
+    The per-tile math is identical to ``waterfill``; only the order of
+    the per-server fill-sum accumulation differs (tile partial sums), so
+    tiled-vs-untiled agreement is near-bitwise rather than exact.
+
+  * ``baseline_argmax`` — the DOS/JCAB config scans (``core.baselines``).
+    Same camera-tiled streaming fold as ``config_argmin`` but maximizing
+    the baselines' scores (DOS: ``acc - w * latency``; JCAB: accuracy
+    under a latency cap with a min-latency fallback), so the baselines'
+    ``[N, M, R]`` score/latency tensors are never materialized. The
+    elementwise score math matches the jnp references operation for
+    operation, so the returned indices are bitwise identical.
 """
 from __future__ import annotations
 
@@ -130,32 +153,34 @@ def config_argmin(b, c, acc, xi, size, eff, q, v, *, n_total: int,
 # Per-server on-chip water-filling (Algorithm 1 lines 4/5)
 # ---------------------------------------------------------------------------
 
-def _waterfill_kernel(scale_ref, p_ref, pol_ref, other_ref, lo_ref, hi_ref,
-                      cf_ref, member_ref, x_ref, *, mode: str,
-                      outer_iters: int, inner_iters: int,
-                      final_inner_iters: int):
-    scale = scale_ref[...]                                # [Np]
-    p = p_ref[...]
-    is_l = pol_ref[...] == aopi.LCFSP
-    other = other_ref[...]                                # mu (bw) / lam (c)
-    lo = lo_ref[...]
-    hi = hi_ref[...]
-    cf = cf_ref[...]                                      # closed-form coeff
-    member = member_ref[...]                              # [S, Np] 0/1
+def _h_fn(x, scale, p, is_l, other, mode):
+    """Marginal-AoPI water-level function h(x) (shared by every variant)."""
+    if mode == "bandwidth":
+        lam = jnp.maximum(scale * x, _EPS)
+        d_l = aopi.d_aopi_lcfsp_dlam(lam, other, p)
+        d_f = aopi.d_aopi_fcfs_dlam(jnp.minimum(lam, 0.999 * other),
+                                    other, p)
+    else:
+        mu = jnp.maximum(scale * x, _EPS)
+        d_l = aopi.d_aopi_lcfsp_dmu(other, mu, p)
+        d_f = aopi.d_aopi_fcfs_dmu(jnp.minimum(other, 0.999 * mu),
+                                   mu, p)
+    d = jnp.where(is_l, d_l, d_f)
+    return jnp.maximum(-d * scale, 0.0)
+
+
+def _illinois_waterfill(scale, p, is_l, other, lo, hi, cf, member, *,
+                        mode: str, outer_iters: int, inner_iters: int,
+                        final_inner_iters: int):
+    """On-chip Illinois dual search over whole-fleet vectors; returns x.
+
+    This is the body shared by the single-mode ``waterfill`` kernel and
+    the fused ``waterfill_pair`` kernel — plain array-in/array-out so it
+    can run twice inside one program.
+    """
 
     def h_fn(x):
-        if mode == "bandwidth":
-            lam = jnp.maximum(scale * x, _EPS)
-            d_l = aopi.d_aopi_lcfsp_dlam(lam, other, p)
-            d_f = aopi.d_aopi_fcfs_dlam(jnp.minimum(lam, 0.999 * other),
-                                        other, p)
-        else:
-            mu = jnp.maximum(scale * x, _EPS)
-            d_l = aopi.d_aopi_lcfsp_dmu(other, mu, p)
-            d_f = aopi.d_aopi_fcfs_dmu(jnp.minimum(other, 0.999 * mu),
-                                       mu, p)
-        d = jnp.where(is_l, d_l, d_f)
-        return jnp.maximum(-d * scale, 0.0)
+        return _h_fn(x, scale, p, is_l, other, mode)
 
     def solve_h_equals_nu(nu, blo, bhi, iters):
         def body(_, state):
@@ -213,7 +238,18 @@ def _waterfill_kernel(scale_ref, p_ref, pol_ref, other_ref, lo_ref, hi_ref,
         0, outer_iters, body, (a0, b0, fa0, fb0, xa0, xb0))
     blo, bhi = bracket(xa, xb)
     # If the total cap is below budget the constraint is slack: keep caps.
-    x_ref[...] = alloc_at(0.5 * (a + b), blo, bhi, final_inner_iters)
+    return alloc_at(0.5 * (a + b), blo, bhi, final_inner_iters)
+
+
+def _waterfill_kernel(scale_ref, p_ref, pol_ref, other_ref, lo_ref, hi_ref,
+                      cf_ref, member_ref, x_ref, *, mode: str,
+                      outer_iters: int, inner_iters: int,
+                      final_inner_iters: int):
+    x_ref[...] = _illinois_waterfill(
+        scale_ref[...], p_ref[...], pol_ref[...] == aopi.LCFSP,
+        other_ref[...], lo_ref[...], hi_ref[...], cf_ref[...],
+        member_ref[...], mode=mode, outer_iters=outer_iters,
+        inner_iters=inner_iters, final_inner_iters=final_inner_iters)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "outer_iters",
@@ -248,3 +284,376 @@ def waterfill(scale, p, pol, other, lo, hi, cf, member, *, mode: str,
         out_shape=jax.ShapeDtypeStruct((cap,), jnp.float32),
         interpret=interpret,
     )(scale, p, pol, other, lo, hi, cf, member)
+
+
+# ---------------------------------------------------------------------------
+# Fused bandwidth+compute water-fill (Algorithm 1 lines 4 and 5 together)
+# ---------------------------------------------------------------------------
+
+def _pair_kernel(margin_ref, scale_b_ref, p_ref, pol_ref, mu_ref, lo_b_ref,
+                 hi_b_ref, cf_b_ref, mu_scale_ref, member_ref, u_ref, v_ref,
+                 *, outer_iters: int, inner_iters: int,
+                 final_inner_iters: int):
+    margin = margin_ref[0, 0]                             # FCFS stability
+    scale_b = scale_b_ref[...]                            # k * B  [Np]
+    p = p_ref[...]
+    is_l = pol_ref[...] == aopi.LCFSP
+    member = member_ref[...]                              # [S, Np] 0/1
+
+    # Line 4: bandwidth water-fill, identical to the single-mode kernel.
+    u = _illinois_waterfill(
+        scale_b, p, is_l, mu_ref[...], lo_b_ref[...], hi_b_ref[...],
+        cf_b_ref[...], member, mode="bandwidth", outer_iters=outer_iters,
+        inner_iters=inner_iters, final_inner_iters=final_inner_iters)
+
+    # Line 5 prologue, on-chip: the arrival rate implied by the fresh b and
+    # the FCFS stability floors (the jnp twin computes these between the
+    # two dispatches; here they never leave VMEM). The floor rescale uses a
+    # membership reduction instead of the twin's segment_sum.
+    lam = scale_b * u
+    mu_scale = mu_scale_ref[...]                          # inv_xi * C
+    floor = jnp.where(is_l, 1e-9,
+                      margin * lam / jnp.maximum(mu_scale, _EPS))
+    floor_tot = jnp.sum(member * floor[None, :], axis=1,
+                        keepdims=True)                    # [S, 1]
+    scale_fac = jnp.minimum(1.0, 1.0 / jnp.maximum(floor_tot, _EPS))
+    lo_c = jnp.clip(floor * jnp.sum(member * scale_fac, axis=0), 1e-9, 1.0)
+
+    v = _illinois_waterfill(
+        mu_scale, p, is_l, lam, lo_c, jnp.ones_like(lo_c), 1.0 / p, member,
+        mode="compute", outer_iters=outer_iters, inner_iters=inner_iters,
+        final_inner_iters=final_inner_iters)
+    u_ref[...] = u
+    v_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("outer_iters", "inner_iters",
+                                             "final_inner_iters",
+                                             "interpret"))
+def waterfill_pair(scale_b, p, pol, mu, lo_b, hi_b, cf_b, mu_scale, member,
+                   *, stability_margin: float = 1.05, outer_iters: int = 16,
+                   inner_iters: int = 6, final_inner_iters: int = 20,
+                   interpret: bool = False):
+    """One dispatch for both water-fills of a BCD pass.
+
+    Bandwidth inputs are as for ``waterfill(mode="bandwidth")``;
+    ``mu_scale`` is the compute-side scale ``inv_xi * C``. The compute
+    bounds/coefficient (FCFS stability floors, unit cap, ``1/p``) are
+    derived on-chip from the in-register bandwidth result. Returns
+    normalized ``(u, v)`` allocations in layout order.
+    """
+    cap = scale_b.shape[0]
+    n_servers = member.shape[0]
+    kernel = functools.partial(_pair_kernel, outer_iters=outer_iters,
+                               inner_iters=inner_iters,
+                               final_inner_iters=final_inner_iters)
+    vec = pl.BlockSpec((cap,), lambda: (0,))
+    mg = jnp.asarray(stability_margin, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec((1, 1), lambda: (0, 0),
+                               memory_space=pltpu.SMEM)] + [vec] * 8 +
+                 [pl.BlockSpec((n_servers, cap), lambda: (0, 0))],
+        out_specs=[vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((cap,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(mg, scale_b, p, pol, mu, lo_b, hi_b, cf_b, mu_scale, member)
+
+
+# ---------------------------------------------------------------------------
+# Camera-tiled streaming water-fill (fleets past the VMEM ceiling)
+# ---------------------------------------------------------------------------
+
+# Row order of the packed [8, Np] input block (built by ops._run_waterfill).
+TILE_FIELDS = ("scale", "p", "is_l", "other", "lo", "hi", "cf", "sid")
+
+
+def _tiled_waterfill_kernel(in_hbm, x_hbm, st_hbm, *, mode: str,
+                            n_servers: int, n_tiles: int, tile: int,
+                            outer_iters: int, inner_iters: int,
+                            final_inner_iters: int):
+    """Illinois dual search with the camera axis streamed tile by tile.
+
+    The whole fleet lives in HBM as one packed ``[8, Np]`` block; VMEM
+    holds a double-buffered ``[2, 8, tile]`` window of it. Per-server
+    Illinois state (duals, residuals, the deferred bracket decision) stays
+    in ``[S, 1]`` registers across the sweep; per-camera brackets
+    ``(xa, xb, x_last)`` persist in a ``[3, Np]`` HBM scratch between
+    sweeps, so VMEM holds only O(tile) state no matter the fleet size.
+    One dual evaluation = one sweep over the tiles accumulating the
+    per-server fill sums.
+
+    The bracket update is *deferred*: sweep k applies sweep k-1's
+    over/under decision to the stored brackets before allocating — exactly
+    the untiled kernel's carried ``(xa, xb)`` update, one evaluation late
+    never (the untiled kernel also applies the decision only when the
+    *next* evaluation reads the brackets).
+    """
+
+    def body(in_scr, st_scr, out_scr, in_sems, st_sem, out_sem):
+        srv = jax.lax.broadcasted_iota(jnp.float32, (n_servers, tile), 0)
+
+        def in_dma(slot, t):
+            return pltpu.make_async_copy(
+                in_hbm.at[:, pl.ds(t * tile, tile)], in_scr.at[slot],
+                in_sems.at[slot])
+
+        def sweep(log_nu, over_prev, iters, phase):
+            """One streamed dual evaluation. phase: 0 = init (log_nu is the
+            (a0, b0) endpoint pair, brackets seeded from (hi, lo)), 1 =
+            Illinois step at log_nu, 2 = final allocation (writes x)."""
+
+            def tile_step(t, fs):
+                slot = t % 2
+
+                @pl.when(t + 1 < n_tiles)
+                def _():
+                    in_dma((t + 1) % 2, t + 1).start()
+
+                in_dma(slot, t).wait()
+                blk = in_scr[slot]                        # [8, tile]
+                scale, p = blk[0], blk[1]
+                is_l = blk[2] > 0.5
+                other, lo, hi, cf, sid = (blk[3], blk[4], blk[5], blk[6],
+                                          blk[7])
+                member = (sid[None, :] == srv).astype(jnp.float32)
+
+                def per_camera(v_s):
+                    return jnp.sum(member * v_s, axis=0)
+
+                def alloc_at(log_nu_s, blo, bhi, it):
+                    nu = per_camera(jnp.exp(log_nu_s))
+                    x_cl = jnp.sqrt(cf / jnp.maximum(scale * nu, _EPS))
+
+                    def bstep(_, state):
+                        a_, b_ = state
+                        mid = 0.5 * (a_ + b_)
+                        go_up = _h_fn(mid, scale, p, is_l, other,
+                                      mode) >= nu
+                        return (jnp.where(go_up, mid, a_),
+                                jnp.where(go_up, b_, mid))
+
+                    a_, b_ = jax.lax.fori_loop(0, it, bstep, (blo, bhi))
+                    return jnp.clip(jnp.where(is_l, x_cl, 0.5 * (a_ + b_)),
+                                    lo, hi)
+
+                def bracket(xa, xb):
+                    pad = 0.25 * jnp.maximum(xa - xb, 0.0) + 1e-7
+                    return (jnp.maximum(lo, xb - pad),
+                            jnp.minimum(hi, xa + pad))
+
+                def fill_of(x):
+                    return jnp.sum(member * x[None, :], axis=1,
+                                   keepdims=True)          # [S, 1]
+
+                if phase == 0:
+                    la, lb = log_nu
+                    blo, bhi = bracket(hi, lo)
+                    xa = alloc_at(la, blo, bhi, iters)
+                    xb = alloc_at(lb, blo, bhi, iters)
+                    st_scr[0, :] = xa
+                    st_scr[1, :] = xb
+                    st_scr[2, :] = xb
+                    wr = pltpu.make_async_copy(
+                        st_scr, st_hbm.at[:, pl.ds(t * tile, tile)], st_sem)
+                    wr.start()
+                    wr.wait()
+                    return fs[0] + fill_of(xa), fs[1] + fill_of(xb)
+
+                rd = pltpu.make_async_copy(
+                    st_hbm.at[:, pl.ds(t * tile, tile)], st_scr, st_sem)
+                rd.start()
+                rd.wait()
+                # Apply the previous evaluation's over/under decision to
+                # the stored brackets (same update as the untiled carry).
+                ov = per_camera(over_prev) > 0.5
+                xa = jnp.where(ov, st_scr[2], st_scr[0])
+                xb = jnp.where(ov, st_scr[1], st_scr[2])
+                blo, bhi = bracket(xa, xb)
+                x = alloc_at(log_nu, blo, bhi, iters)
+                if phase == 1:
+                    st_scr[0, :] = xa
+                    st_scr[1, :] = xb
+                    st_scr[2, :] = x
+                    wr = pltpu.make_async_copy(
+                        st_scr, st_hbm.at[:, pl.ds(t * tile, tile)], st_sem)
+                    wr.start()
+                    wr.wait()
+                    return fs[0] + fill_of(x), fs[1]
+                out_scr[0, :] = x
+                wr = pltpu.make_async_copy(
+                    out_scr, x_hbm.at[:, pl.ds(t * tile, tile)], out_sem)
+                wr.start()
+                wr.wait()
+                return fs
+
+            in_dma(0, 0).start()
+            z = jnp.zeros((n_servers, 1), jnp.float32)
+            return jax.lax.fori_loop(0, n_tiles, tile_step, (z, z))
+
+        a0 = jnp.full((n_servers, 1), _LOG_NU_LO, jnp.float32)
+        b0 = jnp.full((n_servers, 1), _LOG_NU_HI, jnp.float32)
+        zero = jnp.zeros((n_servers, 1), jnp.float32)
+        fa0, fb0 = sweep((a0, b0), zero, inner_iters + 4, phase=0)
+        fa0 = fa0 - 1.0
+        fb0 = fb0 - 1.0
+
+        def outer(_, state):
+            a, b, fa, fb, over_prev = state
+            denom = fa - fb
+            t = jnp.where(jnp.abs(denom) > 1e-12, fa / denom, 0.5)
+            t = jnp.clip(t, 0.05, 0.95)
+            mid = a + t * (b - a)
+            f, _ = sweep(mid, over_prev, inner_iters, phase=1)
+            f = f - 1.0
+            over = f > 0.0
+            return (jnp.where(over, mid, a), jnp.where(over, b, mid),
+                    jnp.where(over, f, 0.5 * fa),
+                    jnp.where(over, 0.5 * fb, f),
+                    over.astype(jnp.float32))
+
+        a, b, _, _, over_prev = jax.lax.fori_loop(
+            0, outer_iters, outer, (a0, b0, fa0, fb0, zero))
+        sweep(0.5 * (a + b), over_prev, final_inner_iters, phase=2)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "n_servers", "tile",
+                                             "outer_iters", "inner_iters",
+                                             "final_inner_iters",
+                                             "interpret"))
+def waterfill_tiled(block, *, mode: str, n_servers: int, tile: int,
+                    outer_iters: int = 16, inner_iters: int = 6,
+                    final_inner_iters: int = 20, interpret: bool = False):
+    """Camera-tiled streaming water-fill on a packed ``[8, Np]`` block.
+
+    ``block`` rows follow :data:`TILE_FIELDS` (the seven ``waterfill``
+    vectors plus the per-slot server id as f32; ``is_l`` is the 0/1
+    LCFSP indicator); ``Np`` must be a multiple of ``tile``. Padding
+    slots carry the sentinel sid ``n_servers`` so no membership row
+    picks them up. Returns the normalized allocation ``[Np]``.
+    """
+    f, np_ = block.shape
+    assert f == len(TILE_FIELDS) and np_ % tile == 0
+
+    def kernel(in_hbm, x_hbm, st_hbm):
+        inner = _tiled_waterfill_kernel(
+            in_hbm, x_hbm, st_hbm, mode=mode, n_servers=n_servers,
+            n_tiles=np_ // tile, tile=tile, outer_iters=outer_iters,
+            inner_iters=inner_iters, final_inner_iters=final_inner_iters)
+        pl.run_scoped(
+            inner,
+            in_scr=pltpu.VMEM((2, f, tile), jnp.float32),
+            st_scr=pltpu.VMEM((3, tile), jnp.float32),
+            out_scr=pltpu.VMEM((1, tile), jnp.float32),
+            in_sems=pltpu.SemaphoreType.DMA((2,)),
+            st_sem=pltpu.SemaphoreType.DMA,
+            out_sem=pltpu.SemaphoreType.DMA,
+        )
+
+    x, _ = pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((1, np_), jnp.float32),
+                   jax.ShapeDtypeStruct((3, np_), jnp.float32)],
+        interpret=interpret,
+    )(block)
+    return x[0]
+
+
+# ---------------------------------------------------------------------------
+# Streaming DOS/JCAB config scans (core.baselines)
+# ---------------------------------------------------------------------------
+
+def _baseline_kernel(sc_ref, b_ref, c_ref, eff_ref, acc_ref, xi_ref,
+                     size_ref, m_ref, r_ref, *, mode: str, n_m: int,
+                     n_r: int):
+    thresh = sc_ref[0, 0]           # DOS latency weight / JCAB latency cap
+    b = b_ref[...]
+    c = c_ref[...]
+    eff = eff_ref[...]
+    size = size_ref[...]
+    bn = b.shape[0]
+    lam = (b * eff)[:, None] / size[None, :]               # [bn, R]
+    inv_lam = 1.0 / jnp.maximum(lam, 1e-9)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, n_r), 1)
+
+    best_val = jnp.full((bn,), -jnp.inf, jnp.float32)
+    best_flat = jnp.zeros((bn,), jnp.int32)
+    # JCAB fallback: the overall min-latency config, tracked alongside.
+    lat_best = jnp.full((bn,), jnp.inf, jnp.float32)
+    lat_flat = jnp.zeros((bn,), jnp.int32)
+    for m in range(n_m):                                   # static on-chip
+        mu = c[:, None] / xi_ref[m, :][None, :]            # [bn, R]
+        latency = inv_lam + 1.0 / jnp.maximum(mu, 1e-9)
+        acc_m = acc_ref[:, m, :]                           # [bn, R]
+        if mode == "dos":
+            val = acc_m - thresh * latency
+        else:
+            val = jnp.where(latency <= thresh, acc_m, -jnp.inf)
+        # First-max within the row, then strict-> across models: the fold
+        # keeps the earliest flat index, matching jnp.argmax exactly.
+        row_max = jnp.max(val, axis=1, keepdims=True)
+        first_r = jnp.min(jnp.where(val == row_max, r_iota, n_r), axis=1)
+        take = row_max[:, 0] > best_val
+        best_val = jnp.where(take, row_max[:, 0], best_val)
+        best_flat = jnp.where(take, m * n_r + first_r, best_flat)
+        if mode == "jcab":
+            lat_min = jnp.min(latency, axis=1, keepdims=True)
+            first_l = jnp.min(jnp.where(latency == lat_min, r_iota, n_r),
+                              axis=1)
+            lt = lat_min[:, 0] < lat_best
+            lat_best = jnp.where(lt, lat_min[:, 0], lat_best)
+            lat_flat = jnp.where(lt, m * n_r + first_l, lat_flat)
+
+    if mode == "jcab":
+        # No config met the cap anywhere: min-latency fallback (the jnp
+        # twin's argmax over all -inf also lands on flat index 0, so the
+        # met-somewhere case needs no special handling).
+        best_flat = jnp.where(jnp.isneginf(best_val), lat_flat, best_flat)
+    m_ref[...] = best_flat // n_r
+    r_ref[...] = best_flat % n_r
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_n", "interpret"))
+def baseline_argmax(b, c, acc, xi, size, eff, *, mode: str, threshold,
+                    block_n: int = 1024, interpret: bool = False):
+    """Streaming DOS/JCAB config argmax; returns ``(m_idx, r_idx)``.
+
+    ``mode="dos"`` maximizes ``acc - threshold * latency``;
+    ``mode="jcab"`` maximizes accuracy among configs with
+    ``latency <= threshold`` and falls back to the min-latency config
+    when none qualifies. Bitwise-identical indices to the materialized
+    jnp scans (same elementwise ops, same first-index tie-breaks).
+    """
+    n, n_m, n_r = acc.shape
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(n, block_n),)
+    sc = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_baseline_kernel, mode=mode, n_m=n_m,
+                               n_r=n_r)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),               # threshold
+            pl.BlockSpec((block_n,), lambda i: (i,)),            # b
+            pl.BlockSpec((block_n,), lambda i: (i,)),            # c
+            pl.BlockSpec((block_n,), lambda i: (i,)),            # eff
+            pl.BlockSpec((block_n, n_m, n_r), lambda i: (i, 0, 0)),  # acc
+            pl.BlockSpec((n_m, n_r), lambda i: (0, 0)),          # xi
+            pl.BlockSpec((n_r,), lambda i: (0,)),                # size
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32)] * 2,
+        interpret=interpret,
+    )(sc, b, c, eff, acc, xi, size)
+    return tuple(out)

@@ -154,13 +154,74 @@ def config_argmin(b, c, acc, xi, size, eff, q, v, n_total: int,
                                 interpret=_resolve_interpret(interpret))
 
 
+def baseline_argmax(b, c, acc, xi, size, eff, *, mode: str, threshold,
+                    backend: str = "jnp", interpret: bool | None = None,
+                    block_n: int = 1024):
+    """Streaming DOS/JCAB config scan; returns per-camera ``(m_idx, r_idx)``.
+
+    The jnp backend materializes the ``[N, M, R]`` latency/score tensors
+    (:func:`ref.baseline_argmax_ref`); the pallas backend streams camera
+    tiles through :func:`kernel.baseline_argmax` so they never exist.
+    Indices are bitwise identical between the two.
+    """
+    if backend == "jnp":
+        return ref.baseline_argmax_ref(b, c, acc, xi, size, eff, mode=mode,
+                                       threshold=threshold)
+    if backend != "pallas":
+        raise ValueError(f"unknown solver backend {backend!r};"
+                         " known: ('jnp', 'pallas')")
+    return kernel.baseline_argmax(b, c, acc, xi, size, eff, mode=mode,
+                                  threshold=threshold, block_n=block_n,
+                                  interpret=_resolve_interpret(interpret))
+
+
 # ---------------------------------------------------------------------------
 # Water-filling (Algorithm 1 lines 4/5)
 # ---------------------------------------------------------------------------
 
+def _round_tile(tile_n: int) -> int:
+    return max(_LANE, -(-int(tile_n) // _LANE) * _LANE)
+
+
+def _pack_tiled(layout, scale, p, pol, other, lo, hi, cf, tile: int):
+    """Gather the water-fill vectors into the packed ``[8, Np]`` block the
+    tiled kernel streams (``kernel.TILE_FIELDS`` row order), padding the
+    lane-padded layout width up to a multiple of ``tile``."""
+    cap = layout.flat_order.shape[0]
+    np_to = -(-cap // tile) * tile
+    is_l = (layout.gather_flat(pol, fill=jnp.int32(aopi.LCFSP))
+            == aopi.LCFSP).astype(jnp.float32)
+    rows = [
+        (layout.gather_flat(scale, fill=1.0), 1.0),
+        (layout.gather_flat(p, fill=0.5), 0.5),
+        (is_l, 1.0),
+        (layout.gather_flat(other, fill=1.0), 1.0),
+        (layout.gather_flat(lo, fill=1e-9), 1e-9),
+        (layout.gather_flat(hi, fill=1e-9), 1e-9),
+        (layout.gather_flat(cf, fill=1.0), 1.0),
+        (layout.flat_sid.astype(jnp.float32), float(layout.n_servers)),
+    ]
+    pad = np_to - cap
+    return jnp.stack([
+        jnp.concatenate([v.astype(jnp.float32),
+                         jnp.full((pad,), fill, jnp.float32)])
+        if pad else v.astype(jnp.float32) for v, fill in rows])
+
+
 def _run_waterfill(layout, scale, p, pol, other, lo, hi, cf, mode,
-                   outer_iters, inner_iters, final_inner_iters, interpret):
+                   outer_iters, inner_iters, final_inner_iters, interpret,
+                   tile_n=None):
     n = scale.shape[0]
+    cap = layout.flat_order.shape[0]
+    tile = None if tile_n is None else _round_tile(tile_n)
+    if tile is not None and cap > tile:
+        block = _pack_tiled(layout, scale, p, pol, other, lo, hi, cf, tile)
+        vec = kernel.waterfill_tiled(
+            block, mode=mode, n_servers=layout.n_servers, tile=tile,
+            outer_iters=outer_iters, inner_iters=inner_iters,
+            final_inner_iters=final_inner_iters,
+            interpret=_resolve_interpret(interpret))
+        return layout.scatter_flat(vec[:cap], n)
     vec = kernel.waterfill(
         layout.gather_flat(scale, fill=1.0),
         layout.gather_flat(p, fill=0.5),
@@ -179,9 +240,12 @@ def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers: int,
                         outer_iters: int = 16, inner_iters: int = 6,
                         final_inner_iters: int = 20, *,
                         layout: ServerLayout | None = None,
+                        tile_n: int | None = None,
                         interpret: bool | None = None):
     """Fused twin of ``allocate.waterfill_bandwidth`` (same signature plus
-    an optional precomputed layout); returns b[n] in Hz."""
+    an optional precomputed layout); returns b[n] in Hz. ``tile_n``
+    switches to the camera-tiled streaming kernel when the padded fleet
+    exceeds one tile (rounded up to the 128-lane width)."""
     if layout is None:
         layout = server_layout(server_id, n_servers)
     B = budgets[server_id]
@@ -193,7 +257,7 @@ def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers: int,
     cf = 1.0 + 1.0 / p       # LCFSP closed form: u = sqrt(cf / (scale * nu))
     u = _run_waterfill(layout, lam_scale, p, pol, mu, lo, hi, cf,
                        "bandwidth", outer_iters, inner_iters,
-                       final_inner_iters, interpret)
+                       final_inner_iters, interpret, tile_n=tile_n)
     return u * B
 
 
@@ -202,6 +266,7 @@ def waterfill_compute(inv_xi, p, pol, lam, server_id, budgets,
                       outer_iters: int = 16, inner_iters: int = 6,
                       final_inner_iters: int = 20, *,
                       layout: ServerLayout | None = None,
+                      tile_n: int | None = None,
                       interpret: bool | None = None):
     """Fused twin of ``allocate.waterfill_compute``; returns c[n] in FLOPS."""
     if layout is None:
@@ -222,5 +287,45 @@ def waterfill_compute(inv_xi, p, pol, lam, server_id, budgets,
     cf = 1.0 / p             # LCFSP closed form: v = sqrt(cf / (scale * nu))
     v = _run_waterfill(layout, mu_scale, p, pol, lam, lo, hi, cf,
                        "compute", outer_iters, inner_iters,
-                       final_inner_iters, interpret)
+                       final_inner_iters, interpret, tile_n=tile_n)
     return v * C
+
+
+def waterfill_pair(k, p, pol, mu, inv_xi, server_id, budgets_b, budgets_c,
+                   n_servers: int, stability_margin: float = 1.05,
+                   outer_iters: int = 16, inner_iters: int = 6,
+                   final_inner_iters: int = 20, *,
+                   layout: ServerLayout | None = None,
+                   interpret: bool | None = None):
+    """Both BCD water-fills (Algorithm 1 lines 4+5) in one kernel dispatch.
+
+    Equivalent (to float32 tolerance) to ``waterfill_bandwidth`` followed
+    by ``waterfill_compute`` at ``lam = b * k``: the FCFS floors and the
+    intermediate arrival rate are derived on-chip from the in-register
+    bandwidth result, so only the packed inputs and the two allocation
+    vectors cross HBM. Returns ``(b, c)`` in Hz / FLOPS.
+    """
+    if layout is None:
+        layout = server_layout(server_id, n_servers)
+    n = k.shape[0]
+    B = budgets_b[server_id]
+    C = budgets_c[server_id]
+    lam_scale = k * B
+    lam_star = aopi.argmin_lam_fcfs(mu, p)
+    hi_b = jnp.where(pol == aopi.LCFSP, 1.0,
+                     jnp.minimum(lam_star / jnp.maximum(lam_scale, _EPS),
+                                 1.0))
+    u, v = kernel.waterfill_pair(
+        layout.gather_flat(lam_scale, fill=1.0),
+        layout.gather_flat(p, fill=0.5),
+        layout.gather_flat(pol, fill=jnp.int32(aopi.LCFSP)),
+        layout.gather_flat(mu, fill=1.0),
+        layout.gather_flat(jnp.full_like(hi_b, 1e-9), fill=1e-9),
+        layout.gather_flat(hi_b, fill=1e-9),
+        layout.gather_flat(1.0 + 1.0 / p, fill=1.0),
+        layout.gather_flat(inv_xi * C, fill=1.0),
+        layout.member(), stability_margin=stability_margin,
+        outer_iters=outer_iters, inner_iters=inner_iters,
+        final_inner_iters=final_inner_iters,
+        interpret=_resolve_interpret(interpret))
+    return (layout.scatter_flat(u, n) * B, layout.scatter_flat(v, n) * C)

@@ -44,3 +44,28 @@ def config_argmin_ref(b, c, acc, xi, size, eff, q, v, n_total):
     r_idx = ((best // 2) % n_r).astype(jnp.int32)
     pol = (best % 2).astype(jnp.int32)
     return r_idx, m_idx, pol
+
+
+def baseline_argmax_ref(b, c, acc, xi, size, eff, *, mode, threshold):
+    """DOS/JCAB config scans exactly as the materialized jnp baselines run
+    them: build the full ``[N, M, R]`` latency/score tensors and take one
+    flat (m-major) argmax per camera. Returns ``(m_idx, r_idx)``.
+    """
+    n = acc.shape[0]
+    n_r = xi.shape[1]
+    lam = (b * eff)[:, None, None] / size[None, None, :]
+    mu = c[:, None, None] / xi[None, :, :]
+    latency = 1.0 / jnp.maximum(lam, 1e-9) + 1.0 / jnp.maximum(mu, 1e-9)
+    if mode == "dos":
+        score = acc - threshold * latency
+        best = jnp.argmax(score.reshape(n, -1), axis=1)
+    elif mode == "jcab":
+        ok = latency <= threshold
+        score = jnp.where(ok, acc, -jnp.inf)
+        best = jnp.argmax(score.reshape(n, -1), axis=1)
+        none_ok = ~ok.reshape(n, -1).any(axis=1)
+        fallback = jnp.argmin(latency.reshape(n, -1), axis=1)
+        best = jnp.where(none_ok, fallback, best)
+    else:
+        raise ValueError(f"unknown baseline scan mode {mode!r}")
+    return (best // n_r).astype(jnp.int32), (best % n_r).astype(jnp.int32)

@@ -136,9 +136,11 @@ def _reduced_policy(name: str, n_bcd_iters: int, solver_backend: str):
                                         n_bcd_iters=n_bcd_iters,
                                         solver_backend=solver_backend)
         elif name == "dos":
-            res = baselines.rollout_dos(tables, dos_weight)
+            res = baselines.rollout_dos(tables, dos_weight,
+                                        solver_backend=solver_backend)
         elif name == "jcab":
-            res = baselines.rollout_jcab(tables, jcab_cap)
+            res = baselines.rollout_jcab(tables, jcab_cap,
+                                         solver_backend=solver_backend)
         else:
             raise ValueError(
                 f"unknown policy {name!r}; known: {POLICIES}")
@@ -224,9 +226,9 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
     ``backend=None`` picks ``"shard_map"`` on >= 2 devices and ``"vmap"``
     on one; pass ``"fleet"`` for the bitwise-reproducible multi-device
     path (see module docstring). ``solver_backend`` selects the
-    Algorithm-1 implementation inside LBCD/MIN ("jnp" | "pallas" |
-    "auto", see ``bcd.solve_slot``; no-op for DOS/JCAB which run no BCD
-    solve).
+    Algorithm-1 implementation inside LBCD/MIN and the config-scan engine
+    inside DOS/JCAB ("jnp" | "pallas" | "auto" plus tiling/fusion knobs
+    like ``"pallas:tile=4096"`` — see ``bcd.parse_backend``).
 
     ``dataplane=True`` additionally replays every (policy, scenario) pair
     through the batched GI/G/1 data plane
@@ -282,9 +284,7 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
     for name in policies:
         if name not in POLICIES:
             raise ValueError(f"unknown policy {name!r}; known: {POLICIES}")
-        # DOS/JCAB run no BCD solve: normalize their cache key so a pallas
-        # sweep reuses the same compiled block program as a jnp one.
-        sb = solver_backend if name in ("lbcd", "min") else "jnp"
+        sb = solver_backend
         if backend == "shard_map" and len(devices) > 1:
             series[name] = _run_shard_map(name, n_bcd_iters, sb, tables,
                                           knobs, n_scenarios, devices)

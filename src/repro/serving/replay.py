@@ -94,10 +94,12 @@ def make_controller(policy: str, system, *, v: float = 10.0,
                                        solver_backend=solver_backend)
     if policy == "dos":
         return baselines.DOSController(
-            system, weight=float(params.get("dos_weight", 1.0)))
+            system, weight=float(params.get("dos_weight", 1.0)),
+            solver_backend=solver_backend)
     if policy == "jcab":
         return baselines.JCABController(
-            system, latency_cap=float(params.get("jcab_latency_cap", 0.5)))
+            system, latency_cap=float(params.get("jcab_latency_cap", 0.5)),
+            solver_backend=solver_backend)
     raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
 
 

@@ -16,8 +16,10 @@ Two planners:
     LBCD controller, the ``baselines.rollout_*`` engines for MIN/DOS/JCAB)
     over a ``profiles.HorizonTables`` window; ``plan_horizon(k)`` exposes
     the same call for what-if queries. ``solver_backend`` (including
-    ``"auto"``/``"pallas"``) threads through from the controller, so
-    kernel-backed replay rides the fused slot solver.
+    ``"auto"``/``"pallas"`` and spec strings like ``"pallas:tile=4096"``
+    or ``"pallas:nofuse"``) threads through from the controller, so
+    kernel-backed replay rides the fused — and, at large N, camera-tiled
+    — slot solver.
   * ``planner="step"`` — the legacy per-slot ``controller.step(t)`` path
     (kept for custom ``assign_fn`` controllers and failover experiments).
 

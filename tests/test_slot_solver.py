@@ -5,6 +5,7 @@ off-TPU), so everything here exercises the exact kernel code paths that
 compile on device.
 """
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +13,7 @@ import numpy as np
 import pytest
 from jax import core as jax_core
 
-from repro.core import allocate, aopi, bcd, lbcd, profiles
+from repro.core import allocate, aopi, baselines, bcd, lbcd, profiles
 from repro.kernels import slot_solver
 from repro.kernels.slot_solver import ops as slot_ops
 
@@ -372,16 +373,23 @@ def test_config_argmin_pallas_never_materializes_score_tensor():
 
 
 def test_solve_slot_pallas_dispatch_structure():
-    """Whole Algorithm-1 solve: every BCD pass is 3 fused dispatches
-    (config + 2 water-fills) and the big score tensor never hits HBM."""
+    """Whole Algorithm-1 solve: every BCD pass is 2 fused dispatches
+    (config + one two-water-fill kernel) and the big score tensor never
+    hits HBM; ``nofuse`` splits the pair back into two dispatches."""
     args = _slot_instance(0)
     n, n_m, n_r = args[0].shape
     fused = jax.make_jaxpr(functools.partial(
         bcd.solve_slot, n_servers=3, solver_backend="pallas"))(*args)
     counts = _prim_counts(fused.jaxpr)
-    # 1 config + 2 water-fills in the BCD body + 2 polish water-fills.
-    assert counts.get("pallas_call", 0) == 5
+    # 1 config + 1 fused pair in the BCD body + 1 fused polish pair.
+    assert counts.get("pallas_call", 0) == 3
     assert not _has_aval_shape(fused.jaxpr, (n, n_m, n_r, 2))
+
+    seq = jax.make_jaxpr(functools.partial(
+        bcd.solve_slot, n_servers=3,
+        solver_backend="pallas:nofuse"))(*args)
+    # 1 config + 2 water-fills in the BCD body + 2 polish water-fills.
+    assert _prim_counts(seq.jaxpr).get("pallas_call", 0) == 5
 
     ref = jax.make_jaxpr(functools.partial(
         bcd.solve_slot, n_servers=3))(*args)
@@ -420,4 +428,279 @@ def test_auto_backend_dispatch_choice_pinned():
     big = _slot_instance(0, n=bcd.AUTO_PALLAS_MIN_CAMERAS)
     jx = jax.make_jaxpr(functools.partial(
         bcd.solve_slot, n_servers=3, solver_backend="auto"))(*big)
-    assert _prim_counts(jx.jaxpr).get("pallas_call", 0) == 5
+    assert _prim_counts(jx.jaxpr).get("pallas_call", 0) == 3
+
+
+def test_auto_backend_grid_path_switch():
+    """The jnp fallback below the switch point also holds on the vmapped
+    (V, P_min) grid path: an auto grid over a small fleet traces zero
+    pallas_calls, and crosses over with the fleet like ``solve_slot``."""
+    vs = jnp.linspace(1.0, 20.0, 2)
+    p_mins = jnp.linspace(0.5, 0.8, 2)
+
+    def trace(n):
+        tab = profiles.EdgeSystem(n_cameras=n, n_servers=3,
+                                  n_slots=2).horizon(2)
+        jx = jax.make_jaxpr(lambda t: lbcd.rollout_grid(
+            t, vs, p_mins, solver_backend="auto"))(tab)
+        return _prim_counts(jx.jaxpr).get("pallas_call", 0)
+
+    assert trace(bcd.AUTO_PALLAS_MIN_CAMERAS - 108) == 0
+    assert trace(bcd.AUTO_PALLAS_MIN_CAMERAS) >= 1
+
+
+# ---------------------------------------------------------------------------
+# Spec strings: tiling/fusion knobs and the fleet-size tile policy.
+# ---------------------------------------------------------------------------
+
+def test_parse_backend_knobs():
+    assert bcd.parse_backend("pallas") == bcd.SolverSpec("pallas", None,
+                                                         True)
+    assert bcd.parse_backend("pallas:tile=4096") == bcd.SolverSpec(
+        "pallas", 4096, True)
+    assert bcd.parse_backend("auto:tile=2048:nofuse") == bcd.SolverSpec(
+        "auto", 2048, False)
+    assert bcd.parse_backend("pallas:nofuse").fuse is False
+    assert bcd.parse_backend("jnp:fuse").fuse is True
+    # An already-parsed spec passes through untouched.
+    spec = bcd.SolverSpec("pallas", 128, False)
+    assert bcd.parse_backend(spec) is spec
+    with pytest.raises(ValueError, match="unknown solver_backend knob"):
+        bcd.parse_backend("pallas:block=4")
+    with pytest.raises(ValueError, match="unknown solver_backend"):
+        bcd.parse_backend("cuda:tile=2")
+
+
+def test_resolve_spec_tile_policy():
+    thr = bcd.AUTO_TILE_MIN_CAMERAS
+    # Auto-tiling engages at the measured streaming-win threshold.
+    assert bcd.resolve_spec("auto", thr).tile_n == bcd.DEFAULT_TILE_N
+    assert bcd.resolve_spec("pallas", thr).tile_n == bcd.DEFAULT_TILE_N
+    assert bcd.resolve_spec("pallas", thr - 1).tile_n is None
+    # tile=0 pins the single-program kernel even at scale.
+    assert bcd.resolve_spec("pallas:tile=0", 10 * thr).tile_n is None
+    # A tile the whole fleet fits inside degenerates to untiled (keeps
+    # the fused pair dispatch available).
+    assert bcd.resolve_spec(f"pallas:tile={bcd.DEFAULT_TILE_N}",
+                            3000).tile_n is None
+    assert bcd.resolve_spec("pallas:tile=128", 300).tile_n == 128
+    # jnp never tiles; a resolved spec never carries "auto".
+    assert bcd.resolve_spec("jnp:tile=4096", 10 * thr).tile_n is None
+    assert bcd.resolve_spec("auto", 30) == bcd.SolverSpec("jnp", None, True)
+    assert bcd.resolve_spec("auto", 10 * thr).backend == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Camera-tiled streaming water-fill vs the whole-fleet kernel.
+# ---------------------------------------------------------------------------
+
+def _assert_tiled_parity(n, s, seed, lcfsp_frac, tile, budget_lo=2e7,
+                         budget_hi=5e7, server_id=None):
+    k, p, pol, mu, sid, B = _setup(n, s, seed=seed, lcfsp_frac=lcfsp_frac,
+                                   budget_lo=budget_lo, budget_hi=budget_hi,
+                                   server_id=server_id)
+    b_whole = np.asarray(slot_solver.waterfill_bandwidth(
+        k, p, pol, mu, sid, B, n_servers=s))
+    b_tiled = np.asarray(slot_solver.waterfill_bandwidth(
+        k, p, pol, mu, sid, B, n_servers=s, tile_n=tile))
+    # Same Illinois math (deferred bracket update); only the per-server
+    # fill-sum accumulation order differs (tile partial sums).
+    np.testing.assert_allclose(b_tiled, b_whole, rtol=1e-4, atol=1e-3)
+    b_ref = np.asarray(allocate.waterfill_bandwidth(
+        k, p, pol, mu, sid, B, n_servers=s))
+    np.testing.assert_allclose(b_tiled, b_ref, rtol=2e-4, atol=1e-2)
+    return b_tiled, np.asarray(sid), np.asarray(B)
+
+
+def test_waterfill_tiled_parity_hypothesis():
+    """Ragged fleet sizes (not multiples of the tile), mixed policies:
+    streamed tiles == whole-fleet kernel == jnp reference."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([0.0, 0.5, 1.0]),
+           st.sampled_from([(37, 3), (130, 2), (300, 5)]),
+           st.sampled_from([128, 256]))
+    def inner(seed, frac, ns, tile):
+        n, s = ns
+        _assert_tiled_parity(n, s, seed, frac, tile)
+    inner()
+
+
+@pytest.mark.parametrize("n,s,tile", [(37, 3, 128), (130, 2, 128),
+                                      (300, 5, 256)])
+def test_waterfill_tiled_parity_ragged(n, s, tile):
+    """Deterministic core of the hypothesis sweep (runs even without
+    hypothesis installed): N not a multiple of the tile."""
+    for seed in (0, 1):
+        _assert_tiled_parity(n, s, seed, lcfsp_frac=0.5, tile=tile)
+
+
+def test_waterfill_tiled_single_camera_servers():
+    n = 6
+    _assert_tiled_parity(n, n, seed=3, lcfsp_frac=0.5, tile=128,
+                         server_id=np.arange(n, dtype=np.int32))
+
+
+def test_waterfill_tiled_slack_budget():
+    b, sid, B = _assert_tiled_parity(8, 2, seed=11, lcfsp_frac=0.0,
+                                     tile=128, budget_lo=5e9,
+                                     budget_hi=9e9)
+    for s in range(2):
+        assert b[sid == s].sum() < 0.9 * B[s]
+
+
+def _pallas_call_operand_shapes(jaxpr):
+    return {tuple(getattr(v.aval, "shape", ()))
+            for eqn in _walk_eqns(jaxpr) if eqn.primitive.name ==
+            "pallas_call" for v in eqn.invars}
+
+
+def test_waterfill_tiled_streams_constant_vmem():
+    """The whole-fleet kernel takes the f32 ``[S, cap]`` membership
+    matrix (and every per-camera vector) as VMEM operands; the tiled
+    kernel's only operand is the packed ``[8, Np]`` HBM block —
+    membership is recomputed per ``[S, tile]`` window inside the kernel,
+    so VMEM holds O(tile), not O(N)."""
+    k, p, pol, mu, sid, B = _setup(300, 2)
+    cap = slot_solver.server_layout(sid, 2).flat_order.shape[0]
+    assert cap > 128
+    whole = jax.make_jaxpr(functools.partial(
+        slot_solver.waterfill_bandwidth, n_servers=2))(k, p, pol, mu,
+                                                       sid, B)
+    assert (2, cap) in _pallas_call_operand_shapes(whole.jaxpr)
+    tiled = jax.make_jaxpr(functools.partial(
+        slot_solver.waterfill_bandwidth, n_servers=2,
+        tile_n=128))(k, p, pol, mu, sid, B)
+    np_ = -(-cap // 128) * 128
+    assert _pallas_call_operand_shapes(tiled.jaxpr) == {(8, np_)}
+    assert _prim_counts(tiled.jaxpr).get("pallas_call", 0) == 1
+
+
+def test_solve_slot_tiled_spec_matches_jnp():
+    """A forced-streaming spec string agrees with the jnp solve end to
+    end (config indices bitwise, allocations to float32 tolerance)."""
+    args = _slot_instance(1, n=40)
+    d_jnp = bcd.solve_slot(*args, n_servers=3)
+    d_t = bcd.solve_slot(*args, n_servers=3,
+                         solver_backend="pallas:tile=128")
+    for f in ("r_idx", "m_idx", "pol"):
+        np.testing.assert_array_equal(np.asarray(getattr(d_jnp, f)),
+                                      np.asarray(getattr(d_t, f)),
+                                      err_msg=f)
+    for f in ("b", "c", "acc", "aopi"):
+        np.testing.assert_allclose(np.asarray(getattr(d_t, f)),
+                                   np.asarray(getattr(d_jnp, f)),
+                                   rtol=5e-4, err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# Streaming DOS/JCAB config scans (core.baselines).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,threshold",
+                         [("dos", 0.3), ("dos", 3.0),
+                          ("jcab", 0.5), ("jcab", 1e-6)])
+def test_baseline_argmax_bitwise(mode, threshold):
+    """Streaming kernel == materialized argmax, bitwise, incl. a
+    non-divisible camera tile and the JCAB all-infeasible fallback
+    (threshold=1e-6 makes every config miss the cap)."""
+    for seed in range(3):
+        b, c, acc, xi, size, eff = _config_inputs(29, seed=seed)
+        ref = slot_solver.baseline_argmax_ref(
+            b, c, acc, xi, size, eff, mode=mode, threshold=threshold)
+        out = slot_solver.baseline_argmax(
+            b, c, acc, xi, size, eff, mode=mode, threshold=threshold,
+            backend="pallas", block_n=16)
+        for name, a, o in zip(("m", "r"), ref, out):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(o),
+                                          err_msg=f"{name} seed={seed}")
+
+
+def test_baseline_rollout_backend_parity():
+    """Whole-horizon DOS/JCAB rollouts are bitwise identical across the
+    scan engines (the kernel reproduces the argmax exactly and everything
+    downstream is index arithmetic)."""
+    tab = profiles.EdgeSystem(n_cameras=40, n_servers=3,
+                              n_slots=4).horizon(4)
+    for name, fn in (("dos", baselines.rollout_dos),
+                     ("jcab", baselines.rollout_jcab)):
+        r_jnp = fn(tab)
+        r_pl = fn(tab, solver_backend="pallas")
+        for f in ("m_idx", "r_idx"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_jnp.decision, f)),
+                np.asarray(getattr(r_pl.decision, f)),
+                err_msg=f"{name} {f}")
+        np.testing.assert_array_equal(np.asarray(r_jnp.aopi),
+                                      np.asarray(r_pl.aopi),
+                                      err_msg=name)
+
+
+_STRUCTURAL_PRIMS = frozenset({
+    "dynamic_slice", "slice", "squeeze", "reshape", "broadcast_in_dim",
+    "transpose", "convert_element_type", "copy", "gather", "concatenate",
+    "pad", "pjit", "scan", "while", "cond", "closed_call", "pallas_call",
+    "custom_jvp_call", "custom_vjp_call_jaxpr",
+})
+
+
+def _arith_shape_count(jaxpr, shape):
+    """Eqns computing (not merely moving) a value of ``shape``."""
+    return sum(1 for eqn in _walk_eqns(jaxpr)
+               if eqn.primitive.name not in _STRUCTURAL_PRIMS
+               and any(tuple(getattr(v.aval, "shape", ())) == tuple(shape)
+                       for v in eqn.outvars))
+
+
+def test_baseline_rollouts_never_materialize_score_tensor():
+    """On the pallas path no [N, M, R] value is ever *computed* — the
+    only full-size avals are slices of the input accuracy table. The jnp
+    path computes at least five (rates, latency, scores, masks)."""
+    tab = profiles.EdgeSystem(n_cameras=24, n_servers=3,
+                              n_slots=3).horizon(3)
+    n, (n_m, n_r) = 24, tab.xi.shape
+    for name, fn in (("dos", baselines.rollout_dos),
+                     ("jcab", baselines.rollout_jcab)):
+        jx = jax.make_jaxpr(functools.partial(
+            fn, solver_backend="jnp"))(tab)
+        assert _arith_shape_count(jx.jaxpr, (n, n_m, n_r)) >= 5, name
+        px = jax.make_jaxpr(functools.partial(
+            fn, solver_backend="pallas"))(tab)
+        assert _arith_shape_count(px.jaxpr, (n, n_m, n_r)) == 0, name
+        assert _prim_counts(px.jaxpr).get("pallas_call", 0) >= 1, name
+
+
+# ---------------------------------------------------------------------------
+# Large-fleet smoke (CI kernel step runs this with REPRO_SMOKE_10K=1).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(os.environ.get("REPRO_SMOKE_10K") != "1",
+                    reason="10^4-camera interpret smoke; set "
+                           "REPRO_SMOKE_10K=1 (CI kernel step) to run")
+def test_tiled_smoke_10k_cameras():
+    """N=10^4 end-to-end solve through the streaming kernel (small tile
+    so it actually streams ~5 tiles) against the whole-fleet kernel."""
+    n = 10_000
+    tab = profiles.EdgeSystem(n_cameras=n, n_servers=3,
+                              n_slots=1).horizon(1)
+    rng = np.random.default_rng(0)
+    sid = jnp.asarray(rng.integers(0, 3, n).astype(np.int32))
+    args = (tab.acc[0], tab.xi, tab.size, tab.eff, sid, tab.budgets_b[0],
+            tab.budgets_c[0], jnp.float32(1.0), jnp.float32(10.0))
+    d_t = bcd.solve_slot(*args, n_servers=3,
+                         solver_backend="pallas:tile=2048")
+    d_0 = bcd.solve_slot(*args, n_servers=3,
+                         solver_backend="pallas:tile=0")
+    b = np.asarray(d_t.b)
+    assert np.isfinite(b).all() and (b > 0).all()
+    B = np.asarray(tab.budgets_b[0])
+    sid_np = np.asarray(sid)
+    for s in range(3):
+        assert b[sid_np == s].sum() <= B[s] * 1.001
+    np.testing.assert_array_equal(np.asarray(d_t.m_idx),
+                                  np.asarray(d_0.m_idx))
+    np.testing.assert_array_equal(np.asarray(d_t.r_idx),
+                                  np.asarray(d_0.r_idx))
+    np.testing.assert_allclose(b, np.asarray(d_0.b), rtol=1e-3, atol=1e-2)
