@@ -10,18 +10,25 @@ RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
 
 def run_metadata() -> dict:
     """Environment stamp for every ``BENCH_*.json`` header: jax/device
-    identity and whether pallas kernels ran in interpret mode (CPU/CI) or
-    compiled (real TPU) — so trajectory comparisons across machines are
-    honest about what was actually measured."""
+    identity, whether pallas kernels ran in interpret mode (CPU/CI) or
+    compiled (real TPU), and the ``repro.obs`` snapshot accumulated so
+    far (counter totals, histogram counts/sums) — so every emitted table
+    carries the timing provenance of the run that produced it."""
     import jax
     backend = jax.default_backend()
-    return {
+    meta = {
         "jax_version": jax.__version__,
         "backend": backend,
         "device_kind": jax.devices()[0].device_kind,
         "n_devices": jax.device_count(),
         "pallas_interpret": backend != "tpu",
     }
+    try:
+        from repro import obs
+        meta["obs"] = obs.snapshot_summary()
+    except ImportError:
+        pass
+    return meta
 
 
 def emit(name: str, rows: list, header: list):

@@ -1,10 +1,18 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME[,NAME...]]
 
-Emits CSV blocks per figure and persists JSON under results/bench/.
+Emits CSV blocks per figure and persists JSON under results/bench/ —
+every table (fig reproductions and BENCH_* trajectory benches alike)
+carries the ``common.run_metadata()`` provenance stamp, including the
+``repro.obs`` metric snapshot accumulated by the run.
+
+``--only`` takes one or more comma-separated names; each is matched as a
+substring against the table keys, and a token that matches nothing
+aborts with the list of valid keys.
 """
 import argparse
+import json
 import sys
 import time
 
@@ -12,7 +20,7 @@ from . import (bench_bandwidth, bench_cameras, bench_compute,
                bench_dataplane, bench_energy, bench_frontier,
                bench_hyperparams, bench_overhead, bench_policy,
                bench_rollout, bench_scenarios, bench_slot_solver,
-               bench_validation)
+               bench_validation, common)
 
 ALL = {
     "fig14_15_validation": bench_validation.run,
@@ -31,23 +39,36 @@ ALL = {
 }
 
 
+def select(only: str | None) -> list[str]:
+    """Resolve ``--only`` (comma-separated substrings) to table keys,
+    erroring per-token so a typo names itself AND the valid keys."""
+    if not only:
+        return list(ALL)
+    selected: list[str] = []
+    for token in (t.strip() for t in only.split(",")):
+        if not token:
+            continue
+        hits = [name for name in ALL if token in name]
+        if not hits:
+            sys.exit(f"--only token {token!r} matched no benchmark; "
+                     f"known: {', '.join(ALL)}")
+        selected += [h for h in hits if h not in selected]
+    return selected
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark name substrings")
     args = ap.parse_args()
     t0 = time.time()
-    matched = False
-    for name, fn in ALL.items():
-        if args.only and args.only not in name:
-            continue
-        matched = True
+    print(f"# meta: {json.dumps(common.run_metadata(), default=float)}\n",
+          flush=True)
+    for name in select(args.only):
         t = time.time()
-        fn(full=args.full)
+        ALL[name](full=args.full)
         print(f"[{name}: {time.time()-t:.1f}s]\n", flush=True)
-    if args.only and not matched:
-        sys.exit(f"--only {args.only!r} matched no benchmark; "
-                 f"known: {', '.join(ALL)}")
     print(f"total {time.time()-t0:.1f}s")
 
 

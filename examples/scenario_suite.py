@@ -19,18 +19,27 @@
 4. Print the per-family robustness report and each policy's worst family
    (and, with ``--dataplane``, its worst model-vs-measurement gap).
 
+5. With ``--obs DIR`` (or ``REPRO_OBS_DIR``), stream spans/metrics from
+   the whole run into ``DIR`` (``trace.jsonl``, ``metrics.prom``,
+   ``metrics.jsonl``, Perfetto-loadable ``trace.json``) and print where
+   they landed — ``python -m repro.obs.report DIR`` then shows
+   plans/sec and p99 plan/replan latency per policy x family.
+
     PYTHONPATH=src python examples/scenario_suite.py \
-        [--smoke] [--dataplane] [--delay-model mm1|uniform|gamma]
+        [--smoke] [--dataplane] [--delay-model mm1|uniform|gamma] \
+        [--obs DIR]
 """
 import argparse
 
 import jax
 
-from repro import scenarios
+from repro import obs, scenarios
 
 
 def main(smoke: bool = False, dataplane: bool = False,
-         delay_model: str = "mm1"):
+         delay_model: str = "mm1", obs_dir: str | None = None):
+    if obs_dir:
+        obs.configure(run_dir=obs_dir)
     dims = (dict(n_cameras=6, n_slots=16, n_servers=2) if smoke
             else dict(n_cameras=16, n_slots=60, n_servers=3))
     s = scenarios.suite(**dims)
@@ -60,6 +69,11 @@ def main(smoke: bool = False, dataplane: bool = False,
             line += f"; worst model-vs-measured gap: {dfam} ({div:+.2%})"
         print(line)
 
+    if obs_dir:
+        paths = obs.write_artifacts(obs_dir)
+        print(f"\nobs artifacts: {', '.join(sorted(paths.values()))}")
+        print(f"dashboard: python -m repro.obs.report {obs_dir}")
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -73,5 +87,8 @@ if __name__ == "__main__":
                     choices=("mm1", "uniform", "gamma"),
                     help="data-plane delay family (non-exponential models "
                          "show how far Theorems 1-2 drift)")
+    ap.add_argument("--obs", default=None, metavar="DIR",
+                    help="write repro.obs artifacts (trace.jsonl, "
+                         "metrics.prom/jsonl, Perfetto trace.json) here")
     args = ap.parse_args()
-    main(args.smoke, args.dataplane, args.delay_model)
+    main(args.smoke, args.dataplane, args.delay_model, args.obs)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import allocate, aopi
+from .. import obs
 from ..kernels import slot_solver
 
 # Fleet size at which the pallas kernels start winning. Below one 128-lane
@@ -156,10 +157,6 @@ def _rates(b, c, r_idx, m_idx, eff, size, xi):
     return lam, mu
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("n_servers", "n_iters", "method",
-                                    "solver_effort", "solver_backend",
-                                    "interpret"))
 def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
                n_servers: int, n_iters: int = 4,
                method: Literal["waterfill", "interior"] = "waterfill",
@@ -193,6 +190,40 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
       interpret: pallas interpret-mode override (None = auto: interpret
         everywhere except on real TPUs — the CPU/CI path).
     """
+    kwargs = dict(n_servers=n_servers, n_iters=n_iters, method=method,
+                  solver_effort=solver_effort,
+                  solver_backend=solver_backend, interpret=interpret)
+    args = (acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V)
+    if obs.enabled():
+        # Per-backend dispatch accounting: concrete (host) calls get a
+        # timed span — dispatch through materialization of nothing, i.e.
+        # host-side submit latency of the jitted program; traced calls
+        # (inside rollout scans / vmaps) bump a per-backend trace counter
+        # instead (wall time inside a trace measures tracing, not the
+        # solver).
+        spec = resolve_spec(solver_backend, acc.shape[0], method=method)
+        backend = (spec.backend if spec.tile_n is None
+                   else f"{spec.backend}:tiled")
+        if any(isinstance(a, jax.core.Tracer) for a in args):
+            obs.counter("bcd.solve_slot.traces",
+                        solver_backend=backend).inc()
+        else:
+            with obs.span("bcd.solve_slot", solver_backend=backend,
+                          n_cameras=int(acc.shape[0])):
+                return _solve_slot(*args, **kwargs)
+    return _solve_slot(*args, **kwargs)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_servers", "n_iters", "method",
+                                    "solver_effort", "solver_backend",
+                                    "interpret"))
+def _solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
+                n_servers: int, n_iters: int = 4,
+                method: Literal["waterfill", "interior"] = "waterfill",
+                solver_effort: Literal["fast", "seed"] = "fast",
+                solver_backend: str = "jnp",
+                interpret: bool | None = None):
     spec = resolve_spec(solver_backend, acc.shape[0], method=method)
     use_pallas = spec.backend == "pallas"
     if use_pallas and method != "waterfill":

@@ -42,6 +42,8 @@ import numpy as np
 from jax import lax
 from jax.experimental import enable_x64
 
+from .. import obs
+
 Sampler = Callable[[np.random.Generator, int], np.ndarray]
 
 
@@ -372,7 +374,10 @@ def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
     dtype = np.float32 if n_frames <= F32_MAX_FRAMES else np.float64
     lam = np.atleast_2d(np.asarray(lam, dtype))
     e, n = lam.shape
-    with enable_x64():
+    obs.histogram("queues.batch_elems",
+                  delay_model=delay_model).observe(e * n * n_frames)
+    with obs.span("queues.gi_g1_window", delay_model=delay_model,
+                  epochs=e, streams=n, n_frames=n_frames), enable_x64():
         keys = jax.vmap(jax.random.fold_in, (None, 0))(
             jax.random.key(int(seed)), jnp.arange(t0, t0 + e))
         out = _window_sim(
@@ -385,4 +390,5 @@ def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
             keys, float(horizon), n_frames, str(delay_model))
         out = {k: np.asarray(v, np.float64) for k, v in out.items()}
     BATCH_DISPATCHES += 1
+    obs.counter("queues.batch_dispatches", delay_model=delay_model).inc()
     return out

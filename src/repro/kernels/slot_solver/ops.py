@@ -26,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ... import obs
 from ...core import aopi
 from . import kernel, ref
 
@@ -149,6 +150,7 @@ def config_argmin(b, c, acc, xi, size, eff, q, v, n_total: int,
     if backend != "pallas":
         raise ValueError(f"unknown solver backend {backend!r};"
                          " known: ('jnp', 'pallas')")
+    obs.count_dispatch("config_argmin")
     return kernel.config_argmin(b, c, acc, xi, size, eff, q, v,
                                 n_total=n_total, block_n=block_n,
                                 interpret=_resolve_interpret(interpret))
@@ -170,6 +172,7 @@ def baseline_argmax(b, c, acc, xi, size, eff, *, mode: str, threshold,
     if backend != "pallas":
         raise ValueError(f"unknown solver backend {backend!r};"
                          " known: ('jnp', 'pallas')")
+    obs.count_dispatch("baseline_argmax", mode=str(mode))
     return kernel.baseline_argmax(b, c, acc, xi, size, eff, mode=mode,
                                   threshold=threshold, block_n=block_n,
                                   interpret=_resolve_interpret(interpret))
@@ -215,6 +218,7 @@ def _run_waterfill(layout, scale, p, pol, other, lo, hi, cf, mode,
     cap = layout.flat_order.shape[0]
     tile = None if tile_n is None else _round_tile(tile_n)
     if tile is not None and cap > tile:
+        obs.count_dispatch("waterfill_tiled", mode=str(mode))
         block = _pack_tiled(layout, scale, p, pol, other, lo, hi, cf, tile)
         vec = kernel.waterfill_tiled(
             block, mode=mode, n_servers=layout.n_servers, tile=tile,
@@ -222,6 +226,7 @@ def _run_waterfill(layout, scale, p, pol, other, lo, hi, cf, mode,
             final_inner_iters=final_inner_iters,
             interpret=_resolve_interpret(interpret))
         return layout.scatter_flat(vec[:cap], n)
+    obs.count_dispatch("waterfill", mode=str(mode))
     vec = kernel.waterfill(
         layout.gather_flat(scale, fill=1.0),
         layout.gather_flat(p, fill=0.5),
@@ -315,6 +320,7 @@ def waterfill_pair(k, p, pol, mu, inv_xi, server_id, budgets_b, budgets_c,
     hi_b = jnp.where(pol == aopi.LCFSP, 1.0,
                      jnp.minimum(lam_star / jnp.maximum(lam_scale, _EPS),
                                  1.0))
+    obs.count_dispatch("waterfill_pair")
     u, v = kernel.waterfill_pair(
         layout.gather_flat(lam_scale, fill=1.0),
         layout.gather_flat(p, fill=0.5),

@@ -41,6 +41,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .. import obs
 from ..core import baselines, lbcd
 from ..core.profiles import HorizonTables
 from .registry import Suite
@@ -285,14 +286,28 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         if name not in POLICIES:
             raise ValueError(f"unknown policy {name!r}; known: {POLICIES}")
         sb = solver_backend
-        if backend == "shard_map" and len(devices) > 1:
-            series[name] = _run_shard_map(name, n_bcd_iters, sb, tables,
+        # One span per policy: it wraps the full sharded/vmapped dispatch
+        # INCLUDING host materialization (the _run_* helpers np.asarray
+        # their outputs), so the duration is honest end-to-end sweep time.
+        with obs.span("sweep.policy", policy=name, backend=backend,
+                      solver_backend=str(solver_backend),
+                      n_scenarios=n_scenarios, n_devices=len(devices)):
+            if backend == "shard_map" and len(devices) > 1:
+                series[name] = _run_shard_map(name, n_bcd_iters, sb, tables,
+                                              knobs, n_scenarios, devices)
+            elif backend == "fleet" and len(devices) > 1:
+                series[name] = _run_fleet(name, n_bcd_iters, sb, tables,
                                           knobs, n_scenarios, devices)
-        elif backend == "fleet" and len(devices) > 1:
-            series[name] = _run_fleet(name, n_bcd_iters, sb, tables, knobs,
-                                      n_scenarios, devices)
-        else:
-            series[name] = _run_vmap(name, n_bcd_iters, sb, tables, knobs)
+            else:
+                series[name] = _run_vmap(name, n_bcd_iters, sb, tables,
+                                         knobs)
+        if obs.enabled():
+            # Per-(policy, family) AoPI histograms: the [T] fleet-mean
+            # slot series of every scenario, so exporters can quote
+            # p50/p95/p99 closed-form AoPI next to the timing series.
+            for ki, fam in enumerate(fams):
+                obs.histogram("sweep.aopi", policy=name, family=fam
+                              ).observe_many(series[name]["aopi"][ki])
 
     measured = predicted = None
     delay_models = None

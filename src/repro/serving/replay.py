@@ -31,6 +31,7 @@ from typing import Mapping, Sequence
 import jax
 import numpy as np
 
+from .. import obs
 from ..core import baselines
 from ..core.lbcd import LBCDController
 from ..core.profiles import HorizonTables
@@ -153,7 +154,11 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
         frames_cap=frames_cap, seed=seed, plan_window=plan_window,
         tables=system.horizon(n_epochs), telemetry_gain=telemetry_gain,
         delay_model=delay_model, replan_threshold=replan_threshold)
-    reps = svc.run(n_epochs)
+    # Every span/metric the service emits below here carries the policy
+    # and delay-model labels (replay_suite adds family/scenario on top).
+    with obs.label_context(policy=policy, delay_model=delay_model), \
+            obs.span("replay.scenario", n_epochs=n_epochs):
+        reps = svc.run(n_epochs)
     return ScenarioReplay(
         predicted=np.array([r.predicted_aopi for r in reps]),
         measured=np.array([r.measured_aopi for r in reps]),
@@ -230,13 +235,16 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
     for i in range(k):
         one = jax.tree.map(lambda x, i=i: x[i], tables)
         for policy in policies:
-            rep = replay_tables(
-                one, policy, n_epochs=n_epochs, v=v, p_min=p_min,
-                policy_params=policy_params, epoch_duration=epoch_duration,
-                frames_cap=frames_cap, seed=seed, plan_window=plan_window,
-                solver_backend=solver_backend,
-                telemetry_gain=telemetry_gain, delay_model=delay_model,
-                replan_threshold=replan_threshold)
+            with obs.label_context(family=fams[i], scenario=names[i]):
+                rep = replay_tables(
+                    one, policy, n_epochs=n_epochs, v=v, p_min=p_min,
+                    policy_params=policy_params,
+                    epoch_duration=epoch_duration,
+                    frames_cap=frames_cap, seed=seed,
+                    plan_window=plan_window,
+                    solver_backend=solver_backend,
+                    telemetry_gain=telemetry_gain, delay_model=delay_model,
+                    replan_threshold=replan_threshold)
             predicted[policy].append(rep.predicted)
             measured[policy].append(rep.measured)
             acc[policy].append(rep.acc)

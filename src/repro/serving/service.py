@@ -48,10 +48,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import baselines, binpack, lbcd, queues
 from ..core.lbcd import LBCDController
 from ..core.profiles import HorizonTables
 from .scheduler import AoPITracker, Frame, StreamQueue, StreamTelemetry
+
+
+def _policy_label(controller) -> str:
+    """Metric/span ``policy`` label for a controller (the sweep names
+    where recognizable, the class name otherwise)."""
+    names = {"LBCDController": "lbcd", "MINController": "min",
+             "DOSController": "dos", "JCABController": "jcab"}
+    cls = type(controller).__name__
+    return names.get(cls, cls.lower())
 
 
 #: Element budget (epochs x streams x frames) of one batched data-plane
@@ -238,8 +248,14 @@ class AnalyticsService:
         self.replan_threshold = (None if replan_threshold is None
                                  else float(replan_threshold))
         self.reports: list = []
+        # Legacy list attributes (kept for API compatibility); the same
+        # series also flow through the obs registry/trace stream — the
+        # counters and the lists are written by the same statements, so
+        # they reconcile exactly (tests/test_obs.py pins this).
         self.divergences: list[float] = []   # per-epoch measured/pred - 1
         self.early_replans: list[int] = []   # epochs where a window was cut
+        self._policy = _policy_label(controller)
+        self._replan_pending = False         # next plan is an early replan
         n = self._n_streams()
         self._acc_scale = np.ones(n)
         self._eff_scale = np.ones(n)
@@ -313,7 +329,9 @@ class AnalyticsService:
 
     def _slot_record(self, t: int) -> lbcd.SlotRecord:
         if self.planner != "scan":
-            return self.controller.step(t)
+            with obs.span("service.plan_window", policy=self._policy,
+                          reason="boundary", t0=t, k=1):
+                return self.controller.step(t)
         if self._plan is None or not (
                 self._plan_t0 <= t < self._plan_t0 + self._plan.q.shape[0]):
             k = self.plan_window
@@ -323,7 +341,16 @@ class AnalyticsService:
                 raise ValueError(
                     f"epoch {t} is past the replayed horizon of "
                     f"{self.tables.n_slots} slots")
-            self._plan = jax.tree.map(np.asarray, self.plan_horizon(k, t))
+            # The span covers dispatch AND materialization (np.asarray
+            # blocks on the device work), so its duration is the honest
+            # end-to-end planning latency; ``reason`` distinguishes
+            # divergence-triggered early replans from window boundaries.
+            reason = "early" if self._replan_pending else "boundary"
+            self._replan_pending = False
+            with obs.span("service.plan_window", policy=self._policy,
+                          reason=reason, t0=t, k=k):
+                self._plan = jax.tree.map(np.asarray,
+                                          self.plan_horizon(k, t))
             self._plan_t0 = t
             self._plan_meas = None           # re-measure the new window
         j = t - self._plan_t0
@@ -389,10 +416,14 @@ class AnalyticsService:
         n_epochs = int(res.q.shape[0])
         dec = res.decision
         lam_true, p_true = self._plane_rates_window(t0, n_epochs, dec)
-        return measure_window(
-            lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
-            epoch_duration=self.epoch_duration, frames_cap=self.frames_cap,
-            seed=self.seed, t0=t0, delay_model=self.delay_model)
+        with obs.span("service.measure_window", policy=self._policy,
+                      delay_model=self.delay_model, t0=t0,
+                      epochs=n_epochs, streams=int(lam_true.shape[-1])):
+            return measure_window(
+                lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
+                epoch_duration=self.epoch_duration,
+                frames_cap=self.frames_cap, seed=self.seed, t0=t0,
+                delay_model=self.delay_model)
 
     def _measure_epoch(self, t: int, dec):
         """Measured AoPI + telemetry for epoch ``t``. On the scan path the
@@ -410,10 +441,14 @@ class AnalyticsService:
             j = t - self._plan_t0
             return measured_w[j], tels[j]
         lam_true, p_true = self._plane_rates(t, dec)
-        return measure_mm1(
-            lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
-            epoch_duration=self.epoch_duration, frames_cap=self.frames_cap,
-            seed=self.seed, t=t, delay_model=self.delay_model)
+        with obs.span("service.measure_window", policy=self._policy,
+                      delay_model=self.delay_model, t0=t, epochs=1,
+                      streams=int(np.asarray(lam_true).shape[-1])):
+            return measure_mm1(
+                lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
+                epoch_duration=self.epoch_duration,
+                frames_cap=self.frames_cap, seed=self.seed, t=t,
+                delay_model=self.delay_model)
 
     def _update_telemetry(self, dec, tel: StreamTelemetry):
         """Fold measured rates back into the planner's belief scales
@@ -446,6 +481,10 @@ class AnalyticsService:
             0.25, 4.0)
 
     def run_epoch(self, t: int) -> EpochReport:
+        with obs.span("service.run_epoch", policy=self._policy, t=t):
+            return self._run_epoch(t)
+
+    def _run_epoch(self, t: int) -> EpochReport:
         rec = self._slot_record(t)
         dec = rec.decision
         # The reported prediction is the *calibrated* belief: closed form
@@ -469,6 +508,10 @@ class AnalyticsService:
         self.reports.append(rep)
         div = rep.measured_aopi / max(rep.predicted_aopi, 1e-12) - 1.0
         self.divergences.append(div)
+        obs.gauge("service.divergence", policy=self._policy).set(div)
+        obs.histogram("service.divergence.abs",
+                      policy=self._policy).observe(abs(div))
+        obs.counter("service.epochs", policy=self._policy).inc()
         self._maybe_replan(t, div)
         return rep
 
@@ -487,6 +530,12 @@ class AnalyticsService:
             self._plan = None
             self._plan_meas = None
             self.early_replans.append(t + 1)
+            self._replan_pending = True
+            # One instant event (and counter bump) per list append — the
+            # registry, the trace stream, and the legacy attribute stay
+            # reconciled by construction.
+            obs.event("service.early_replan", policy=self._policy,
+                      t=t + 1, divergence=float(div))
 
     # ------------------------------------------------------------------
     def _run_engine_epoch(self, rec) -> np.ndarray:

@@ -60,13 +60,12 @@ def test_elastic_resharding(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     n = len(jax.devices())
     tree = {"w": jax.random.normal(jax.random.PRNGKey(4), (8 * n, 4))}
-    mesh1 = jax.make_mesh((n,), ("a",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh1 = make_mesh((n,), ("a",))
     x = jax.device_put(tree["w"], NamedSharding(mesh1, P("a", None)))
     ckpt.save(str(tmp_path), 1, {"w": x})
     # "new topology": same devices, different mesh axis layout
-    mesh2 = jax.make_mesh((1, n), ("r", "c"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2 = make_mesh((1, n), ("r", "c"))
     sh2 = {"w": NamedSharding(mesh2, P(None, None))}
     restored, _ = ckpt.restore(str(tmp_path), tree, shardings=sh2)
     np.testing.assert_array_equal(np.asarray(restored["w"]),

@@ -36,8 +36,8 @@ def test_moe_a2a_matches_einsum_path():
         from repro.models import build
         from repro.models.common import init_params
         from repro.sharding import ctx, rules as rules_mod
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,2), ("data","model"))
         cfg = dataclasses.replace(configs.get("dbrx-132b").reduced(),
                                   n_experts=4, top_k=2,
                                   capacity_factor=2.0)
@@ -70,8 +70,8 @@ def test_hoisted_gather_matches_plain_step():
         from repro.sharding import ctx, rules as rules_mod
         from repro.training import optimizer as opt_mod
         from repro.training.train_step import make_train_step
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,2), ("data","model"))
         cfg = configs.get("qwen2.5-3b").reduced()
         model = build(cfg)
         params = init_params(model.template(), jax.random.PRNGKey(0))
@@ -112,13 +112,14 @@ def test_plan_cell_compiles_on_small_mesh():
         from repro import configs
         from repro.configs.base import SHAPES
         from repro.launch.specs import plan_cell
-        mesh = jax.make_mesh((2,4), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        from repro.launch.dryrun import cost_analysis
+        mesh = make_mesh((2,4), ("data","model"))
         for shape in ("train_4k", "decode_32k"):
             plan = plan_cell(configs.get("qwen2.5-3b"), SHAPES[shape],
                              mesh)
             c = plan.compile()
-            assert (c.cost_analysis() or {}).get("flops", 0) > 0
+            assert cost_analysis(c).get("flops", 0) > 0
         print("PLAN OK")
     """)
     assert "PLAN OK" in out

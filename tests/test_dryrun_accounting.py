@@ -72,7 +72,8 @@ def test_depth_extrapolation_matches_unrolled():
                 tr.jax.lax.scan = orig
         else:
             c = jax.jit(loss).lower(params, batch).compile()
-        return (c.cost_analysis() or {}).get("flops", 0.0)
+        from repro.launch.dryrun import cost_analysis
+        return cost_analysis(c).get("flops", 0.0)
 
     f1 = flops_at(1, False)     # <=2 periods auto-unrolls
     f2 = flops_at(2, False)

@@ -1,0 +1,307 @@
+"""``repro.obs``: registry/span/exporter units + the reconciliation
+contract — ``early_replans``/``divergences`` emitted through the obs
+registry must match the trace-event stream AND the legacy list
+attributes across a forced-replan replay of every scenario family."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs, scenarios
+from repro.obs import export, metrics, report
+from repro.serving import replay
+
+DIMS = dict(n_cameras=4, n_slots=6, n_servers=2,
+            mean_bandwidth_hz=15e6, mean_compute_flops=20e12)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_obs():
+    """Each test gets an empty registry/buffer and leaves none behind."""
+    obs.reset()
+    obs.configure(enabled=True)
+    yield
+    obs.configure(run_dir="")
+    obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# Registry + metric primitives
+# ---------------------------------------------------------------------------
+
+def test_registry_label_sets_are_distinct_series():
+    r = metrics.Registry()
+    r.counter("plans", policy="lbcd").inc()
+    r.counter("plans", policy="lbcd").inc(2)
+    r.counter("plans", policy="min").inc()
+    assert r.counter("plans", policy="lbcd").value == 3.0
+    assert r.counter("plans", policy="min").value == 1.0
+    assert len(r.collect("plans")) == 2
+    assert r.total("plans") == 4.0
+    assert r.get("plans", policy="dos") is None
+    assert len(r) == 2
+
+
+def test_registry_rejects_kind_conflicts():
+    r = metrics.Registry()
+    r.counter("x", a="1")
+    with pytest.raises(TypeError, match="already registered as counter"):
+        r.gauge("x", a="1")
+    # Same name under a different kind is still a conflict per-series
+    # only — a different label set is a fresh key.
+    with pytest.raises(TypeError):
+        r.histogram("x", a="1")
+
+
+def test_histogram_quantiles_within_bucket_resolution():
+    h = metrics.Histogram("lat", {})
+    rng = np.random.default_rng(0)
+    vals = np.exp(rng.normal(size=5000))
+    h.observe_many(vals)
+    assert h.count == 5000
+    assert h.total == pytest.approx(float(vals.sum()))
+    for q in (0.5, 0.95, 0.99, 1.0):
+        exact = float(np.quantile(vals, q))
+        # Geometric buckets with base 2**0.25 -> estimate within half a
+        # bucket (~10%) of the true quantile.
+        assert h.quantile(q) == pytest.approx(exact, rel=0.12)
+    assert h.vmin <= h.quantile(0.0) <= h.quantile(1.0) <= h.vmax
+
+
+def test_histogram_underflow_bucket_and_empty():
+    h = metrics.Histogram("d", {})
+    assert h.quantile(0.5) == 0.0
+    h.observe(0.0)
+    h.observe(-1.0)
+    h.observe(4.0)
+    assert h.count == 3 and h.zero_count == 2
+    assert h.quantile(0.5) == 0.0          # 2/3 of mass at <= 0
+    assert h.quantile(1.0) == pytest.approx(4.0)
+
+
+# ---------------------------------------------------------------------------
+# Disabled fast path
+# ---------------------------------------------------------------------------
+
+def test_disabled_path_is_shared_noop_singletons():
+    obs.configure(enabled=False)
+    assert obs.counter("c") is metrics.NOOP_METRIC
+    assert obs.gauge("g") is metrics.NOOP_METRIC
+    assert obs.histogram("h") is metrics.NOOP_METRIC
+    assert obs.span("s") is obs.NOOP_SPAN
+    with obs.span("s", policy="lbcd"):
+        obs.counter("c").inc()
+        obs.event("e", t=3)
+        obs.count_dispatch("k")
+    assert len(obs.registry()) == 0
+    assert obs.events() == []
+    obs.configure(enabled=True)
+    obs.counter("c").inc()
+    assert obs.registry().total("c") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Spans, nesting, label context
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_builds_parent_tree_and_inherits_labels():
+    with obs.label_context(policy="lbcd", family="steady_ar1"):
+        with obs.span("outer", k=2) as outer:
+            with obs.span("inner"):
+                obs.event("tick", t=7)
+    evs = {e["name"]: e for e in obs.events()}
+    assert set(evs) == {"outer", "inner", "tick"}
+    assert evs["outer"]["parent"] == 0
+    assert evs["inner"]["parent"] == outer.sid
+    assert evs["tick"]["parent"] == evs["inner"]["id"]
+    assert evs["tick"]["ph"] == "i"
+    for e in evs.values():
+        assert e["args"]["policy"] == "lbcd"
+        assert e["args"]["family"] == "steady_ar1"
+    assert evs["outer"]["args"]["k"] == 2
+    assert evs["outer"]["dur"] >= evs["inner"]["dur"] >= 0.0
+
+
+def test_span_duration_feeds_latency_histogram_with_string_labels_only():
+    with obs.span("plan", policy="lbcd", t0=3):
+        pass
+    h = obs.registry().get("plan.seconds", policy="lbcd")  # t0 not a label
+    assert h is not None and h.count == 1
+    assert obs.events()[0]["args"] == {"policy": "lbcd", "t0": 3}
+
+
+def test_event_bumps_count_counter():
+    with obs.label_context(family="outage"):
+        obs.event("service.early_replan", policy="lbcd", t=4)
+        obs.event("service.early_replan", policy="lbcd", t=5)
+    c = obs.registry().get("service.early_replan.count",
+                           policy="lbcd", family="outage")
+    assert c is not None and c.value == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Exporters + artifacts + report round trip
+# ---------------------------------------------------------------------------
+
+def test_prometheus_text_exposition():
+    obs.counter("plan.count", policy="lbcd").inc(3)
+    obs.gauge("service.divergence", policy="lbcd").set(-0.25)
+    obs.histogram("plan.seconds", policy="lbcd").observe_many(
+        [0.01, 0.02, 0.04])
+    txt = obs.prometheus_text()
+    assert 'repro_plan_count_total{policy="lbcd"} 3' in txt
+    assert 'repro_service_divergence{policy="lbcd"} -0.25' in txt
+    assert 'repro_plan_seconds_count{policy="lbcd"} 3' in txt
+    assert 'quantile="0.99"' in txt
+    assert "# TYPE repro_plan_seconds summary" in txt
+    # Every line is `# ...` or `name{labels} value`.
+    for line in txt.strip().splitlines():
+        if not line.startswith("#"):
+            name_part, val = line.rsplit(" ", 1)
+            float(val)
+            assert name_part.startswith("repro_")
+
+
+def test_artifacts_and_report_round_trip(tmp_path):
+    run_dir = str(tmp_path / "run0")
+    obs.configure(run_dir=run_dir)
+    with obs.label_context(policy="lbcd", family="steady_ar1"):
+        for reason in ("boundary", "early"):
+            with obs.span("service.plan_window", reason=reason):
+                pass
+        with obs.span("service.run_epoch"):
+            pass
+        obs.event("service.early_replan", t=1)
+        obs.gauge("service.divergence").set(0.1)
+    paths = obs.write_artifacts()
+    # Streamed JSONL and the snapshot artifacts agree.
+    streamed = [json.loads(line)
+                for line in open(paths["trace_jsonl"]) if line.strip()]
+    assert [e["name"] for e in streamed] == \
+        [e["name"] for e in obs.events()]
+    chrome = json.load(open(paths["chrome_trace"]))
+    assert len(chrome["traceEvents"]) == len(streamed)
+    assert all(ev["ts"] >= 0 for ev in chrome["traceEvents"])
+    for line in open(paths["metrics_jsonl"]):
+        json.loads(line)
+    assert "repro_service_plan_window_seconds" in \
+        open(paths["prometheus"]).read()
+    # The module dashboard renders from the files alone.
+    txt = report.build_report(report.load_events(run_dir),
+                              report.load_metrics(run_dir))
+    assert "lbcd" in txt and "steady_ar1" in txt
+    assert "plans/s" in txt and "p99 replan" in txt
+    assert "COUNTER MISMATCH" not in txt
+
+
+def test_report_flags_counter_mismatch():
+    events = [{"ph": "i", "name": "service.early_replan", "ts": 0.0,
+               "dur": 0.0, "args": {"policy": "lbcd", "family": "f"}}]
+    mets = [{"name": "service.early_replan.count", "type": "counter",
+             "labels": {"policy": "lbcd", "family": "f"}, "value": 3.0}]
+    assert "[COUNTER MISMATCH]" in report.build_report(events, mets)
+    mets[0]["value"] = 1.0
+    assert "MISMATCH" not in report.build_report(events, mets)
+
+
+# ---------------------------------------------------------------------------
+# Hot-path instrumentation: solve_slot host dispatches
+# ---------------------------------------------------------------------------
+
+def test_solve_slot_concrete_dispatch_records_timed_span():
+    from repro.core import lbcd, profiles
+    system = profiles.EdgeSystem(n_cameras=3, n_servers=2, n_slots=4,
+                                 seed=0)
+    ctrl = lbcd.LBCDController(system, v=10.0, p_min=0.6)
+    ctrl.step(0)                    # virtual + per-server solve: 2 calls
+    h = obs.registry().get("bcd.solve_slot.seconds", solver_backend="jnp")
+    assert h is not None and h.count == 2
+    spans = [e for e in obs.events() if e["name"] == "bcd.solve_slot"]
+    assert len(spans) == 2
+    assert all(e["args"]["n_cameras"] == 3 for e in spans)
+
+
+# ---------------------------------------------------------------------------
+# The reconciliation contract (tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+def test_forced_replan_reconciles_obs_with_legacy_lists_all_families():
+    """Forced-replan replay (hair-trigger ``replan_threshold``) over every
+    registered family: the ``service.early_replan`` counter, the instant
+    trace events, the ``reason="early"`` plan spans, and the legacy
+    ``AnalyticsService.early_replans`` list must agree exactly — and the
+    divergence series through the registry must match ``svc.divergences``.
+    """
+    s = scenarios.suite(**DIMS)
+    fams = sorted(set(s.families))
+    assert len(fams) >= 6
+    n_epochs = 4
+    reps = {}
+    for i in range(s.n_scenarios):
+        one = jax.tree.map(lambda x, i=i: x[i], s.tables)
+        with obs.label_context(family=s.families[i], scenario=s.names[i]):
+            reps[(s.families[i], s.names[i])] = replay.replay_tables(
+                one, "lbcd", n_epochs=n_epochs, plan_window=2,
+                replan_threshold=1e-9, epoch_duration=300.0)
+
+    events = obs.events()
+    reg = obs.registry()
+    total_replans = 0
+    for (fam, name), rep in reps.items():
+        svc = rep.service
+        n = len(svc.early_replans)
+        assert n > 0, f"{name}: threshold 1e-9 must force replans"
+        total_replans += n
+        labels = dict(policy="lbcd", delay_model="mm1",
+                      family=fam, scenario=name)
+        evs = [e for e in events if e["args"].get("scenario") == name]
+
+        # 1. instant events == legacy list (same epochs, same order)
+        replan_evs = [e for e in evs
+                      if e["name"] == report.REPLAN_EVENT]
+        assert [e["args"]["t"] for e in replan_evs] == svc.early_replans
+
+        # 2. registry counter == trace stream == legacy list
+        c = reg.get(report.REPLAN_EVENT + ".count", **labels)
+        assert c is not None and c.value == len(replan_evs) == n
+
+        # 3. the NEXT plan span after each trigger carries reason="early"
+        plan_spans = [e for e in evs if e["name"] == report.PLAN_SPAN]
+        early = [e for e in plan_spans
+                 if e["args"].get("reason") == "early"]
+        assert len(early) == n
+        assert plan_spans[0]["args"]["reason"] == "boundary"
+
+        # 4. divergence series through the registry matches the list
+        divs = svc.divergences
+        assert reg.get("service.epochs", **labels).value == len(divs) \
+            == n_epochs
+        assert len([e for e in evs
+                    if e["name"] == report.EPOCH_SPAN]) == n_epochs
+        h = reg.get("service.divergence.abs", **labels)
+        assert h.count == len(divs)
+        assert h.total == pytest.approx(float(np.abs(divs).sum()))
+        g = reg.get("service.divergence", **labels)
+        assert g.value == pytest.approx(float(divs[-1]))
+
+    assert reg.total(report.REPLAN_EVENT + ".count") == total_replans
+
+    # The dashboard renders this run with per policy x family rows and no
+    # reconciliation flag (the acceptance criterion's report source).
+    txt = report.build_report(events, reg.snapshot())
+    assert "COUNTER MISMATCH" not in txt
+    for fam in fams:
+        assert fam in txt
+    row = [ln for ln in txt.splitlines() if fams[0] in ln][0]
+    assert "ms" in row                     # plan latency columns rendered
+
+
+def test_run_metadata_carries_obs_snapshot():
+    import benchmarks.common as common
+    obs.counter("queues.batch_dispatches", delay_model="mm1").inc(4)
+    meta = common.run_metadata()
+    assert meta["obs"]["enabled"] is True
+    m = meta["obs"]["metrics"]["queues.batch_dispatches"]
+    assert m["total"] == 4.0
+    assert json.dumps(meta, default=float)   # JSON-serializable stamp

@@ -94,8 +94,8 @@ def test_compressed_psum_matches_mean():
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((n,), ("d",))
     x = jax.random.normal(KEY, (n, 64))
 
     f = shard_map(lambda v: compression.compressed_psum(v[0], "d")[None],
