@@ -1,0 +1,65 @@
+"""Fault-plane overhead and degraded-mode cost (BENCH_faults).
+
+Three replay modes over the same churn scenario, per policy:
+
+  * ``clean``       — no ``faults`` kwarg at all (the pre-fault-plane
+    call shape);
+  * ``faults_none`` — ``faults=None`` explicitly: the bitwise no-op path
+    whose cost must match ``clean`` (the fault plane is free when off);
+  * ``storm``       — ``repro.faults.storm_plan``: every fault kind at
+    once, exercising the churn-masked rollouts, the telemetry gating,
+    and every rung of the graceful-degradation ladder.
+
+Rows carry wall seconds, the storm/clean slowdown, and the storm run's
+fallback / degraded-epoch / telemetry-gap counts, so the trajectory
+shows both the off-path staying free and the degraded-mode cost staying
+bounded.
+"""
+import numpy as np
+
+from repro import scenarios
+from repro.faults import storm_plan
+from repro.serving.replay import replay_tables
+
+from .common import best_of, emit
+
+DIMS = dict(n_cameras=8, n_slots=16, n_servers=2,
+            mean_bandwidth_hz=15e6, mean_compute_flops=20e12)
+
+
+def run(full: bool = False):
+    policies = ("lbcd", "min", "dos", "jcab") if full else ("lbcd", "min")
+    repeats = 3 if full else 2
+    tables = scenarios.build("camera_churn", **DIMS)
+    plan = storm_plan(DIMS["n_slots"], seed=0)
+    rows = []
+    for policy in policies:
+        kw = dict(plan_window=4, telemetry_gain=0.2)
+        # Warm the compiled planner/data-plane executables once so the
+        # timed repeats measure execution, not compilation.
+        replay_tables(tables, policy, **kw)
+        clean_s = best_of(
+            lambda: replay_tables(tables, policy, **kw), repeats)
+        none_s = best_of(
+            lambda: replay_tables(tables, policy, faults=None, **kw),
+            repeats)
+        replay_tables(tables, policy, faults=plan, **kw)   # warm fallback
+        storm_s = best_of(
+            lambda: replay_tables(tables, policy, faults=plan, **kw),
+            repeats)
+        rep = replay_tables(tables, policy, faults=plan, **kw)
+        svc = rep.service
+        assert np.isfinite(rep.measured).all()
+        rows.append([policy, clean_s, none_s, storm_s, storm_s / clean_s,
+                     len(svc.fallbacks), len(svc.degraded_epochs),
+                     len(svc.telemetry_gaps)])
+        print(f"# {policy:<5s} clean {clean_s * 1e3:8.1f} ms | "
+              f"faults=None {none_s * 1e3:8.1f} ms | "
+              f"storm {storm_s * 1e3:8.1f} ms ({storm_s / clean_s:4.2f}x) "
+              f"| fb={len(svc.fallbacks)} degr={len(svc.degraded_epochs)} "
+              f"gaps={len(svc.telemetry_gaps)}", flush=True)
+    emit("BENCH_faults", rows,
+         ["policy", "clean_s", "faults_none_s", "storm_s",
+          "storm_over_clean", "fallbacks", "degraded_epochs",
+          "telemetry_gaps"])
+    return rows

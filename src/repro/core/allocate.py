@@ -157,7 +157,7 @@ def _waterfill(h_fn, closed_form, lo, hi, server_id, n_servers,
                                              "final_inner_iters"))
 def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers,
                         outer_iters: int = 16, inner_iters: int = 6,
-                        final_inner_iters: int = 20):
+                        final_inner_iters: int = 20, active=None):
     """Allocate bandwidth b[n] (Hz) per server budget.
 
     Args:
@@ -168,6 +168,10 @@ def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers,
       outer/inner/final_inner_iters: solver effort; the defaults reach
         float32 accuracy, Algorithm 1 uses a cheaper setting for its
         interior BCD iterations (only the final allocation must be tight).
+      active: optional per-camera churn mask — inactive cameras (0) get
+        **exactly** zero allocation (their box collapses to [0, 0], and
+        ``_waterfill``'s final ``clip`` pins them there), so their budget
+        share redistributes to the live cameras via the segment sums.
     """
     B = budgets[server_id]
     lam_scale = k * B                    # lam at full budget
@@ -176,6 +180,10 @@ def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers,
     hi = jnp.where(pol == aopi.LCFSP, 1.0,
                    jnp.minimum(lam_star / jnp.maximum(lam_scale, _EPS), 1.0))
     lo = jnp.full_like(hi, 1e-9)
+    if active is not None:
+        act = active > 0
+        lo = jnp.where(act, lo, 0.0)
+        hi = jnp.where(act, hi, 0.0)
 
     def h_fn(u):
         return _h_bandwidth(u, lam_scale, mu, p, pol)
@@ -197,24 +205,33 @@ def waterfill_bandwidth(k, p, pol, mu, server_id, budgets, n_servers,
 def waterfill_compute(inv_xi, p, pol, lam, server_id, budgets, n_servers,
                       stability_margin: float = 1.05,
                       outer_iters: int = 16, inner_iters: int = 6,
-                      final_inner_iters: int = 20):
+                      final_inner_iters: int = 20, active=None):
     """Allocate computation c[n] (FLOPS) per server budget.
 
     Args:
       inv_xi: mu-per-FLOPS coefficient, 1 / xi(r, m)  [frames/s/FLOPS].
       lam: fixed per-camera transmission rates.
+      active: optional per-camera churn mask — see
+        :func:`waterfill_bandwidth`; inactive cameras get exactly zero
+        compute and free their share for survivors.
     """
     C = budgets[server_id]
     mu_scale = inv_xi * C
     floor = jnp.where(pol == aopi.FCFS,
                       stability_margin * lam / jnp.maximum(mu_scale, _EPS),
                       1e-9)
+    if active is not None:
+        floor = jnp.where(active > 0, floor, 0.0)
     # Best effort if FCFS floors alone exceed a server's budget.
     floor_tot = jax.ops.segment_sum(floor, server_id, num_segments=n_servers)
     scale = jnp.minimum(1.0, 1.0 / jnp.maximum(floor_tot, _EPS))[server_id]
     floor = floor * scale
     lo = jnp.clip(floor, 1e-9, 1.0)
     hi = jnp.ones_like(lo)
+    if active is not None:
+        act = active > 0
+        lo = jnp.where(act, lo, 0.0)
+        hi = jnp.where(act, hi, 0.0)
 
     def h_fn(v):
         return _h_compute(v, mu_scale, lam, p, pol)

@@ -83,6 +83,29 @@ def aopi_best(lam, mu, p):
     return jnp.minimum(aopi_fcfs(lam, mu, p), aopi_lcfsp(lam, mu, p))
 
 
+def aopi_masked(lam, mu, p, policy, active=None):
+    """AoPI with the zero-rate corner masked out.
+
+    A churned-out camera has ``lam = mu = 0`` (and ``active = 0`` when a
+    fleet mask is threaded through) — Theorems 1-2 divide by both rates,
+    so the raw expressions return inf/NaN there. This wrapper evaluates
+    the closed forms on rate values substituted to a safe interior point
+    for dead streams and returns exactly ``0.0`` for them, so fleet
+    reductions (means, Lyapunov drift) stay finite. Live streams get the
+    bit-exact ``aopi`` value (the substitution only touches dead lanes).
+    """
+    lam = jnp.asarray(lam)
+    mu = jnp.asarray(mu)
+    p = jnp.asarray(p)
+    live = (lam > 0) & (mu > 0)
+    if active is not None:
+        live = live & (jnp.asarray(active) > 0)
+    lam_s = jnp.where(live, lam, 1.0)
+    mu_s = jnp.where(live, mu, 2.0)
+    p_s = jnp.where(live, p, 0.5)
+    return jnp.where(live, aopi(lam_s, mu_s, p_s, policy), 0.0)
+
+
 # ---------------------------------------------------------------------------
 # Analytic derivatives (used by allocator tests and for fast Newton steps;
 # jax.grad of the functions above agrees — asserted in tests).

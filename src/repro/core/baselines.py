@@ -44,13 +44,28 @@ def _thm3_policy(lam, mu, p):
 # Device-resident rollout engines (one lax.scan per horizon).
 # ---------------------------------------------------------------------------
 
-def _eval_decision(acc_t, xi, size, eff, r_idx, m_idx, b, c):
+def _eval_decision(acc_t, xi, size, eff, r_idx, m_idx, b, c, active=None):
     """Theorem-3 policy + closed-form AoPI for a fixed configuration (the
-    jit twin of ``_thm3_policy`` + ``_evaluate``)."""
+    jit twin of ``_thm3_policy`` + ``_evaluate``). With a churn mask the
+    dead cameras' outputs are forced to exactly 0 and the score is the
+    live-fleet mean (the maskless path is trace-identical to pre-churn)."""
     n = acc_t.shape[0]
     lam = b * eff / size[r_idx]
     mu = c / xi[m_idx, r_idx]
     p = acc_t[jnp.arange(n), m_idx, r_idx]
+    if active is not None:
+        act = (active > 0).astype(acc_t.dtype)
+        lam = lam * act
+        mu = mu * act
+        pol = aopi.optimal_policy(jnp.maximum(lam, 1e-9),
+                                  jnp.maximum(mu, 1e-9), p)
+        a = aopi.aopi_masked(lam, mu, p, pol, active=act)
+        p = p * act
+        b = b * act
+        c = c * act
+        n_live = jnp.maximum(jnp.sum(act), 1.0)
+        return bcd.SlotDecision(r_idx, m_idx, pol, b, c, lam, mu, p, a,
+                                jnp.sum(a) / n_live)
     pol = aopi.optimal_policy(lam, mu, p)
     lam_e = jnp.maximum(lam, 1e-9)
     mu_e = jnp.maximum(mu, 1e-9)
@@ -61,10 +76,11 @@ def _eval_decision(acc_t, xi, size, eff, r_idx, m_idx, b, c):
 
 
 def _scan_result(step, tables: HorizonTables) -> RolloutResult:
-    _, (decs, assigns, qs) = jax.lax.scan(
-        step, jnp.float32(0.0),
-        (tables.acc, profiles.eff_sequence(tables),
-         tables.budgets_b, tables.budgets_c))
+    xs = (tables.acc, profiles.eff_sequence(tables),
+          tables.budgets_b, tables.budgets_c)
+    if tables.active is not None:
+        xs = xs + (tables.active,)
+    _, (decs, assigns, qs) = jax.lax.scan(step, jnp.float32(0.0), xs)
     return RolloutResult(aopi=decs.aopi, acc=decs.acc, q=qs, assign=assigns,
                          decision=decs)
 
@@ -80,16 +96,21 @@ def rollout_min(tables: HorizonTables, v=10.0, n_bcd_iters: int = 4,
     no accuracy queue (q == 0), as a single scan."""
     n = tables.acc.shape[1]
     virt_id = jnp.zeros((n,), jnp.int32)
+    has_active = tables.active is not None
 
     def step(q, xs):
-        acc_t, eff_t, bb, bc = xs
+        if has_active:
+            acc_t, eff_t, bb, bc, act_t = xs
+        else:
+            acc_t, eff_t, bb, bc = xs
+            act_t = None
         dec = bcd.solve_slot(acc_t, tables.xi, tables.size, eff_t,
                              virt_id, jnp.sum(bb)[None], jnp.sum(bc)[None],
                              jnp.float32(0.0), v, n_servers=1,
                              n_iters=n_bcd_iters, method=method,
                              solver_effort=solver_effort,
                              solver_backend=solver_backend,
-                             interpret=interpret)
+                             interpret=interpret, active=act_t)
         return q, (dec, virt_id, q)
 
     return _scan_result(step, tables)
@@ -124,9 +145,13 @@ def rollout_dos(tables: HorizonTables, weight=1.0,
     n_servers = tables.budgets_b.shape[1]
     xi, size = tables.xi, tables.size
     scan = _baseline_scan(solver_backend, n)
+    has_active = tables.active is not None
 
     def step(q, xs):
-        acc_t, eff_t, bb, bc = xs
+        if has_active:
+            acc_t, eff_t, bb, bc, act_t = xs
+        else:
+            acc_t, eff_t, bb, bc = xs
         b0 = jnp.sum(bb) / n
         c0 = jnp.sum(bc) / n
         m_idx, r_idx = scan(jnp.full((n,), b0), jnp.full((n,), c0), acc_t,
@@ -134,13 +159,34 @@ def rollout_dos(tables: HorizonTables, weight=1.0,
 
         w_b = jnp.sqrt(size[r_idx] / eff_t)
         w_c = jnp.sqrt(xi[m_idx, r_idx])
-        assign = binpack.first_fit_jax(w_b / w_b.sum() * jnp.sum(bb),
-                                       w_c / w_c.sum() * jnp.sum(bc), bb, bc)
-        den_b = jax.ops.segment_sum(w_b, assign, num_segments=n_servers)
-        den_c = jax.ops.segment_sum(w_c, assign, num_segments=n_servers)
-        b = bb[assign] * w_b / den_b[assign]
-        c = bc[assign] * w_c / den_c[assign]
-        dec = _eval_decision(acc_t, xi, size, eff_t, r_idx, m_idx, b, c)
+        if has_active:
+            # Dead cameras carry zero weight, so their proportional share
+            # of every server's budget flows to the survivors; the guards
+            # keep all-dead servers at 0/eps = 0 instead of 0/0 = NaN.
+            act = (act_t > 0).astype(w_b.dtype)
+            w_b = w_b * act
+            w_c = w_c * act
+            eps = jnp.asarray(1e-30, w_b.dtype)
+            assign = binpack.first_fit_jax(
+                w_b / jnp.maximum(w_b.sum(), eps) * jnp.sum(bb),
+                w_c / jnp.maximum(w_c.sum(), eps) * jnp.sum(bc), bb, bc)
+            den_b = jnp.maximum(jax.ops.segment_sum(
+                w_b, assign, num_segments=n_servers), eps)
+            den_c = jnp.maximum(jax.ops.segment_sum(
+                w_c, assign, num_segments=n_servers), eps)
+            b = bb[assign] * w_b / den_b[assign]
+            c = bc[assign] * w_c / den_c[assign]
+            dec = _eval_decision(acc_t, xi, size, eff_t, r_idx, m_idx, b, c,
+                                 active=act)
+        else:
+            assign = binpack.first_fit_jax(
+                w_b / w_b.sum() * jnp.sum(bb),
+                w_c / w_c.sum() * jnp.sum(bc), bb, bc)
+            den_b = jax.ops.segment_sum(w_b, assign, num_segments=n_servers)
+            den_c = jax.ops.segment_sum(w_c, assign, num_segments=n_servers)
+            b = bb[assign] * w_b / den_b[assign]
+            c = bc[assign] * w_c / den_c[assign]
+            dec = _eval_decision(acc_t, xi, size, eff_t, r_idx, m_idx, b, c)
         return q, (dec, assign, q)
 
     return _scan_result(step, tables)
@@ -164,11 +210,24 @@ def rollout_jcab(tables: HorizonTables, latency_cap=0.5,
     counts = jax.ops.segment_sum(jnp.ones((n,)), assign,
                                  num_segments=n_servers)
     share = (1.0 / jnp.maximum(counts, 1.0))[assign]
+    has_active = tables.active is not None
 
     def step(q, xs):
-        acc_t, eff_t, bb, bc = xs
-        b = bb[assign] * share
-        c = bc[assign] * share
+        if has_active:
+            acc_t, eff_t, bb, bc, act_t = xs
+            act = (act_t > 0).astype(bb.dtype)
+            # Per-slot live share (the static round-robin assignment
+            # stays, but a server splits its budget over live members).
+            counts_t = jax.ops.segment_sum(act, assign,
+                                           num_segments=n_servers)
+            share_t = act * (1.0 / jnp.maximum(counts_t, 1.0))[assign]
+            b = bb[assign] * share_t
+            c = bc[assign] * share_t
+        else:
+            acc_t, eff_t, bb, bc = xs
+            act = None
+            b = bb[assign] * share
+            c = bc[assign] * share
         m_idx = jnp.zeros((n,), jnp.int32)
         r_idx = jnp.zeros((n,), jnp.int32)
         for _ in range(n_rounds):
@@ -176,13 +235,23 @@ def rollout_jcab(tables: HorizonTables, latency_cap=0.5,
                                 threshold=latency_cap)
             size_n = size[r_idx]
             xi_n = xi[m_idx, r_idx]
-            den_b = jax.ops.segment_sum(size_n, assign,
-                                        num_segments=n_servers)
-            den_c = jax.ops.segment_sum(xi_n, assign,
-                                        num_segments=n_servers)
+            if has_active:
+                size_n = size_n * act
+                xi_n = xi_n * act
+                eps = jnp.asarray(1e-30, size_n.dtype)
+                den_b = jnp.maximum(jax.ops.segment_sum(
+                    size_n, assign, num_segments=n_servers), eps)
+                den_c = jnp.maximum(jax.ops.segment_sum(
+                    xi_n, assign, num_segments=n_servers), eps)
+            else:
+                den_b = jax.ops.segment_sum(size_n, assign,
+                                            num_segments=n_servers)
+                den_c = jax.ops.segment_sum(xi_n, assign,
+                                            num_segments=n_servers)
             b = bb[assign] * size_n / den_b[assign]
             c = bc[assign] * xi_n / den_c[assign]
-        dec = _eval_decision(acc_t, xi, size, eff_t, r_idx, m_idx, b, c)
+        dec = _eval_decision(acc_t, xi, size, eff_t, r_idx, m_idx, b, c,
+                             active=act)
         return q, (dec, assign, q)
 
     return _scan_result(step, tables)

@@ -162,7 +162,7 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
                method: Literal["waterfill", "interior"] = "waterfill",
                solver_effort: Literal["fast", "seed"] = "fast",
                solver_backend: str = "jnp",
-               interpret: bool | None = None):
+               interpret: bool | None = None, active=None):
     """Run Algorithm 1 and return a SlotDecision (of jnp arrays).
 
     Args:
@@ -189,11 +189,20 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
         agrees with "jnp" to float32 tolerance.
       interpret: pallas interpret-mode override (None = auto: interpret
         everywhere except on real TPUs — the CPU/CI path).
+      active: optional [N] fleet-churn mask (1 = live). Inactive cameras
+        get exactly zero bandwidth/compute (their budget share
+        redistributes to survivors) and are excluded from the drift-plus-
+        penalty means. The masked path runs on the jnp backend (the
+        pallas kernels take no mask — a masked solve silently forces
+        jnp); ``active=None`` traces the identical program as before the
+        parameter existed.
     """
     kwargs = dict(n_servers=n_servers, n_iters=n_iters, method=method,
                   solver_effort=solver_effort,
                   solver_backend=solver_backend, interpret=interpret)
     args = (acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V)
+    if active is not None:
+        kwargs["active"] = active
     if obs.enabled():
         # Per-backend dispatch accounting: concrete (host) calls get a
         # timed span — dispatch through materialization of nothing, i.e.
@@ -204,7 +213,8 @@ def solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
         spec = resolve_spec(solver_backend, acc.shape[0], method=method)
         backend = (spec.backend if spec.tile_n is None
                    else f"{spec.backend}:tiled")
-        if any(isinstance(a, jax.core.Tracer) for a in args):
+        operands = args if active is None else args + (active,)
+        if any(isinstance(a, jax.core.Tracer) for a in operands):
             obs.counter("bcd.solve_slot.traces",
                         solver_backend=backend).inc()
         else:
@@ -223,17 +233,32 @@ def _solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
                 method: Literal["waterfill", "interior"] = "waterfill",
                 solver_effort: Literal["fast", "seed"] = "fast",
                 solver_backend: str = "jnp",
-                interpret: bool | None = None):
+                interpret: bool | None = None, active=None):
     spec = resolve_spec(solver_backend, acc.shape[0], method=method)
+    if active is not None:
+        if method == "interior":
+            raise ValueError("method='interior' does not support a fleet-"
+                             "churn mask; use method='waterfill'")
+        # The pallas kernels take no churn mask — a masked solve runs on
+        # the jnp reference path regardless of the requested backend.
+        spec = SolverSpec("jnp", None, spec.fuse)
     use_pallas = spec.backend == "pallas"
     if use_pallas and method != "waterfill":
         raise ValueError("solver_backend='pallas' fuses the water-filling "
                          "solver; method='interior' only supports the jnp "
                          "backend")
     n = acc.shape[0]
-    counts = jax.ops.segment_sum(jnp.ones((n,)), server_id,
-                                 num_segments=n_servers)
-    share = (1.0 / jnp.maximum(counts, 1.0))[server_id]
+    if active is not None:
+        act = (active > 0).astype(acc.dtype)
+        eff = eff * act           # lam = 0 for churned-out cameras
+        counts = jax.ops.segment_sum(act, server_id,
+                                     num_segments=n_servers)
+        share = act * (1.0 / jnp.maximum(counts, 1.0))[server_id]
+    else:
+        act = None
+        counts = jax.ops.segment_sum(jnp.ones((n,)), server_id,
+                                     num_segments=n_servers)
+        share = (1.0 / jnp.maximum(counts, 1.0))[server_id]
     b = budgets_b[server_id] * share
     c = budgets_c[server_id] * share
 
@@ -273,10 +298,11 @@ def _solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
         def make_pair(kw):
             def pair(k, p, pol, mu, inv_xi):
                 b = allocate.waterfill_bandwidth(
-                    k, p, pol, mu, server_id, budgets_b, n_servers, **kw)
+                    k, p, pol, mu, server_id, budgets_b, n_servers,
+                    active=act, **kw)
                 c = allocate.waterfill_compute(
                     inv_xi, p, pol, b * k, server_id, budgets_c,
-                    n_servers, **kw)
+                    n_servers, active=act, **kw)
                 return b, c
             return pair
 
@@ -323,8 +349,16 @@ def _solve_slot(acc, xi, size, eff, server_id, budgets_b, budgets_c, q, V,
 
     lam, mu = _rates(b, c, r_idx, m_idx, eff, size, xi)
     p = acc[jnp.arange(n), m_idx, r_idx]
-    a = aopi.aopi(lam, mu, p, pol)
-    score = -q * jnp.mean(p) + V * jnp.mean(a)
+    if act is not None:
+        # Masked evaluation: dead cameras contribute exactly 0 to every
+        # per-camera array and the means run over the live count only.
+        a = aopi.aopi_masked(lam, mu, p, pol, active=act)
+        p = p * act
+        n_live = jnp.maximum(jnp.sum(act), 1.0)
+        score = -q * jnp.sum(p) / n_live + V * jnp.sum(a) / n_live
+    else:
+        a = aopi.aopi(lam, mu, p, pol)
+        score = -q * jnp.mean(p) + V * jnp.mean(a)
     return SlotDecision(r_idx, m_idx, pol, b, c, lam, mu, p, a, score)
 
 

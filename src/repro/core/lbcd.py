@@ -146,24 +146,40 @@ def rollout(tables: HorizonTables, v, p_min, q0=0.0,
                               method=method, solver_effort=solver_effort,
                               solver_backend=solver_backend,
                               interpret=interpret)
+    # ``tables.active is None`` is a static (trace-time) branch: the
+    # maskless program below is byte-identical to the pre-churn engine.
+    has_active = tables.active is not None
 
     def step(q, xs):
-        acc_t, eff_t, bb, bc = xs
+        if has_active:
+            acc_t, eff_t, act_t, bb, bc = xs
+        else:
+            acc_t, eff_t, bb, bc = xs
+            act_t = None
         # Algorithm 2 lines 1-2: virtual-server ideal demands.
         virt = solve(acc_t, tables.xi, tables.size, eff_t, virt_id,
-                     jnp.sum(bb)[None], jnp.sum(bc)[None], q, v, n_servers=1)
+                     jnp.sum(bb)[None], jnp.sum(bc)[None], q, v, n_servers=1,
+                     active=act_t)
         # Algorithm 2 lines 3-9: first-fit placement (jit-safe).
         assign = binpack.first_fit_jax(virt.b, virt.c, bb, bc)
         # Algorithm 2 line 10: re-solve per real server.
         dec = solve(acc_t, tables.xi, tables.size, eff_t, assign,
-                    bb, bc, q, v, n_servers=n_servers)
-        q_next = lyapunov.queue_update(q, jnp.mean(dec.acc), p_min)  # Eq. 44
+                    bb, bc, q, v, n_servers=n_servers, active=act_t)
+        if has_active:
+            # Eq. 44 over the live fleet only — churned-out cameras must
+            # not drag the accuracy constraint toward zero.
+            acc_mean = jnp.sum(dec.acc) / jnp.maximum(jnp.sum(act_t), 1.0)
+        else:
+            acc_mean = jnp.mean(dec.acc)
+        q_next = lyapunov.queue_update(q, acc_mean, p_min)  # Eq. 44
         return q_next, (dec, assign, q_next)
 
+    xs = ((tables.acc, profiles.eff_sequence(tables), tables.active,
+           tables.budgets_b, tables.budgets_c) if has_active else
+          (tables.acc, profiles.eff_sequence(tables),
+           tables.budgets_b, tables.budgets_c))
     _, (decs, assigns, qs) = jax.lax.scan(
-        step, jnp.asarray(q0, jnp.float32),
-        (tables.acc, profiles.eff_sequence(tables),
-         tables.budgets_b, tables.budgets_c))
+        step, jnp.asarray(q0, jnp.float32), xs)
     return RolloutResult(aopi=decs.aopi, acc=decs.acc, q=qs, assign=assigns,
                          decision=decs)
 

@@ -210,6 +210,12 @@ class HorizonTables:
                         eff[t, n] instead — every scan engine accepts both
       budgets_b[t, s]   bandwidth capacity trace B_t^s (Hz)
       budgets_c[t, s]   compute capacity trace C_t^s (FLOPS)
+      active[t, n]      optional fleet-churn mask (1.0 = camera live).
+                        ``None`` (the default) means "all cameras live
+                        for the whole horizon" and adds **no pytree
+                        leaf**, so every maskless program traces to the
+                        same jaxpr as before the field existed — the
+                        bitwise ``faults=None`` no-op path.
     """
     acc: jnp.ndarray
     xi: jnp.ndarray
@@ -217,6 +223,7 @@ class HorizonTables:
     eff: jnp.ndarray
     budgets_b: jnp.ndarray
     budgets_c: jnp.ndarray
+    active: jnp.ndarray | None = None
 
     @property
     def n_slots(self) -> int:
@@ -251,7 +258,8 @@ class HorizonTables:
             acc=self.acc[t0:t1], xi=self.xi, size=self.size,
             eff=self.eff if self.eff.ndim == 1 else self.eff[t0:t1],
             budgets_b=self.budgets_b[t0:t1],
-            budgets_c=self.budgets_c[t0:t1])
+            budgets_c=self.budgets_c[t0:t1],
+            active=None if self.active is None else self.active[t0:t1])
 
 
 def eff_sequence(tables: HorizonTables) -> jnp.ndarray:
@@ -276,11 +284,21 @@ def stack_horizons(tables: Sequence[HorizonTables]) -> HorizonTables:
     tables = list(tables)
     if not tables:
         raise ValueError("stack_horizons: need at least one horizon")
+    # Mixed churn masks: densify the maskless horizons to all-ones so the
+    # stacked pytree has a uniform structure. All-None stays None (the
+    # maskless fast path is preserved for unperturbed suites).
+    if any(t.active is not None for t in tables):
+        tables = [
+            t if t.active is not None else dataclasses.replace(
+                t, active=jnp.ones((t.n_slots, t.n_cameras), t.acc.dtype))
+            for t in tables]
     ref = tables[0]
     for i, tab in enumerate(tables[1:], start=1):
         for field in dataclasses.fields(HorizonTables):
             a = getattr(ref, field.name)
             b = getattr(tab, field.name)
+            if a is None and b is None:
+                continue
             if a.shape != b.shape:
                 raise ValueError(
                     f"stack_horizons: shape mismatch on field "

@@ -136,6 +136,11 @@ def simulate_lcfsp(lam: float, mu: float, p: float, n_frames: int = 1_000_000,
 
 
 def simulate(lam: float, mu: float, p: float, policy: int, **kw) -> SimResult:
+    if lam <= 0.0 or mu <= 0.0:
+        # Zero-rate stream (churned-out camera): no frames ever arrive or
+        # complete. The samplers would divide by the rate, so short-circuit
+        # with an exactly-zero masked result instead of inf/NaN.
+        return SimResult(0.0, 0.0, 0, 0, 0)
     return (simulate_lcfsp if policy == 1 else simulate_fcfs)(lam, mu, p, **kw)
 
 
@@ -343,7 +348,7 @@ def _window_sim(lam, mu, p, pol, keys, horizon, n_frames: int,
 
 def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
                  n_frames: int, horizon: float,
-                 delay_model: str = "mm1") -> dict:
+                 delay_model: str = "mm1", active=None) -> dict:
     """Simulate ``[E, N]`` GI/G/1 streams (E epochs x N streams) in ONE
     jitted device dispatch.
 
@@ -356,6 +361,12 @@ def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
     stream's frame budget runs out *before* the horizon (``frames_cap``),
     the integral covers the simulated window instead (the per-stream
     effective horizon is returned).
+
+    Dead streams — ``lam <= 0`` or ``mu <= 0``, or masked out by the
+    optional ``active`` ``[E, N]`` fleet-churn mask — are simulated on
+    rate-clamped stand-ins and then zeroed in every output array, so the
+    window stays one fused dispatch and fleet reductions stay finite.
+    Live lanes are bitwise identical to an unmasked call.
 
     One ``lax.scan`` over the frame axis carries every (epoch, stream)
     recurrence as an ``[E*N]`` vector — single-pass like the numpy
@@ -373,6 +384,10 @@ def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
     n_frames = int(n_frames)
     dtype = np.float32 if n_frames <= F32_MAX_FRAMES else np.float64
     lam = np.atleast_2d(np.asarray(lam, dtype))
+    mu_h = np.atleast_2d(np.asarray(mu, dtype))
+    live = (lam > 0.0) & (mu_h > 0.0)
+    if active is not None:
+        live = live & (np.atleast_2d(np.asarray(active)) > 0.0)
     e, n = lam.shape
     obs.histogram("queues.batch_elems",
                   delay_model=delay_model).observe(e * n * n_frames)
@@ -382,13 +397,15 @@ def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
             jax.random.key(int(seed)), jnp.arange(t0, t0 + e))
         out = _window_sim(
             jnp.asarray(np.maximum(lam, dtype(1e-6))),
-            jnp.asarray(np.maximum(
-                np.atleast_2d(np.asarray(mu, dtype)), dtype(1e-6))),
+            jnp.asarray(np.maximum(mu_h, dtype(1e-6))),
             jnp.asarray(np.clip(
                 np.atleast_2d(np.asarray(p, dtype)), 1e-3, 1.0)),
             jnp.asarray(np.atleast_2d(np.asarray(pol, np.int32))),
             keys, float(horizon), n_frames, str(delay_model))
         out = {k: np.asarray(v, np.float64) for k, v in out.items()}
+        if not live.all():
+            # Dead lanes ran on clamped stand-in rates — zero them out.
+            out = {k: np.where(live, v, 0.0) for k, v in out.items()}
     BATCH_DISPATCHES += 1
     obs.counter("queues.batch_dispatches", delay_model=delay_model).inc()
     return out

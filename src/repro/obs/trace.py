@@ -159,20 +159,32 @@ class Span:
         return self
 
     def __exit__(self, *exc) -> None:
+        # Exception-safe teardown: the span must pop off the per-thread
+        # stack and record its event even when the body raised (or when
+        # closing the jax scopes raises) — otherwise one raise corrupts
+        # the span tree for everything recorded after it.
         t1 = time.perf_counter()
-        self._cm.close()
-        stack = self.buffer._stack()
-        stack.pop()
-        dur = t1 - self.t0
-        ev = {"ph": "X", "name": self.name, "id": self.sid,
-              "parent": stack[-1] if stack else 0,
-              "ts": self.t0 - _T0, "dur": dur,
-              "wall": _EPOCH0 + (self.t0 - _T0),
-              "tid": threading.get_ident(),
-              "args": {**current_labels(), **self.attrs}}
-        self.buffer.record(ev)
-        if self._metric is not None:
-            self._metric.observe(dur)
+        try:
+            self._cm.close()
+        finally:
+            stack = self.buffer._stack()
+            if stack and stack[-1] == self.sid:
+                stack.pop()
+            elif self.sid in stack:
+                stack.remove(self.sid)
+            dur = t1 - self.t0
+            args = {**current_labels(), **self.attrs}
+            if exc and exc[0] is not None:
+                args["error"] = 1
+            ev = {"ph": "X", "name": self.name, "id": self.sid,
+                  "parent": stack[-1] if stack else 0,
+                  "ts": self.t0 - _T0, "dur": dur,
+                  "wall": _EPOCH0 + (self.t0 - _T0),
+                  "tid": threading.get_ident(),
+                  "args": args}
+            self.buffer.record(ev)
+            if self._metric is not None:
+                self._metric.observe(dur)
 
     def set(self, **attrs) -> "Span":
         """Attach attributes discovered mid-span."""

@@ -18,13 +18,15 @@ from . import generators  # noqa: F401  (populates the registry on import)
 from .base import Components, ScenarioSpec, assemble
 from .registry import (Suite, build, families, family_of, names, register,
                        spec_for, suite)
-from .report import FamilyStats, RobustnessReport, robustness
+from .report import (DegradationReport, DegradedStats, FamilyStats,
+                     RobustnessReport, degradation, robustness)
 from .runner import BACKENDS, POLICIES, SweepResult, sweep
 
 __all__ = [
     "Components", "ScenarioSpec", "assemble",
     "Suite", "build", "families", "family_of", "names", "register",
     "spec_for", "suite",
-    "FamilyStats", "RobustnessReport", "robustness",
+    "DegradationReport", "DegradedStats", "FamilyStats",
+    "RobustnessReport", "degradation", "robustness",
     "BACKENDS", "POLICIES", "SweepResult", "sweep",
 ]

@@ -66,11 +66,16 @@ class ScenarioSpec:
 
 @dataclasses.dataclass
 class Components:
-    """The four time-varying ingredients a generator emits."""
+    """The four time-varying ingredients a generator emits (plus the
+    optional fleet-churn mask of the ``camera_churn`` family)."""
     bandwidth: np.ndarray        # [T, S] Hz
     compute: np.ndarray          # [T, S] FLOPS
     snr_db: np.ndarray           # [T, N] dB
     drift: np.ndarray            # [T, N] in (0, 1]
+    #: Optional [T, N] fleet mask (1 live / 0 churned out). ``None`` — the
+    #: default for every non-churn family — assembles tables WITHOUT an
+    #: ``active`` leaf, keeping existing scenarios bitwise unchanged.
+    active: np.ndarray | None = None
 
 
 def rng(spec: ScenarioSpec, tag: str) -> np.random.Generator:
@@ -140,6 +145,9 @@ def assemble(spec: ScenarioSpec, comps: Components,
     if comps.compute.shape != (t_len, spec.n_servers):
         raise ValueError(f"compute shape {comps.compute.shape} != "
                          f"(T={t_len}, S={spec.n_servers})")
+    if comps.active is not None and comps.active.shape != (t_len, n):
+        raise ValueError(f"active shape {comps.active.shape} != "
+                         f"(T={t_len}, N={n})")
     pool = pool_for(spec)
     res = np.asarray(spec.resolutions, np.float64)
     difficulty = rng(spec, "difficulty").uniform(0.88, 1.0, n)
@@ -153,4 +161,6 @@ def assemble(spec: ScenarioSpec, comps: Components,
         size=jnp.asarray(spec.alpha * res**2, dtype),
         eff=jnp.asarray(profiles.shannon_efficiency(comps.snr_db), dtype),
         budgets_b=jnp.asarray(comps.bandwidth, dtype),
-        budgets_c=jnp.asarray(comps.compute, dtype))
+        budgets_c=jnp.asarray(comps.compute, dtype),
+        active=(None if comps.active is None
+                else jnp.asarray(comps.active, dtype)))

@@ -15,7 +15,12 @@ policy:
   snr_mobility     per-camera random-walk SNR with handover jumps
                    (time-varying link efficiency);
   content_burst    content-difficulty bursts (scene changes crush accuracy,
-                   then recover).
+                   then recover);
+  camera_churn     fleet churn — cameras leave/join mid-horizon via the
+                   ``active[T, N]`` mask (``repro.faults`` Markov chain);
+  correlated_fade  correlated multi-server bandwidth fades (one shared
+                   shock + idiosyncratic noise), generalizing
+                   server_outage beyond independent single-server windows.
 
 Knobs ride ``spec.params`` with the defaults below; ``registry.build``
 merges per-call overrides in.
@@ -24,6 +29,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..faults import FaultPlan, FaultSpec
 from .base import (Components, ScenarioSpec, base_drift, base_snr,
                    default_capacity, default_components, rng)
 from .registry import register
@@ -166,4 +172,59 @@ def content_burst(spec: ScenarioSpec) -> Components:
         env[t0:t0 + seg, cam] = np.minimum(env[t0:t0 + seg, cam],
                                            ramp[:seg])
     comps.drift = np.clip(comps.drift * env, 0.05, 1.0)
+    return comps
+
+
+@register("camera_churn", family="camera_churn")
+@register("camera_churn_heavy", family="camera_churn",
+          churn_fraction=0.6, leave_prob=0.15, join_prob=0.15)
+def camera_churn(spec: ScenarioSpec) -> Components:
+    """Fleet churn: cameras leave and rejoin mid-horizon.
+
+    The steady AR(1) world plus an ``active[T, N]`` mask from the
+    ``repro.faults`` churn chain — at ``churn_t0`` a ``churn_fraction`` of
+    the fleet drops out, then per slot live cameras leave w.p.
+    ``leave_prob`` and dead ones rejoin w.p. ``join_prob`` (at least one
+    camera is always live). Inactive cameras get exactly zero allocation;
+    their bandwidth/compute shares water-fill to the survivors.
+    """
+    comps = default_components(spec)
+    plan = FaultPlan(
+        (FaultSpec(
+            "camera_churn",
+            t0=int(spec.param("churn_t0", max(1, spec.n_slots // 10))),
+            duration=spec.param("churn_len", None),
+            params={"fraction": spec.param("churn_fraction", 0.3),
+                    "leave_prob": spec.param("leave_prob", 0.05),
+                    "join_prob": spec.param("join_prob", 0.1)}),),
+        seed=int(rng(spec, "churn").integers(2**31)))
+    comps.active = plan.camera_active(spec.n_slots, spec.n_cameras)
+    return comps
+
+
+@register("correlated_fade", family="correlated_fade")
+@register("correlated_fade_deep", family="correlated_fade",
+          fade_depth=0.85, fade_corr=0.95)
+def correlated_fade(spec: ScenarioSpec) -> Components:
+    """Correlated multi-server bandwidth fades (generalizing
+    ``server_outage``): a shared Gaussian shock plus per-server noise,
+    mixed by ``fade_corr`` and squashed into ``(1 - fade_depth, 1)``,
+    multiplies the backhaul of a ``fade_fraction`` of servers at once —
+    the weather-front / backhaul-congestion regime where per-server
+    independence assumptions fail. Floored at 1e-6 x mean like
+    ``server_outage`` so allocators never see a zero budget.
+    """
+    comps = default_components(spec)
+    plan = FaultPlan(
+        (FaultSpec(
+            "correlated_fade",
+            t0=int(spec.param("fade_t0", 0)),
+            duration=spec.param("fade_len", None),
+            params={"fraction": spec.param("fade_fraction", 1.0),
+                    "depth": spec.param("fade_depth", 0.6),
+                    "corr": spec.param("fade_corr", 0.8)}),),
+        seed=int(rng(spec, "fade").integers(2**31)))
+    factor = plan.capacity_factor(spec.n_slots, spec.n_servers)
+    comps.bandwidth = np.maximum(comps.bandwidth * factor,
+                                 spec.mean_bandwidth_hz * 1e-6)
     return comps

@@ -12,15 +12,22 @@ column set: the *measured* AoPI from the M/M/1 data-plane replay
 (``repro.serving.replay``) with the same mean/percentile/worst
 aggregation, and the relative divergence ``measured/predicted - 1`` —
 the model-vs-measurement gap where config-adaptation policies break.
+
+:func:`degradation` is the fault-plane counterpart: it replays a suite
+clean and once per fault kind (``repro.faults``) and tabulates, per
+(policy, fault kind), measured AoPI under faults vs fault-free, the
+recovery time in epochs after the fault window clears, and the fallback /
+degraded-epoch counts from the service's graceful-degradation ladder.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
-from .runner import SweepResult
+from .. import faults as fault_plane
+from .runner import POLICIES, SweepResult
 
 
 @dataclasses.dataclass
@@ -197,3 +204,154 @@ def robustness(result: SweepResult, pct: float = 95.0) -> RobustnessReport:
                             pct=pct, table=table, total_slots=total_slots,
                             replay_slots=replay_slots,
                             delay_models=tuple(delay_models))
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mode report (fault plane)
+# ---------------------------------------------------------------------------
+
+#: Fault kinds :func:`degradation` replays by default — one structural,
+#: one capacity, one correlated, one telemetry, one solver kind.
+DEFAULT_FAULT_KINDS = ("camera_churn", "server_crash", "correlated_fade",
+                       "telemetry_drop", "solver_nonconverge")
+
+
+@dataclasses.dataclass
+class DegradedStats:
+    """One (policy, fault kind) cell of the degradation table."""
+    clean_aopi: float         # fault-free measured mean AoPI
+    faulted_aopi: float       # measured mean AoPI under the injection
+    recovery_epochs: float    # mean epochs to re-converge after clearing
+    fallbacks: int            # ladder engagements across the suite
+    degraded_epochs: int      # epochs run on a fallback plan
+    errors: int = 0           # cells that failed outright
+
+    @property
+    def ratio(self) -> float:
+        """Faulted / clean measured AoPI (1.0 = no degradation)."""
+        return self.faulted_aopi / max(self.clean_aopi, 1e-12)
+
+
+@dataclasses.dataclass
+class DegradationReport:
+    policies: list[str]
+    fault_kinds: list[str]
+    table: dict               # policy -> kind -> DegradedStats
+    fault_window: tuple[int, int]
+    tolerance: float
+
+    def rows(self) -> list[list]:
+        """Flat rows (benchmarks/CI): [policy, kind, clean, faulted,
+        ratio, recovery_epochs, fallbacks, degraded_epochs, errors]."""
+        out = []
+        for p in self.policies:
+            for k in self.fault_kinds:
+                s = self.table[p][k]
+                out.append([p, k, s.clean_aopi, s.faulted_aopi, s.ratio,
+                            s.recovery_epochs, s.fallbacks,
+                            s.degraded_epochs, s.errors])
+        return out
+
+    def __str__(self) -> str:
+        w = max(len(k) for k in self.fault_kinds)
+        lines = [f"# fault window: slots [{self.fault_window[0]}, "
+                 f"{self.fault_window[1]}); recovery tolerance "
+                 f"{self.tolerance:.0%}",
+                 f"{'policy':<6} {'fault':<{w}} {'clean':>9} "
+                 f"{'faulted':>9} {'ratio':>7} {'recov':>6} "
+                 f"{'fallbk':>6} {'degr':>5}"]
+        for p in self.policies:
+            for k in self.fault_kinds:
+                s = self.table[p][k]
+                lines.append(
+                    f"{p:<6} {k:<{w}} {s.clean_aopi:>9.4f} "
+                    f"{s.faulted_aopi:>9.4f} {s.ratio:>7.3f} "
+                    f"{s.recovery_epochs:>6.1f} {s.fallbacks:>6d} "
+                    f"{s.degraded_epochs:>5d}")
+        return "\n".join(lines)
+
+
+def _plan_for_kind(kind: str, t0: int, length: int,
+                   seed: int) -> fault_plane.FaultPlan:
+    """One-kind plan with parameters strong enough that the injection is
+    visible (solver kinds exhaust the retry budget so the ladder's
+    fallback rungs — not just retries — engage)."""
+    params: dict = {}
+    if kind == "camera_churn":
+        params = {"fraction": 0.4, "leave_prob": 0.1, "join_prob": 0.3}
+    elif kind == "server_crash":
+        params = {"server": 0, "depth": 1.0}
+    elif kind == "correlated_fade":
+        params = {"fraction": 1.0, "depth": 0.7, "corr": 0.9}
+    elif kind in fault_plane.SOLVER_KINDS:
+        params = {"attempts": 64}
+    return fault_plane.FaultPlan(
+        (fault_plane.FaultSpec(kind, t0=t0, duration=length,
+                               params=params),), seed=seed)
+
+
+def degradation(suite_or_tables,
+                fault_kinds: Sequence[str] = DEFAULT_FAULT_KINDS,
+                policies: Sequence[str] = POLICIES, *,
+                n_epochs: int | None = None, fault_t0: int | None = None,
+                fault_len: int | None = None, seed: int = 0,
+                tolerance: float = 0.10,
+                **replay_kw) -> DegradationReport:
+    """Measured AoPI under faults vs fault-free, per (policy, fault kind).
+
+    Replays the suite once clean and once per fault kind (same seeds, so
+    the clean run is the exact counterfactual), injecting that kind over
+    slots ``[fault_t0, fault_t0 + fault_len)`` (defaults: the middle
+    third). Recovery time is the number of epochs after the window clears
+    until the faulted measured series re-enters ``tolerance`` of the
+    clean series (per scenario, then averaged; the remaining horizon
+    counts in full when a scenario never recovers). Plans that fail
+    planning exercise the service ladder, so fallback / degraded-epoch
+    counts come straight from ``ReplayResult``. Extra ``replay_kw``
+    (``plan_window``, ``telemetry_gain``, ...) forward to
+    ``replay_suite``.
+    """
+    from ..serving import replay as _replay  # lazy: keep deps one-way
+    for kind in fault_kinds:
+        if kind not in fault_plane.FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}; known: "
+                             f"{fault_plane.FAULT_KINDS}")
+    clean = _replay.replay_suite(suite_or_tables, policies=list(policies),
+                                 n_epochs=n_epochs, seed=seed, **replay_kw)
+    t_len = next(iter(clean.measured.values())).shape[1]
+    t0 = max(1, t_len // 3) if fault_t0 is None else int(fault_t0)
+    length = max(1, t_len // 3) if fault_len is None else int(fault_len)
+    t1 = min(t0 + length, t_len)
+    table: dict = {p: {} for p in policies}
+    for kind in fault_kinds:
+        # Solver faults only bite at planning epochs; by default start
+        # their window at slot 0 so the guaranteed first plan (and every
+        # replan before ``t1``) falls inside it regardless of how the
+        # plan-window boundaries align with the middle third.
+        k_t0 = (0 if fault_t0 is None and kind in fault_plane.SOLVER_KINDS
+                else t0)
+        plan = _plan_for_kind(kind, k_t0, t1 - k_t0, seed)
+        faulted = _replay.replay_suite(
+            suite_or_tables, policies=list(policies), n_epochs=n_epochs,
+            seed=seed, faults=plan, **replay_kw)
+        for p in policies:
+            c = clean.measured[p]                         # [K, T]
+            f = faulted.measured[p]
+            rec = []
+            for k in range(c.shape[0]):
+                tail = np.abs(f[k, t1:] - c[k, t1:]) <= \
+                    tolerance * np.maximum(c[k, t1:], 1e-12)
+                hit = np.flatnonzero(tail)
+                rec.append(float(hit[0]) if hit.size else float(t_len - t1))
+            n_fb = sum(len(x) for x in faulted.fallbacks.get(p, []))
+            n_dg = sum(len(x) for x in faulted.degraded.get(p, []))
+            n_err = sum(1 for (_, pol) in faulted.errors if pol == p)
+            table[p][kind] = DegradedStats(
+                clean_aopi=float(np.nanmean(c)),
+                faulted_aopi=float(np.nanmean(f)),
+                recovery_epochs=float(np.mean(rec)) if rec else 0.0,
+                fallbacks=int(n_fb), degraded_epochs=int(n_dg),
+                errors=int(n_err))
+    return DegradationReport(policies=list(policies),
+                             fault_kinds=list(fault_kinds), table=table,
+                             fault_window=(t0, t1), tolerance=tolerance)

@@ -88,6 +88,14 @@ class SweepResult:
     delay_models: tuple[str, ...] | None = None
     measured_by_model: dict[str, dict[str, np.ndarray]] | None = None
     predicted_by_model: dict[str, dict[str, np.ndarray]] | None = None
+    #: policy -> repr of the exception that killed its closed-form sweep
+    #: (series NaN-filled); merged with the replay's per-cell errors
+    #: under ("<scenario>", "<policy>") keys when dataplane=True.
+    errors: dict = dataclasses.field(default_factory=dict)
+    #: Fault-plane records from the primary-model replay (dataplane=True
+    #: with a fault plan): policy -> [K] lists, as on ReplayResult.
+    fallbacks: dict | None = None
+    degraded: dict | None = None
 
     def mean_aopi(self, policy: str) -> np.ndarray:
         """Per-scenario mean AoPI over the horizon. [K]"""
@@ -145,6 +153,13 @@ def _reduced_policy(name: str, n_bcd_iters: int, solver_backend: str):
         else:
             raise ValueError(
                 f"unknown policy {name!r}; known: {POLICIES}")
+        if tables.active is not None:
+            # Churn-masked fleet: dead cameras carry exact zeros, so the
+            # fleet mean divides by the live count, not N.
+            n_live = jnp.maximum(tables.active.sum(axis=-1), 1.0)
+            return {"aopi": res.aopi.sum(axis=-1) / n_live,
+                    "acc": res.acc.sum(axis=-1) / n_live,
+                    "q": res.q}
         return {"aopi": res.aopi.mean(axis=-1),
                 "acc": res.acc.mean(axis=-1),
                 "q": res.q}
@@ -239,7 +254,10 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
     table with a divergence column per replayed delay model.
     ``dataplane_params`` forwards replay knobs (``n_epochs``,
     ``epoch_duration``, ``frames_cap``, ``seed``, ``telemetry_gain``,
-    ``plan_window``, ``replan_threshold``, and ``delay_model`` — a name
+    ``plan_window``, ``replan_threshold``, ``faults`` — a
+    ``repro.faults.FaultPlan`` applied to every cell, with
+    ``plan_retries``/``plan_deadline`` tuning the degradation ladder —
+    and ``delay_model`` — a name
     from ``queues.DELAY_MODELS`` or a tuple of them; the first is the
     primary model backing ``measured_aopi``/``divergence()``, the rest
     land in ``measured_by_model`` — see ``serving.replay.replay_tables``).
@@ -282,6 +300,8 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
              jnp.float32(params.get("jcab_latency_cap", 0.5)))
 
     series = {}
+    errors: dict = {}
+    n_slots = int(tables.acc.shape[1])
     for name in policies:
         if name not in POLICIES:
             raise ValueError(f"unknown policy {name!r}; known: {POLICIES}")
@@ -289,18 +309,29 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         # One span per policy: it wraps the full sharded/vmapped dispatch
         # INCLUDING host materialization (the _run_* helpers np.asarray
         # their outputs), so the duration is honest end-to-end sweep time.
-        with obs.span("sweep.policy", policy=name, backend=backend,
-                      solver_backend=str(solver_backend),
-                      n_scenarios=n_scenarios, n_devices=len(devices)):
-            if backend == "shard_map" and len(devices) > 1:
-                series[name] = _run_shard_map(name, n_bcd_iters, sb, tables,
+        try:
+            with obs.span("sweep.policy", policy=name, backend=backend,
+                          solver_backend=str(solver_backend),
+                          n_scenarios=n_scenarios, n_devices=len(devices)):
+                if backend == "shard_map" and len(devices) > 1:
+                    series[name] = _run_shard_map(name, n_bcd_iters, sb,
+                                                  tables, knobs,
+                                                  n_scenarios, devices)
+                elif backend == "fleet" and len(devices) > 1:
+                    series[name] = _run_fleet(name, n_bcd_iters, sb, tables,
                                               knobs, n_scenarios, devices)
-            elif backend == "fleet" and len(devices) > 1:
-                series[name] = _run_fleet(name, n_bcd_iters, sb, tables,
-                                          knobs, n_scenarios, devices)
-            else:
-                series[name] = _run_vmap(name, n_bcd_iters, sb, tables,
-                                         knobs)
+                else:
+                    series[name] = _run_vmap(name, n_bcd_iters, sb, tables,
+                                             knobs)
+        except Exception as e:  # noqa: BLE001 — isolate the policy cell
+            # One failing policy must not abort the whole sweep: record
+            # the failure, NaN-fill its series, and keep sweeping.
+            errors[name] = f"{type(e).__name__}: {e}"
+            obs.event("sweep.policy_failed", policy=name, backend=backend)
+            nan = np.full((n_scenarios, n_slots), np.nan)
+            series[name] = {"aopi": nan, "acc": nan.copy(),
+                            "q": np.full((n_scenarios, n_slots), np.nan)}
+            continue
         if obs.enabled():
             # Per-(policy, family) AoPI histograms: the [T] fleet-mean
             # slot series of every scenario, so exporters can quote
@@ -312,6 +343,7 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
     measured = predicted = None
     delay_models = None
     measured_by_model = predicted_by_model = None
+    fallbacks = degraded = None
     if dataplane:
         # Lazy import: repro.serving pulls the model/engine stack, and
         # importing it here (not at module load) also keeps the
@@ -320,7 +352,8 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         dp = dict(dataplane_params or {})
         known = {"n_epochs", "epoch_duration", "frames_cap", "seed",
                  "plan_window", "telemetry_gain", "delay_model",
-                 "replan_threshold"}
+                 "replan_threshold", "faults", "plan_retries",
+                 "plan_deadline"}
         unknown = sorted(set(dp) - known)
         if unknown:
             raise ValueError(f"unknown dataplane_params {unknown}; "
@@ -341,9 +374,15 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
                 plan_window=dp.get("plan_window"),
                 telemetry_gain=float(dp.get("telemetry_gain", 0.0)),
                 delay_model=dm,
-                replan_threshold=dp.get("replan_threshold"))
+                replan_threshold=dp.get("replan_threshold"),
+                faults=dp.get("faults"),
+                plan_retries=int(dp.get("plan_retries", 2)),
+                plan_deadline=dp.get("plan_deadline"))
             measured_by_model[dm] = rres.measured
             predicted_by_model[dm] = rres.predicted
+            if dm == delay_models[0]:
+                fallbacks, degraded = rres.fallbacks, rres.degraded
+                errors.update(rres.errors)
         measured = measured_by_model[delay_models[0]]
         predicted = predicted_by_model[delay_models[0]]
 
@@ -357,4 +396,5 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         q={p: s["q"] for p, s in series.items()},
         measured_aopi=measured, predicted_aopi=predicted,
         delay_models=delay_models, measured_by_model=measured_by_model,
-        predicted_by_model=predicted_by_model)
+        predicted_by_model=predicted_by_model, errors=errors,
+        fallbacks=fallbacks, degraded=degraded)

@@ -31,6 +31,7 @@ from typing import Mapping, Sequence
 import jax
 import numpy as np
 
+from .. import faults as fault_plane
 from .. import obs
 from ..core import baselines
 from ..core.lbcd import LBCDController
@@ -123,7 +124,10 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
                   solver_backend: str = "jnp",
                   telemetry_gain: float = 0.0,
                   delay_model: str = "mm1",
-                  replan_threshold: float | None = None) -> ScenarioReplay:
+                  replan_threshold: float | None = None,
+                  faults: "fault_plane.FaultPlan | None" = None,
+                  plan_retries: int = 2,
+                  plan_deadline: float | None = None) -> ScenarioReplay:
     """Replay one scenario's horizon through the batched data plane.
 
     The planner runs the policy's scan engine over whole lookahead
@@ -137,7 +141,15 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
     regime where Theorems 1-2 drift), and ``replan_threshold`` arms
     divergence-triggered early replanning (see ``AnalyticsService``).
     Bitwise deterministic in ``(seed, tables, n_epochs)``.
+
+    ``faults`` (a :class:`repro.faults.FaultPlan`) injects the plan's
+    structural faults into the tables *before* the controller sees them
+    (churn mask, capacity fades) and arms the service's behavioral
+    injections and degradation ladder (``plan_retries``/``plan_deadline``).
+    ``faults=None`` is the bitwise no-op path: the tables object is passed
+    through untouched and every downstream trace is byte-identical.
     """
+    tables = fault_plane.apply_plan(faults, tables)
     system = TableSystem(tables)
     n_epochs = system.n_slots if n_epochs is None else n_epochs
     if n_epochs > system.n_slots:
@@ -153,7 +165,9 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
         ctrl, mode="mm1", epoch_duration=epoch_duration,
         frames_cap=frames_cap, seed=seed, plan_window=plan_window,
         tables=system.horizon(n_epochs), telemetry_gain=telemetry_gain,
-        delay_model=delay_model, replan_threshold=replan_threshold)
+        delay_model=delay_model, replan_threshold=replan_threshold,
+        faults=faults, plan_retries=plan_retries,
+        plan_deadline=plan_deadline)
     # Every span/metric the service emits below here carries the policy
     # and delay-model labels (replay_suite adds family/scenario on top).
     with obs.label_context(policy=policy, delay_model=delay_model), \
@@ -184,6 +198,13 @@ class ReplayResult:
     measured: dict[str, np.ndarray]
     acc: dict[str, np.ndarray]
     delay_model: str = "mm1"
+    #: policy -> [K] lists of the service's (t, reason) fallback records /
+    #: degraded-epoch indices (empty when no fault plan was armed).
+    fallbacks: dict[str, list] = dataclasses.field(default_factory=dict)
+    degraded: dict[str, list] = dataclasses.field(default_factory=dict)
+    #: (scenario name, policy) -> repr of the exception that killed that
+    #: cell; its series are NaN-filled instead of aborting the suite.
+    errors: dict[tuple, str] = dataclasses.field(default_factory=dict)
 
     def divergence(self, policy: str) -> np.ndarray:
         """Per-scenario relative divergence of horizon-mean measured vs
@@ -201,14 +222,20 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
                  solver_backend: str = "jnp",
                  telemetry_gain: float = 0.0,
                  delay_model: str = "mm1",
-                 replan_threshold: float | None = None) -> ReplayResult:
+                 replan_threshold: float | None = None,
+                 faults: "fault_plane.FaultPlan | None" = None,
+                 plan_retries: int = 2,
+                 plan_deadline: float | None = None) -> ReplayResult:
     """Replay every scenario of a suite through the data plane, for every
     policy — the measured counterpart of ``scenarios.sweep``.
 
     Accepts a ``scenarios.Suite`` or raw stacked ``HorizonTables``
     (leading scenario axis). One scan-engine plan + T measured epochs per
     (policy, scenario); compiled planner executables are shared across
-    scenarios of identical shape.
+    scenarios of identical shape. ``faults`` applies the same fault plan
+    to every cell (see :func:`replay_tables`). A cell that raises is
+    recorded in ``ReplayResult.errors`` with NaN series instead of
+    aborting the rest of the suite.
     """
     if hasattr(suite_or_tables, "tables"):
         tables = suite_or_tables.tables
@@ -232,26 +259,51 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
     predicted: dict[str, list] = {p: [] for p in policies}
     measured: dict[str, list] = {p: [] for p in policies}
     acc: dict[str, list] = {p: [] for p in policies}
+    fallbacks: dict[str, list] = {p: [] for p in policies}
+    degraded: dict[str, list] = {p: [] for p in policies}
+    errors: dict[tuple, str] = {}
     for i in range(k):
         one = jax.tree.map(lambda x, i=i: x[i], tables)
+        t_len = int(one.acc.shape[0]) if n_epochs is None else int(n_epochs)
         for policy in policies:
-            with obs.label_context(family=fams[i], scenario=names[i]):
-                rep = replay_tables(
-                    one, policy, n_epochs=n_epochs, v=v, p_min=p_min,
-                    policy_params=policy_params,
-                    epoch_duration=epoch_duration,
-                    frames_cap=frames_cap, seed=seed,
-                    plan_window=plan_window,
-                    solver_backend=solver_backend,
-                    telemetry_gain=telemetry_gain, delay_model=delay_model,
-                    replan_threshold=replan_threshold)
+            try:
+                with obs.label_context(family=fams[i], scenario=names[i]):
+                    rep = replay_tables(
+                        one, policy, n_epochs=n_epochs, v=v, p_min=p_min,
+                        policy_params=policy_params,
+                        epoch_duration=epoch_duration,
+                        frames_cap=frames_cap, seed=seed,
+                        plan_window=plan_window,
+                        solver_backend=solver_backend,
+                        telemetry_gain=telemetry_gain,
+                        delay_model=delay_model,
+                        replan_threshold=replan_threshold,
+                        faults=faults, plan_retries=plan_retries,
+                        plan_deadline=plan_deadline)
+            except Exception as e:  # noqa: BLE001 — isolate the cell
+                # One bad (scenario, policy) cell must not abort the
+                # suite: record the failure, NaN-fill its series, and
+                # keep replaying the remaining cells.
+                errors[(names[i], policy)] = f"{type(e).__name__}: {e}"
+                obs.event("replay.cell_failed", policy=policy,
+                          scenario=names[i], family=fams[i])
+                nan = np.full(t_len, np.nan)
+                predicted[policy].append(nan)
+                measured[policy].append(nan.copy())
+                acc[policy].append(nan.copy())
+                fallbacks[policy].append([])
+                degraded[policy].append([])
+                continue
             predicted[policy].append(rep.predicted)
             measured[policy].append(rep.measured)
             acc[policy].append(rep.acc)
+            fallbacks[policy].append(list(rep.service.fallbacks))
+            degraded[policy].append(list(rep.service.degraded_epochs))
     return ReplayResult(
         names=names, families=fams, policies=list(policies),
         v=v, p_min=p_min, epoch_duration=epoch_duration,
         predicted={p: np.stack(s) for p, s in predicted.items()},
         measured={p: np.stack(s) for p, s in measured.items()},
         acc={p: np.stack(s) for p, s in acc.items()},
-        delay_model=delay_model)
+        delay_model=delay_model, fallbacks=fallbacks, degraded=degraded,
+        errors=errors)

@@ -42,12 +42,14 @@ Two data planes ship:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import faults as fault_plane
 from .. import obs
 from ..core import baselines, binpack, lbcd, queues
 from ..core.lbcd import LBCDController
@@ -199,7 +201,11 @@ class AnalyticsService:
                  tables: HorizonTables | None = None,
                  telemetry_gain: float = 0.0,
                  delay_model: str = "mm1",
-                 replan_threshold: float | None = None):
+                 replan_threshold: float | None = None,
+                 faults: "fault_plane.FaultPlan | None" = None,
+                 plan_retries: int = 2,
+                 retry_backoff: float = 0.0,
+                 plan_deadline: float | None = None):
         """``controller`` is an ``LBCDController`` or one of the
         ``baselines`` controllers (anything with ``step(t)`` and either
         ``plan(tables)`` or ``_rollout(tables)``).
@@ -217,6 +223,17 @@ class AnalyticsService:
         crosses it mid-window, the remaining plan window is cut and
         ``plan_horizon`` re-runs from the next epoch with fresh telemetry
         instead of waiting for the fixed ``plan_window`` boundary.
+
+        ``faults`` (a :class:`repro.faults.FaultPlan`) arms the service's
+        *behavioral* fault injections — telemetry drops/delays/corruption
+        gate the EWMA filter, and ``solver_*`` kinds drive the graceful-
+        degradation ladder on the scan planner: each planning attempt gets
+        ``plan_retries`` retries (exponential ``retry_backoff`` sleep, a
+        ``plan_deadline``-second watchdog); exhausted retries fall back to
+        the last good plan re-projected onto the surviving fleet, then to
+        a MIN-baseline plan. Structural faults (churn, capacity) must be
+        baked into ``tables`` first via ``faults.apply_plan``.
+        ``faults=None`` is the bitwise no-op path.
         """
         if planner not in ("scan", "step"):
             raise ValueError(f"unknown planner {planner!r}; "
@@ -254,8 +271,21 @@ class AnalyticsService:
         # they reconcile exactly (tests/test_obs.py pins this).
         self.divergences: list[float] = []   # per-epoch measured/pred - 1
         self.early_replans: list[int] = []   # epochs where a window was cut
+        self.fallbacks: list[tuple[int, str]] = []   # (t, ladder rung)
+        self.degraded_epochs: list[int] = []  # epochs run on a fallback plan
+        self.telemetry_gaps: list[int] = []   # epochs whose telemetry held
+        self.plan_failures: list[tuple[int, int, str]] = []  # (t, attempt, err)
+        self.faults = faults
+        self.plan_retries = max(int(plan_retries), 0)
+        self.retry_backoff = float(retry_backoff)
+        self.plan_deadline = (None if plan_deadline is None
+                              else float(plan_deadline))
         self._policy = _policy_label(controller)
         self._replan_pending = False         # next plan is an early replan
+        self._plan_degraded: str | None = None  # ladder rung of current plan
+        self._last_plan = None               # last validated plan (stale src)
+        self._gap_streak = 0                 # consecutive telemetry gaps
+        self._delayed_tel: dict = {}         # arrival epoch -> [(dec, tel)]
         n = self._n_streams()
         self._acc_scale = np.ones(n)
         self._eff_scale = np.ones(n)
@@ -349,8 +379,7 @@ class AnalyticsService:
             self._replan_pending = False
             with obs.span("service.plan_window", policy=self._policy,
                           reason=reason, t0=t, k=k):
-                self._plan = jax.tree.map(np.asarray,
-                                          self.plan_horizon(k, t))
+                self._plan = self._plan_with_ladder(t, k)
             self._plan_t0 = t
             self._plan_meas = None           # re-measure the new window
         j = t - self._plan_t0
@@ -362,6 +391,112 @@ class AnalyticsService:
             t=t, aopi=res.aopi[j], acc=res.acc[j], q=q,
             assign=res.assign[j],
             decision=jax.tree.map(lambda x: x[j], res.decision))
+
+    # ------------------------------------------------------------------
+    # Graceful-degradation ladder (scan planner)
+    # ------------------------------------------------------------------
+    def _plan_attempt(self, t: int, k: int, attempt: int):
+        """One planning attempt: consult the fault plan's solver
+        injections, run the scan planner under the watchdog deadline, and
+        validate the result (NaN anywhere in the plan is a failure — the
+        ``solver_nan`` injection and genuine numerical poisoning take the
+        same path)."""
+        kind = (None if self.faults is None
+                else self.faults.solver_fault(t, attempt))
+        if kind == "solver_nonconverge":
+            raise fault_plane.InjectedSolverFault("solver_nonconverge")
+        start = time.perf_counter()
+        plan = jax.tree.map(np.asarray, self.plan_horizon(k, t))
+        elapsed = time.perf_counter() - start
+        if kind == "solver_nan":
+            plan = dataclasses.replace(
+                plan, aopi=np.full_like(np.asarray(plan.aopi, float),
+                                        np.nan))
+        if kind == "solver_timeout":
+            raise fault_plane.InjectedSolverFault("solver_timeout")
+        if self.plan_deadline is not None and elapsed > self.plan_deadline:
+            raise TimeoutError(
+                f"plan window at t={t} took {elapsed:.3f}s "
+                f"(deadline {self.plan_deadline:.3f}s)")
+        for name in ("aopi", "q"):
+            if np.isnan(np.asarray(getattr(plan, name), float)).any():
+                raise FloatingPointError(f"plan.{name} contains NaN")
+        for name in ("b", "c"):
+            if np.isnan(np.asarray(getattr(plan.decision, name),
+                                   float)).any():
+                raise FloatingPointError(
+                    f"plan.decision.{name} contains NaN")
+        return plan
+
+    def _plan_with_ladder(self, t: int, k: int):
+        """Plan with retries, then degrade gracefully.
+
+        Rungs: (1) up to ``plan_retries`` retries with exponential
+        ``retry_backoff``; (2) the last good plan's final slot tiled over
+        the window and re-projected onto the surviving fleet; (3) a fresh
+        MIN-baseline plan on the current (telemetry-corrected) window.
+        Each failed attempt and each fallback appends to the legacy list
+        *and* emits the matching ``repro.obs`` event in the same block, so
+        counters and lists reconcile exactly.
+        """
+        for attempt in range(self.plan_retries + 1):
+            try:
+                plan = self._plan_attempt(t, k, attempt)
+                self._plan_degraded = None
+                self._last_plan = plan
+                return plan
+            except Exception as e:  # noqa: BLE001 — every rung must engage
+                err = f"{type(e).__name__}: {e}"
+                self.plan_failures.append((t, attempt, err))
+                obs.event("service.plan_retry", policy=self._policy,
+                          t=t, attempt=attempt, error=err)
+                if self.retry_backoff > 0.0 and attempt < self.plan_retries:
+                    time.sleep(self.retry_backoff * (2.0 ** attempt))
+        plan = self._stale_plan(t, k)
+        reason = "stale_plan"
+        if plan is None:
+            plan = jax.tree.map(
+                np.asarray,
+                baselines.rollout_min(self._window_tables(t, t + k),
+                                      solver_backend="jnp"))
+            reason = "min_fallback"
+        self.fallbacks.append((t, reason))
+        obs.event("service.fallback", policy=self._policy, t=t,
+                  reason=reason)
+        self._plan_degraded = reason
+        return plan
+
+    def _stale_plan(self, t: int, k: int):
+        """Rung 2: tile the last good plan's final slot over ``[t, t+k)``
+        and re-project it onto the surviving fleet (zero every per-camera
+        quantity of cameras that have since churned out — their bandwidth
+        and compute shares are simply forfeited until the next good
+        plan). Returns ``None`` when no good plan exists yet."""
+        if self._last_plan is None:
+            return None
+        res = jax.tree.map(
+            lambda x: np.repeat(np.asarray(x)[-1:], k, axis=0),
+            self._last_plan)
+        act = self._active_window(t, t + k)
+        if act is not None:
+            d = res.decision
+            d = dataclasses.replace(
+                d, b=d.b * act, c=d.c * act, lam=d.lam * act,
+                mu=d.mu * act, acc=d.acc * act, aopi=d.aopi * act)
+            res = dataclasses.replace(
+                res, aopi=res.aopi * act, acc=res.acc * act, decision=d)
+        return res
+
+    def _active_window(self, t0: int, t1: int):
+        """``[t1-t0, N]`` numpy fleet mask for the replayed horizon, or
+        ``None`` when no churn mask is attached (the no-op path)."""
+        if self.tables is None or self.tables.active is None:
+            return None
+        return np.asarray(self.tables.active[t0:t1], np.float64)
+
+    def _active_at(self, t: int):
+        act = self._active_window(t, t + 1)
+        return None if act is None else act[0]
 
     # ------------------------------------------------------------------
     # Data plane
@@ -450,6 +585,50 @@ class AnalyticsService:
                 frames_cap=self.frames_cap, seed=self.seed, t=t,
                 delay_model=self.delay_model)
 
+    def _ingest_telemetry(self, t: int, dec, tel: StreamTelemetry):
+        """Gate the epoch's measurement through the fault plan before the
+        EWMA. Drops and corruption become telemetry *gaps* — the belief
+        scales hold their last value and the effective replan threshold
+        widens by 50% per consecutive gap — instead of feeding garbage;
+        delayed samples are stashed and folded in on arrival."""
+        for d_dec, d_tel in self._delayed_tel.pop(t, ()):
+            self._apply_telemetry(t, d_dec, d_tel)
+        spec = (None if self.faults is None
+                else self.faults.telemetry_fault(t))
+        if spec is not None:
+            if spec.kind == "telemetry_drop":
+                self._telemetry_gap(t, "drop")
+                return
+            if spec.kind == "telemetry_delay":
+                d = max(int(spec.params.get("delay", 1)), 1)
+                self._delayed_tel.setdefault(t + d, []).append((dec, tel))
+                self._telemetry_gap(t, "delay")
+                return
+            if spec.kind == "telemetry_corrupt":
+                tel = dataclasses.replace(
+                    tel, acc_hat=np.full_like(
+                        np.asarray(tel.acc_hat, np.float64), np.nan))
+        self._apply_telemetry(t, dec, tel)
+
+    def _apply_telemetry(self, t: int, dec, tel: StreamTelemetry):
+        """Validated EWMA ingest: a non-finite measurement (corruption,
+        injected or genuine) is rejected as a gap — garbage never reaches
+        the belief scales."""
+        finite = all(
+            np.isfinite(np.asarray(x, np.float64)).all()
+            for x in (tel.acc_hat, tel.lam_hat, tel.mu_hat, tel.aopi_hat))
+        if not finite:
+            self._telemetry_gap(t, "corrupt")
+            return
+        self._update_telemetry(dec, tel)
+        self._gap_streak = 0
+
+    def _telemetry_gap(self, t: int, why: str):
+        self.telemetry_gaps.append(t)
+        self._gap_streak += 1
+        obs.event("service.telemetry_gap", policy=self._policy, t=t,
+                  reason=why)
+
     def _update_telemetry(self, dec, tel: StreamTelemetry):
         """Fold measured rates back into the planner's belief scales
         (EWMA toward measured/believed, clipped to [0.5, 2]) and the
@@ -487,6 +666,12 @@ class AnalyticsService:
     def _run_epoch(self, t: int) -> EpochReport:
         rec = self._slot_record(t)
         dec = rec.decision
+        if self._plan_degraded is not None and self.planner == "scan":
+            # This epoch executes a fallback plan — list append and obs
+            # event in the same block so they reconcile exactly.
+            self.degraded_epochs.append(t)
+            obs.event("service.degraded_epoch", policy=self._policy,
+                      t=t, reason=self._plan_degraded)
         # The reported prediction is the *calibrated* belief: closed form
         # times the telemetry AoPI residual (identity at gain 0). Taken
         # BEFORE this epoch's telemetry folds in — the scale only carries
@@ -495,13 +680,25 @@ class AnalyticsService:
         tel = None
         if self.mode == "mm1":
             measured, tel = self._measure_epoch(t, dec)
-            self._update_telemetry(dec, tel)
+            self._ingest_telemetry(t, dec, tel)
         else:
             measured = self._run_engine_epoch(rec)
+        act = self._active_at(t)
+        if act is None:
+            pred_mean = float(np.mean(predicted))
+            meas_mean = float(np.mean(measured))
+            acc_mean = float(np.mean(dec.acc))
+        else:
+            # Fleet means over the *surviving* cameras only — churned-out
+            # streams carry exact zeros and must not dilute the average.
+            n_live = max(float(act.sum()), 1.0)
+            pred_mean = float(np.sum(predicted * act) / n_live)
+            meas_mean = float(np.sum(measured * act) / n_live)
+            acc_mean = float(np.sum(np.asarray(dec.acc) * act) / n_live)
         rep = EpochReport(
-            t=t, predicted_aopi=float(np.mean(predicted)),
-            measured_aopi=float(np.mean(measured)),
-            accuracy=float(np.mean(dec.acc)), q=rec.q,
+            t=t, predicted_aopi=pred_mean,
+            measured_aopi=meas_mean,
+            accuracy=acc_mean, q=rec.q,
             per_stream_measured=measured,
             per_stream_predicted=predicted,
             telemetry=tel)
@@ -515,15 +712,25 @@ class AnalyticsService:
         self._maybe_replan(t, div)
         return rep
 
+    def _effective_replan_threshold(self) -> float | None:
+        """Consecutive telemetry gaps widen the replan threshold (+50%
+        per held epoch): with stale beliefs a large divergence is
+        expected, and replanning on it would churn plans on no new
+        information. Identity when no gap is open."""
+        if self.replan_threshold is None:
+            return None
+        return self.replan_threshold * (1.0 + 0.5 * self._gap_streak)
+
     def _maybe_replan(self, t: int, div: float):
         """Divergence-triggered replanning: cut the rest of the plan
         window when the data plane drifted past ``replan_threshold`` from
         the (calibrated) prediction, so ``plan_horizon`` re-runs at
         ``t + 1`` with fresh telemetry instead of waiting for the fixed
         ``plan_window`` boundary."""
-        if (self.replan_threshold is None or self.mode != "mm1"
+        threshold = self._effective_replan_threshold()
+        if (threshold is None or self.mode != "mm1"
                 or self.planner != "scan" or self._plan is None
-                or abs(div) <= self.replan_threshold):
+                or abs(div) <= threshold):
             return
         remaining = self._plan_t0 + int(self._plan.q.shape[0]) - (t + 1)
         if remaining > 0:

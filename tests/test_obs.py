@@ -123,6 +123,46 @@ def test_span_nesting_builds_parent_tree_and_inherits_labels():
     assert evs["outer"]["dur"] >= evs["inner"]["dur"] >= 0.0
 
 
+def test_span_exception_closes_records_and_flags_error():
+    with pytest.raises(RuntimeError, match="boom"):
+        with obs.span("outer"):
+            with obs.span("inner"):
+                raise RuntimeError("boom")
+    evs = {e["name"]: e for e in obs.events()}
+    # Both spans recorded despite the raise, error attr on each, and the
+    # parent tree stayed intact.
+    assert set(evs) == {"outer", "inner"}
+    assert evs["inner"]["args"]["error"] == 1
+    assert evs["outer"]["args"]["error"] == 1
+    assert evs["inner"]["parent"] != 0 and evs["outer"]["parent"] == 0
+    # The per-thread stack fully unwound: a fresh span is a root again.
+    with obs.span("after"):
+        pass
+    assert obs.events()[-1]["parent"] == 0
+    # The latency histogram still observed the failed spans.
+    h = obs.registry().get("inner.seconds")
+    assert h is not None and h.count == 1
+
+
+def test_label_context_restored_after_exception():
+    from repro.obs.trace import current_labels
+    with pytest.raises(ValueError):
+        with obs.label_context(policy="lbcd"):
+            with obs.label_context(family="storm"):
+                assert current_labels() == {"policy": "lbcd",
+                                            "family": "storm"}
+                raise ValueError("x")
+    assert current_labels() == {}
+    obs.event("clean")
+    assert "policy" not in obs.events()[-1]["args"]
+
+
+def test_span_success_has_no_error_attr():
+    with obs.span("fine"):
+        pass
+    assert "error" not in obs.events()[0]["args"]
+
+
 def test_span_duration_feeds_latency_histogram_with_string_labels_only():
     with obs.span("plan", policy="lbcd", t0=3):
         pass
