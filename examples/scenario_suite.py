@@ -13,20 +13,27 @@
    pair through the batched device-resident GI/G/1 data plane
    (``repro.serving.replay``) so the report shows *measured* AoPI next to
    the closed-form prediction, plus their divergence. ``--delay-model``
-   picks the delay family: ``mm1`` (exponential — the paper's model),
-   ``uniform`` or ``gamma`` (the §III-B testbed regime where the
-   Theorem 1-2 predictions visibly drift).
-4. Print the per-family robustness report and each policy's worst family
+   picks the delay family from ``queues.DELAY_MODELS`` (``mm1`` is the
+   paper's exponential model; ``uniform``/``gamma``/``lognormal``/
+   ``weibull`` are the §III-B regimes where Theorems 1-2 visibly drift),
+   or ``auto`` to let the service fit the family from its own telemetry.
+4. With ``--engine`` (implies ``--dataplane``), climb to the truth
+   ladder's third rung: every cell is also driven through the real
+   continuous-batching ``serving.Engine``, and the report grows
+   engine columns with per-rung divergences (engine vs GI/G/1 vs
+   closed form).
+5. Print the per-family robustness report and each policy's worst family
    (and, with ``--dataplane``, its worst model-vs-measurement gap).
 
-5. With ``--obs DIR`` (or ``REPRO_OBS_DIR``), stream spans/metrics from
+6. With ``--obs DIR`` (or ``REPRO_OBS_DIR``), stream spans/metrics from
    the whole run into ``DIR`` (``trace.jsonl``, ``metrics.prom``,
    ``metrics.jsonl``, Perfetto-loadable ``trace.json``) and print where
    they landed — ``python -m repro.obs.report DIR`` then shows
    plans/sec and p99 plan/replan latency per policy x family.
 
     PYTHONPATH=src python examples/scenario_suite.py \
-        [--smoke] [--dataplane] [--delay-model mm1|uniform|gamma] \
+        [--smoke] [--dataplane] [--engine] \
+        [--delay-model mm1|uniform|gamma|lognormal|weibull|auto] \
         [--obs DIR]
 """
 import argparse
@@ -34,12 +41,15 @@ import argparse
 import jax
 
 from repro import obs, scenarios
+from repro.core import queues
 
 
 def main(smoke: bool = False, dataplane: bool = False,
-         delay_model: str = "mm1", obs_dir: str | None = None):
+         delay_model: str = "mm1", engine: bool = False,
+         obs_dir: str | None = None):
     if obs_dir:
         obs.configure(run_dir=obs_dir)
+    dataplane = dataplane or engine
     dims = (dict(n_cameras=6, n_slots=16, n_servers=2) if smoke
             else dict(n_cameras=16, n_slots=60, n_servers=3))
     s = scenarios.suite(**dims)
@@ -49,12 +59,21 @@ def main(smoke: bool = False, dataplane: bool = False,
     dp_params = (dict(n_epochs=6, epoch_duration=400.0) if smoke
                  else dict(n_epochs=16, epoch_duration=600.0))
     dp_params["delay_model"] = delay_model
+    if engine:
+        # The DES pins one lane per stream and replays real decode
+        # steps, so bound its per-epoch work tightly for smoke runs.
+        dp_params["mode"] = "engine"
+        dp_params["engine_params"] = {"frames_cap": 24 if smoke else 96}
+        if smoke:
+            dp_params["n_epochs"] = 3
+            dp_params["epoch_duration"] = 120.0
     res = scenarios.sweep(s, v=10.0, p_min=0.7, dataplane=dataplane,
                           dataplane_params=dp_params)
     print(f"sweep backend: {res.backend} "
           f"({len(jax.devices())} visible device(s))"
           + (f"; data plane: {delay_model} x {dp_params['n_epochs']} "
-             f"epochs" if dataplane else "") + "\n")
+             f"epochs" if dataplane else "")
+          + ("; rung 3: real engine" if engine else "") + "\n")
 
     rep = scenarios.robustness(res)
     print(rep)
@@ -68,6 +87,10 @@ def main(smoke: bool = False, dataplane: bool = False,
             dfam, div = rep.worst_divergence(policy)
             line += f"; worst model-vs-measured gap: {dfam} ({div:+.2%})"
         print(line)
+    if engine and rep.has_engine:
+        print("\nengine rung present for all families:",
+              all(rep.table[p][f].engine_mean is not None
+                  for p in res.policies for f in rep.families))
 
     if obs_dir:
         paths = obs.write_artifacts(obs_dir)
@@ -83,12 +106,18 @@ if __name__ == "__main__":
                     help="replay each (policy, scenario) through the "
                          "batched data plane for measured-vs-predicted "
                          "AoPI")
+    ap.add_argument("--engine", action="store_true",
+                    help="also drive every cell through the real "
+                         "continuous-batching engine (truth ladder rung "
+                         "3; implies --dataplane)")
     ap.add_argument("--delay-model", default="mm1",
-                    choices=("mm1", "uniform", "gamma"),
+                    choices=queues.DELAY_MODELS + (queues.AUTO_DELAY_MODEL,),
                     help="data-plane delay family (non-exponential models "
-                         "show how far Theorems 1-2 drift)")
+                         "show how far Theorems 1-2 drift); 'auto' fits "
+                         "the family from service telemetry")
     ap.add_argument("--obs", default=None, metavar="DIR",
                     help="write repro.obs artifacts (trace.jsonl, "
                          "metrics.prom/jsonl, Perfetto trace.json) here")
     args = ap.parse_args()
-    main(args.smoke, args.dataplane, args.delay_model, args.obs)
+    main(args.smoke, args.dataplane, args.delay_model, args.engine,
+         args.obs)

@@ -40,9 +40,11 @@ def main():
         cfg = configs.get("qwen2.5-3b").reduced()
         model = build(cfg)
         params = init_params(model.template(), jax.random.PRNGKey(0))
-        eng = Engine(model, params, n_lanes=8, max_len=96, decode_tokens=2)
+        # The engine replay plane pins one lane per stream.
+        eng = Engine(model, params, n_lanes=args.streams, max_len=96,
+                     decode_tokens=2)
         svc = AnalyticsService(ctrl, mode="engine", engine=eng,
-                               epoch_duration=3.0)
+                               epoch_duration=3.0, engine_frames_cap=32)
     else:
         svc = AnalyticsService(ctrl, mode="mm1", epoch_duration=1500.0)
 

@@ -33,8 +33,9 @@ Two implementations live here:
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -155,21 +156,37 @@ def gamma_sampler(mean: float, shape: float = 2.0) -> Sampler:
     return lambda rng, n: rng.gamma(shape, mean / shape, size=n)
 
 
+def lognormal_sampler(mean: float, sigma: float | None = None) -> Sampler:
+    """Heavy-tailed lognormal with the given mean: ``exp(N(m, sigma^2))``
+    with ``m = ln(mean) - sigma^2/2`` so the mean matches the exponential
+    model exactly while the tail is fatter (CV ~ 1.31 at sigma = 1)."""
+    sigma = LOGNORMAL_SIGMA if sigma is None else sigma
+    m = np.log(mean) - 0.5 * sigma * sigma
+    return lambda rng, n: rng.lognormal(m, sigma, size=n)
+
+
+def weibull_sampler(mean: float, shape: float | None = None) -> Sampler:
+    """Heavy-tailed Weibull (shape < 1) with the given mean:
+    ``scale * W(k)`` with ``scale = mean / Gamma(1 + 1/k)`` (CV ~ 1.46 at
+    k = 0.7) — the sub-exponential tail regime where the §III-B testbed
+    diverged hardest from M/M/1."""
+    shape = WEIBULL_SHAPE if shape is None else shape
+    scale = mean / math.gamma(1.0 + 1.0 / shape)
+    return lambda rng, n: scale * rng.weibull(shape, size=n)
+
+
 def oracle_samplers(delay_model: str, lam: float, mu: float) -> dict:
     """``t_sampler``/``o_sampler`` kwargs for :func:`simulate` matching a
-    batched-engine ``delay_model`` — the single mapping the loop oracle
-    and the parity tests share (empty for "mm1": the simulators default
-    to exponential draws)."""
+    batched-engine ``delay_model`` — the single mapping the loop oracle,
+    the engine-rung data plane, and the parity tests share (empty for
+    "mm1": the simulators default to exponential draws)."""
+    validate_delay_model(delay_model)
     if delay_model == "mm1":
         return {}
-    if delay_model == "uniform":
-        return dict(t_sampler=uniform_sampler(1.0 / lam),
-                    o_sampler=uniform_sampler(1.0 / mu))
-    if delay_model == "gamma":
-        return dict(t_sampler=gamma_sampler(1.0 / lam),
-                    o_sampler=gamma_sampler(1.0 / mu))
-    raise ValueError(
-        f"unknown delay_model {delay_model!r}; known: {DELAY_MODELS}")
+    makers = {"uniform": uniform_sampler, "gamma": gamma_sampler,
+              "lognormal": lognormal_sampler, "weibull": weibull_sampler}
+    make = makers[delay_model]
+    return dict(t_sampler=make(1.0 / lam), o_sampler=make(1.0 / mu))
 
 
 # ---------------------------------------------------------------------------
@@ -177,12 +194,41 @@ def oracle_samplers(delay_model: str, lam: float, mu: float) -> dict:
 # ---------------------------------------------------------------------------
 
 #: Delay families of the batched engine. Means always match the numpy
-#: ``Sampler`` helpers: "mm1" is exponential with mean 1/rate,
-#: "uniform"/"gamma" keep that mean but change the shape (the §III-B
-#: testbed regime where Theorems 1-2 drift).
-DELAY_MODELS = ("mm1", "uniform", "gamma")
+#: ``Sampler`` helpers: "mm1" is exponential with mean 1/rate; the rest
+#: keep that mean but change the shape — "uniform"/"gamma" are the
+#: lighter-than-exponential §III-B testbed regime where Theorems 1-2
+#: drift low, "lognormal"/"weibull" are the heavy-tail regime where
+#: they drift high.
+DELAY_MODELS = ("mm1", "uniform", "gamma", "lognormal", "weibull")
 UNIFORM_SPREAD = 0.9     # matches uniform_sampler's default
 GAMMA_SHAPE = 2.0        # matches gamma_sampler's default
+LOGNORMAL_SIGMA = 1.0    # matches lognormal_sampler's default
+WEIBULL_SHAPE = 0.7      # matches weibull_sampler's default (k < 1)
+
+#: Families whose tails overflow the f32 fast path: a single 6-sigma
+#: lognormal draw is ~1e2 x the mean, and the running age *area* squares
+#: it, so heavy-tail windows always take the float64 branch regardless
+#: of frame budget.
+HEAVY_TAIL_MODELS = frozenset({"lognormal", "weibull"})
+
+#: Sentinel accepted by the serving layer (`AnalyticsService`,
+#: `replay_tables`): fit the family from observed delay telemetry via
+#: :func:`fit_delay_model` instead of trusting a flag. The batched
+#: engine itself never sees it — `gi_g1_window` requires a concrete
+#: family.
+AUTO_DELAY_MODEL = "auto"
+
+
+def validate_delay_model(delay_model: str, *, allow_auto: bool = False) -> str:
+    """The single gate every delay-model flag passes through (batched
+    engine, oracle samplers, serving layer). Returns the validated name;
+    raises ``ValueError`` listing the known families — and the ``"auto"``
+    selector sentinel where the caller accepts it."""
+    known = DELAY_MODELS + ((AUTO_DELAY_MODEL,) if allow_auto else ())
+    if delay_model not in known:
+        raise ValueError(
+            f"unknown delay_model {delay_model!r}; known: {known}")
+    return delay_model
 
 #: Host-side dispatch counter: +1 per batched device call. The hot-path
 #: tests assert the replay suite runs entirely through here (no per-stream
@@ -257,13 +303,32 @@ def _delays_from_uniforms(u, mean, delay_model: str):
         k = int(GAMMA_SHAPE)
         if float(GAMMA_SHAPE) == k:
             return -jnp.log1p(-u).sum(axis=0) * (mean / GAMMA_SHAPE)
+    if delay_model == "lognormal":
+        # Inverse-CDF: exp(m + sigma * Phi^-1(u)) with the mean-matching
+        # log-location m = ln(mean) - sigma^2/2. Clip u away from {0, 1}
+        # so ndtri stays finite (u=0 would give a literal zero delay).
+        uc = jnp.clip(u[0], 1e-7, 1.0 - 1e-7)
+        m = jnp.log(mean) - 0.5 * LOGNORMAL_SIGMA * LOGNORMAL_SIGMA
+        return jnp.exp(m + LOGNORMAL_SIGMA * jax.scipy.special.ndtri(uc))
+    if delay_model == "weibull":
+        # Inverse-CDF: scale * (-ln(1-u))^(1/k), mean-matched via
+        # scale = mean / Gamma(1 + 1/k). k < 1 => sub-exponential tail.
+        scale = mean / math.gamma(1.0 + 1.0 / WEIBULL_SHAPE)
+        return scale * jnp.power(-jnp.log1p(-u[0]), 1.0 / WEIBULL_SHAPE)
     raise ValueError(
         f"unknown delay_model {delay_model!r}; known: {DELAY_MODELS}")
 
 
-@functools.partial(jax.jit, static_argnames=("n_frames", "delay_model"))
+#: Streams per epoch whose raw transmission delays are surfaced when
+#: ``collect_samples`` is set — enough for the CvM selector to pool a
+#: few thousand draws without shipping the whole [E, N, F] tensor host-side.
+SAMPLE_STREAM_CAP = 32
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_frames", "delay_model", "collect_samples"))
 def _window_sim(lam, mu, p, pol, keys, horizon, n_frames: int,
-                delay_model: str):
+                delay_model: str, collect_samples: int = 0):
     """The fused data-plane program: ONE ``lax.scan`` over the frame axis
     with ``[E * N]``-wide vector carries.
 
@@ -337,18 +402,28 @@ def _window_sim(lam, mu, p, pol, keys, horizon, n_frames: int,
     seg = jnp.maximum(h_eff - last_t, zero)
     area = area + age0 * seg + 0.5 * seg * seg
     shape = lambda x: x.reshape(e, n)
-    return {
+    out = {
         "aopi": shape(area / h_eff),
         "horizon": shape(h_eff),
         "n_frames": shape(n_arr),
         "n_completed": shape(n_done),
         "n_accurate": shape(n_acc),
     }
+    if collect_samples:
+        # Raw transmission delays for the fitted selector: the camera
+        # uploads back-to-back (§III-A), so inter-arrival == transmission
+        # times, i.e. the T draws ARE family-distributed observations.
+        capf = min(int(collect_samples), n_frames)
+        ns = min(n, SAMPLE_STREAM_CAP)
+        samp = T[:capf].reshape(capf, e, n)[:, :, :ns]
+        out["delay_samples"] = jnp.moveaxis(samp, 0, -1)   # [E, ns, capf]
+    return out
 
 
 def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
                  n_frames: int, horizon: float,
-                 delay_model: str = "mm1", active=None) -> dict:
+                 delay_model: str = "mm1", active=None,
+                 collect_samples: int = 0) -> dict:
     """Simulate ``[E, N]`` GI/G/1 streams (E epochs x N streams) in ONE
     jitted device dispatch.
 
@@ -368,6 +443,12 @@ def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
     window stays one fused dispatch and fleet reductions stay finite.
     Live lanes are bitwise identical to an unmasked call.
 
+    ``collect_samples > 0`` additionally returns ``delay_samples``
+    ``[E, min(N, SAMPLE_STREAM_CAP), collect_samples]`` — the raw
+    transmission-delay draws (exactly family-distributed, since uploads
+    are back-to-back) for the telemetry-fitted :func:`fit_delay_model`
+    selector. Dead-lane samples are zeroed.
+
     One ``lax.scan`` over the frame axis carries every (epoch, stream)
     recurrence as an ``[E*N]`` vector — single-pass like the numpy
     oracle's cumsums, but batched across the whole window. Short frame
@@ -377,12 +458,14 @@ def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
     numpy: ``aopi``/``horizon``/``n_frames``/``n_completed``/
     ``n_accurate``, each ``[E, N]``.
     """
-    if delay_model not in DELAY_MODELS:
-        raise ValueError(
-            f"unknown delay_model {delay_model!r}; known: {DELAY_MODELS}")
+    validate_delay_model(delay_model)
     global BATCH_DISPATCHES
     n_frames = int(n_frames)
-    dtype = np.float32 if n_frames <= F32_MAX_FRAMES else np.float64
+    # Heavy tails force the f64 branch: the f32 <= 1024-frames fast path
+    # relies on delays staying within a few means of each other, which a
+    # sub-exponential tail violates (see HEAVY_TAIL_MODELS).
+    use_f64 = n_frames > F32_MAX_FRAMES or delay_model in HEAVY_TAIL_MODELS
+    dtype = np.float64 if use_f64 else np.float32
     lam = np.atleast_2d(np.asarray(lam, dtype))
     mu_h = np.atleast_2d(np.asarray(mu, dtype))
     live = (lam > 0.0) & (mu_h > 0.0)
@@ -401,11 +484,84 @@ def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
             jnp.asarray(np.clip(
                 np.atleast_2d(np.asarray(p, dtype)), 1e-3, 1.0)),
             jnp.asarray(np.atleast_2d(np.asarray(pol, np.int32))),
-            keys, float(horizon), n_frames, str(delay_model))
+            keys, float(horizon), n_frames, str(delay_model),
+            int(collect_samples))
         out = {k: np.asarray(v, np.float64) for k, v in out.items()}
         if not live.all():
             # Dead lanes ran on clamped stand-in rates — zero them out.
+            samples = out.pop("delay_samples", None)
             out = {k: np.where(live, v, 0.0) for k, v in out.items()}
+            if samples is not None:
+                ns = samples.shape[1]
+                out["delay_samples"] = np.where(
+                    live[:, :ns, None], samples, 0.0)
     BATCH_DISPATCHES += 1
     obs.counter("queues.batch_dispatches", delay_model=delay_model).inc()
     return out
+
+
+# ---------------------------------------------------------------------------
+# Telemetry-fitted delay-model selector
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DelayFit:
+    """Result of :func:`fit_delay_model`: the winning family plus the
+    per-family Cramér–von Mises residuals it beat (smaller = closer)."""
+    model: str
+    residuals: dict
+    n_samples: int
+
+
+def _family_cdf(x: np.ndarray, delay_model: str) -> np.ndarray:
+    """CDF of the unit-mean member of ``delay_model`` evaluated at ``x``
+    (x >= 0). Each family is parameterized exactly as the samplers /
+    ``_delays_from_uniforms`` are, with the mean pinned to 1."""
+    if delay_model == "mm1":
+        return -np.expm1(-x)
+    if delay_model == "uniform":
+        lo, width = 1.0 - UNIFORM_SPREAD, 2.0 * UNIFORM_SPREAD
+        return np.clip((x - lo) / width, 0.0, 1.0)
+    if delay_model == "gamma":
+        # Erlang-k with mean 1 => rate k. Closed form for integer k.
+        k = int(GAMMA_SHAPE)
+        terms = sum((k * x) ** j / math.factorial(j) for j in range(k))
+        return -np.expm1(-k * x) - np.exp(-k * x) * (terms - 1.0)
+    if delay_model == "lognormal":
+        from scipy.special import ndtr
+        s = LOGNORMAL_SIGMA
+        m = -0.5 * s * s
+        safe = np.maximum(x, 1e-300)
+        return np.where(x > 0.0, ndtr((np.log(safe) - m) / s), 0.0)
+    if delay_model == "weibull":
+        k = WEIBULL_SHAPE
+        scale = 1.0 / math.gamma(1.0 + 1.0 / k)
+        return -np.expm1(-np.power(np.maximum(x, 0.0) / scale, k))
+    raise ValueError(
+        f"unknown delay_model {delay_model!r}; known: {DELAY_MODELS}")
+
+
+def fit_delay_model(samples, models: Sequence[str] = DELAY_MODELS,
+                    min_samples: int = 8) -> DelayFit:
+    """Pick the delay family with the smallest Cramér–von Mises residual
+    against observed delay samples.
+
+    ``samples`` is any array of positive delay observations (pooled
+    inter-completion / transmission times from telemetry; zeros — masked
+    dead-lane fill — are dropped). Each candidate family is mean-matched
+    to the sample mean, its CDF evaluated at the sorted samples, and the
+    mean squared distance to the empirical CDF ``(i - 0.5)/n`` taken as
+    the residual. Falls back to "mm1" (the paper's modeling assumption)
+    below ``min_samples`` observations.
+    """
+    x = np.asarray(samples, np.float64).ravel()
+    x = x[np.isfinite(x) & (x > 0.0)]
+    n = x.size
+    if n < min_samples:
+        return DelayFit("mm1", {}, n)
+    x = np.sort(x) / x.mean()                 # mean-matched, unit scale
+    ecdf = (np.arange(1, n + 1) - 0.5) / n
+    residuals = {m: float(np.mean((_family_cdf(x, m) - ecdf) ** 2))
+                 for m in models}
+    best = min(residuals, key=residuals.get)
+    return DelayFit(best, residuals, n)

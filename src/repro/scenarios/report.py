@@ -12,6 +12,10 @@ column set: the *measured* AoPI from the M/M/1 data-plane replay
 (``repro.serving.replay``) with the same mean/percentile/worst
 aggregation, and the relative divergence ``measured/predicted - 1`` —
 the model-vs-measurement gap where config-adaptation policies break.
+With ``dataplane_params={"mode": "engine"}`` a third column set appears:
+the real continuous-batching engine's AoPI (the truth ladder's third
+rung) with per-rung divergences against both the GI/G/1 plane
+(``div:gi``) and the closed forms (``div:cf``).
 
 :func:`degradation` is the fault-plane counterpart: it replays a suite
 clean and once per fault kind (``repro.faults``) and tabulates, per
@@ -47,6 +51,13 @@ class FamilyStats:
     # model name -> family-mean divergence, one entry per replayed delay
     # family (the primary model's entry equals ``divergence``).
     divergence_models: Optional[dict] = None
+    # Rung-3 (real continuous-batching engine) columns — None unless the
+    # replay ran with ``mode="engine"``. In that mode the ``measured_*``
+    # block is the rung-2 GI/G/1 plane at the same truth rates, so the
+    # three rungs of the truth ladder sit side by side per family.
+    engine_mean: Optional[float] = None
+    engine_pct: Optional[float] = None
+    engine_worst: Optional[float] = None
 
     @property
     def divergence(self) -> Optional[float]:
@@ -55,6 +66,22 @@ class FamilyStats:
         if self.measured_mean is None:
             return None
         return self.measured_mean / max(self.mean_predicted, 1e-12) - 1.0
+
+    @property
+    def engine_vs_gi(self) -> Optional[float]:
+        """Rung 3 vs rung 2: ``engine/measured - 1`` (real engine against
+        the GI/G/1 plane); None without an engine replay."""
+        if self.engine_mean is None or self.measured_mean is None:
+            return None
+        return self.engine_mean / max(self.measured_mean, 1e-12) - 1.0
+
+    @property
+    def engine_vs_predicted(self) -> Optional[float]:
+        """Rung 3 vs rung 1: ``engine/predicted - 1`` (real engine against
+        the closed-form AoPI); None without an engine replay."""
+        if self.engine_mean is None or self.mean_predicted is None:
+            return None
+        return self.engine_mean / max(self.mean_predicted, 1e-12) - 1.0
 
 
 @dataclasses.dataclass
@@ -77,6 +104,13 @@ class RobustnessReport:
     @property
     def has_measured(self) -> bool:
         return any(s.measured_mean is not None
+                   for row in self.table.values() for s in row.values())
+
+    @property
+    def has_engine(self) -> bool:
+        """True when the replay climbed to the truth ladder's third rung
+        (``dataplane_params={"mode": "engine"}``)."""
+        return any(s.engine_mean is not None
                    for row in self.table.values() for s in row.values())
 
     def worst_family(self, policy: str) -> tuple[str, FamilyStats]:
@@ -103,7 +137,9 @@ class RobustnessReport:
         """Flat rows (benchmarks): [policy, family, mean, pXX, worst, acc]
         plus [measured_mean, measured_pXX, measured_worst, divergence]
         when the sweep was replayed through the data plane, plus one
-        divergence per extra replayed delay model."""
+        divergence per extra replayed delay model, plus
+        [engine_mean, engine_pXX, engine_worst, engine_vs_gi,
+        engine_vs_predicted] when the replay ran ``mode="engine"``."""
         out = []
         for p in self.policies:
             for f in self.families:
@@ -115,6 +151,9 @@ class RobustnessReport:
                             s.measured_worst, s.divergence]
                     row += [s.divergence_models[dm]
                             for dm in self._extra_models]
+                if self.has_engine:
+                    row += [s.engine_mean, s.engine_pct, s.engine_worst,
+                            s.engine_vs_gi, s.engine_vs_predicted]
                 out.append(row)
         return out
 
@@ -123,6 +162,7 @@ class RobustnessReport:
         head = (f"{'policy':<6} {'family':<{w}} {'mean':>9} "
                 f"{f'p{self.pct:.0f}':>9} {'worst':>9} {'acc':>6}")
         measured = self.has_measured
+        engine = self.has_engine
         extra = self._extra_models
         lines = []
         if measured:
@@ -141,6 +181,13 @@ class RobustnessReport:
                     f"# measured block covers the first {self.replay_slots}"
                     f"/{self.total_slots} slots; 'diverge' compares those "
                     f"same slots' predictions")
+        if engine:
+            head += (f" | {'engine':>9} {f'p{self.pct:.0f}':>9} "
+                     f"{'worst':>9} {'div:gi':>8} {'div:cf':>8}")
+            lines.append("# truth ladder: closed-form (rung 1) | GI/G/1 "
+                         "measured (rung 2) | real engine (rung 3); "
+                         "div:gi = engine vs GI/G/1, div:cf = engine vs "
+                         "closed form")
         lines.append(head)
         for p in self.policies:
             for f in self.families:
@@ -155,6 +202,12 @@ class RobustnessReport:
                              f"{s.divergence:>+8.2%}")
                     for dm in extra:
                         line += f" {s.divergence_models[dm]:>+12.2%}"
+                if engine:
+                    line += (f" | {s.engine_mean:>9.4f} "
+                             f"{s.engine_pct:>9.4f} "
+                             f"{s.engine_worst:>9.4f} "
+                             f"{s.engine_vs_gi:>+8.2%} "
+                             f"{s.engine_vs_predicted:>+8.2%}")
                 lines.append(line)
         return "\n".join(lines)
 
@@ -170,6 +223,7 @@ def robustness(result: SweepResult, pct: float = 95.0) -> RobustnessReport:
     delay_models = getattr(result, "delay_models", None) or ()
     measured_by_model = getattr(result, "measured_by_model", None) or {}
     predicted_by_model = getattr(result, "predicted_by_model", None) or {}
+    engine_aopi = getattr(result, "engine_aopi", None)
     total_slots = next(iter(result.aopi.values())).shape[1]
     replay_slots = (next(iter(measured_aopi.values())).shape[1]
                     if measured_aopi else 0)
@@ -199,6 +253,11 @@ def robustness(result: SweepResult, pct: float = 95.0) -> RobustnessReport:
                               max(predicted_by_model[dm][policy][idx]
                                   .mean(), 1e-12) - 1.0)
                     for dm in delay_models}
+            if engine_aopi is not None and policy in engine_aopi:
+                e = engine_aopi[policy][idx]
+                stats.engine_mean = float(np.nanmean(e))
+                stats.engine_pct = float(np.nanpercentile(e, pct))
+                stats.engine_worst = float(np.nanmax(e))
             table[policy][fam] = stats
     return RobustnessReport(policies=list(result.policies), families=fams,
                             pct=pct, table=table, total_slots=total_slots,

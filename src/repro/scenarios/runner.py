@@ -88,6 +88,10 @@ class SweepResult:
     delay_models: tuple[str, ...] | None = None
     measured_by_model: dict[str, dict[str, np.ndarray]] | None = None
     predicted_by_model: dict[str, dict[str, np.ndarray]] | None = None
+    #: Rung-3 real-engine series for the primary delay model (replay with
+    #: ``dataplane_params={"mode": "engine"}``): policy -> [K, T_replay].
+    engine_aopi: dict[str, np.ndarray] | None = None
+    engine_by_model: dict[str, dict[str, np.ndarray]] | None = None
     #: policy -> repr of the exception that killed its closed-form sweep
     #: (series NaN-filled); merged with the replay's per-cell errors
     #: under ("<scenario>", "<policy>") keys when dataplane=True.
@@ -261,6 +265,12 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
     from ``queues.DELAY_MODELS`` or a tuple of them; the first is the
     primary model backing ``measured_aopi``/``divergence()``, the rest
     land in ``measured_by_model`` — see ``serving.replay.replay_tables``).
+    ``mode="engine"`` climbs to the truth ladder's third rung: every cell
+    also replays through the real continuous-batching engine, and the
+    rung-3 series land in ``engine_aopi``/``engine_by_model`` (with
+    ``engine_params={"frames_cap": ...}`` bounding DES work per epoch and
+    ``true_delay_model`` picking the plane's generating family when
+    ``delay_model="auto"`` runs the fitted selector).
     Each extra delay model is a full extra replay, planner included
     (telemetry feedback couples planning to the plane, and at
     ``telemetry_gain > 0`` the per-model plans genuinely differ);
@@ -343,6 +353,7 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
     measured = predicted = None
     delay_models = None
     measured_by_model = predicted_by_model = None
+    engine_aopi = engine_by_model = None
     fallbacks = degraded = None
     if dataplane:
         # Lazy import: repro.serving pulls the model/engine stack, and
@@ -352,6 +363,7 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         dp = dict(dataplane_params or {})
         known = {"n_epochs", "epoch_duration", "frames_cap", "seed",
                  "plan_window", "telemetry_gain", "delay_model",
+                 "true_delay_model", "mode", "engine_params",
                  "replan_threshold", "faults", "plan_retries",
                  "plan_deadline"}
         unknown = sorted(set(dp) - known)
@@ -362,7 +374,9 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         if isinstance(models, str):
             models = (models,)
         delay_models = tuple(models)
+        mode = str(dp.get("mode", "mm1"))
         measured_by_model, predicted_by_model = {}, {}
+        engine_by_model = {}
         for dm in delay_models:
             rres = _replay.replay_suite(
                 suite_or_tables, policies=list(policies), v=v, p_min=p_min,
@@ -374,17 +388,22 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
                 plan_window=dp.get("plan_window"),
                 telemetry_gain=float(dp.get("telemetry_gain", 0.0)),
                 delay_model=dm,
+                true_delay_model=dp.get("true_delay_model"),
+                mode=mode, engine_params=dp.get("engine_params"),
                 replan_threshold=dp.get("replan_threshold"),
                 faults=dp.get("faults"),
                 plan_retries=int(dp.get("plan_retries", 2)),
                 plan_deadline=dp.get("plan_deadline"))
             measured_by_model[dm] = rres.measured
             predicted_by_model[dm] = rres.predicted
+            if rres.engine:
+                engine_by_model[dm] = rres.engine
             if dm == delay_models[0]:
                 fallbacks, degraded = rres.fallbacks, rres.degraded
                 errors.update(rres.errors)
         measured = measured_by_model[delay_models[0]]
         predicted = predicted_by_model[delay_models[0]]
+        engine_aopi = engine_by_model.get(delay_models[0])
 
     tag = backend if len(devices) > 1 or backend == "vmap" else "vmap"
     backend_str = (f"{tag}[{len(devices)}]" if tag != "vmap" else "vmap")
@@ -396,5 +415,6 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
         q={p: s["q"] for p, s in series.items()},
         measured_aopi=measured, predicted_aopi=predicted,
         delay_models=delay_models, measured_by_model=measured_by_model,
-        predicted_by_model=predicted_by_model, errors=errors,
-        fallbacks=fallbacks, degraded=degraded)
+        predicted_by_model=predicted_by_model,
+        engine_aopi=engine_aopi, engine_by_model=engine_by_model or None,
+        errors=errors, fallbacks=fallbacks, degraded=degraded)

@@ -1,4 +1,5 @@
-from .engine import Engine, Result
+from .engine import Engine, NullAnalyticsModel, Result, make_replay_engine
+from .engine_plane import measure_engine_epoch
 from .replay import (ReplayResult, ScenarioReplay, TableSystem,
                      make_controller, replay_suite, replay_tables)
 from .scheduler import (FCFS, LCFSP, AoPITracker, Frame, StreamQueue,
@@ -6,7 +7,8 @@ from .scheduler import (FCFS, LCFSP, AoPITracker, Frame, StreamQueue,
 from .service import (AnalyticsService, EpochReport, measure_mm1,
                       measure_mm1_loop, measure_window)
 
-__all__ = ["Engine", "Result", "FCFS", "LCFSP", "AoPITracker", "Frame",
+__all__ = ["Engine", "NullAnalyticsModel", "Result", "make_replay_engine",
+           "measure_engine_epoch", "FCFS", "LCFSP", "AoPITracker", "Frame",
            "StreamQueue", "StreamTelemetry", "AnalyticsService",
            "EpochReport", "measure_mm1", "measure_mm1_loop",
            "measure_window", "ReplayResult", "ScenarioReplay",

@@ -68,6 +68,30 @@ class Engine:
             lambda p, t, c: model.decode_step(p, t, c))
         self._prefill = jax.jit(
             lambda p, b, c: model.prefill(p, b, c))
+        # Fused admit: prefill + lane insert + first-token argmax in ONE
+        # dispatch (dynamic lane index), over a memoized single-lane
+        # cache — per-admit init_params dominated replay-plane runtime.
+        self._single_cache = init_params(
+            model.cache_template(1, max_len), jax.random.PRNGKey(0))
+
+        def _admit_fused(p, tokens, batched, single, lane):
+            logits, single = model.prefill(p, {"tokens": tokens}, single)
+
+            def ins(b, s):
+                if (b.ndim == s.ndim and b.shape[0] == s.shape[0]
+                        and b.ndim >= 2):
+                    return b.at[:, lane].set(s[:, 0])
+                return b.at[lane].set(s[0])
+            return jnp.argmax(logits[0, -1]), jax.tree.map(
+                ins, batched, single)
+
+        self._admit_fused = jax.jit(_admit_fused)
+
+        def _decode_next(p, t, c):
+            logits, c = model.decode_step(p, t, c)
+            return jnp.argmax(logits, axis=-1), c
+
+        self._decode_next = jax.jit(_decode_next)
         self._steps = 0
 
     # ------------------------------------------------------------------
@@ -79,31 +103,44 @@ class Engine:
         n = 0
         for lane in self.lanes:
             if lane.status != FREE and lane.stream_id == stream_id:
-                lane.status = FREE
-                lane.frame = None
+                self._release(lane)
                 n += 1
         return n
 
-    def admit(self, frame: Frame, tokens: np.ndarray) -> bool:
-        """Prefill a frame into a free lane. tokens: int32 [seq]."""
-        free = self.free_lanes()
-        if not free:
+    def _release(self, lane: LaneState) -> None:
+        """Return a lane to the free pool with no stale bookkeeping: a
+        freed-but-dirty lane (leftover ``remaining``/``out``/``stream_id``
+        from a churned-out stream) must not leak into the next admit or
+        show up as busy in ``utilization``."""
+        lane.status = FREE
+        lane.stream_id = -1
+        lane.frame = None
+        lane.remaining = 0
+        lane.out = []
+
+    def admit(self, frame: Frame, tokens: np.ndarray,
+              lane: Optional[int] = None) -> bool:
+        """Prefill a frame into a free lane. tokens: int32 [seq].
+
+        ``lane`` pins the request to a specific free lane (the engine
+        replay plane keeps one lane per stream); default picks the first
+        free lane. Returns False when no (or the pinned) lane is busy."""
+        if lane is None:
+            free = self.free_lanes()
+            if not free:
+                return False
+            lane = free[0]
+        elif self.lanes[lane].status != FREE:
             return False
-        lane = free[0]
-        seq = int(tokens.shape[0])
-        single_cache = init_params(
-            self.model.cache_template(1, self.max_len),
-            jax.random.PRNGKey(0))
-        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None]}
-        logits, single_cache = self._prefill(self.params, batch,
-                                             single_cache)
-        self.cache = _insert_lane(self.cache, single_cache, lane)
+        first, self.cache = self._admit_fused(
+            self.params, jnp.asarray(tokens, jnp.int32)[None],
+            self.cache, self._single_cache, lane)
         st = self.lanes[lane]
         st.status = DECODING
         st.stream_id = frame.stream_id
         st.frame = frame
         st.remaining = self.decode_tokens
-        st.out = [int(jnp.argmax(logits[0, -1]))]
+        st.out = [int(first)]
         return True
 
     def decode_tick(self) -> List[Result]:
@@ -115,9 +152,9 @@ class Engine:
         last = np.zeros((self.n_lanes,), np.int32)
         for i in active:
             last[i] = self.lanes[i].out[-1]
-        logits, self.cache = self._decode(self.params,
-                                          jnp.asarray(last), self.cache)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt, self.cache = self._decode_next(self.params,
+                                            jnp.asarray(last), self.cache)
+        nxt = np.asarray(nxt)
         self._steps += 1
         done = []
         for i in active:
@@ -127,11 +164,72 @@ class Engine:
             if lane.remaining <= 0:
                 done.append(Result(lane.stream_id, lane.frame,
                                    np.asarray(lane.out)))
-                lane.status = FREE
-                lane.frame = None
+                self._release(lane)
         return done
 
     @property
     def utilization(self) -> float:
         busy = sum(1 for l in self.lanes if l.status != FREE)
         return busy / self.n_lanes
+
+
+# ---------------------------------------------------------------------------
+# Replay stub model
+# ---------------------------------------------------------------------------
+
+class NullAnalyticsModel:
+    """Tiny deterministic recognition head for engine-rung replay.
+
+    The truth-ladder engine rung needs the *batching/lane mechanics* of a
+    real continuous-batching engine — admit/prefill/decode_tick/preempt —
+    at suite scale, where timing comes from sampled service draws, not
+    model FLOPs. This stub satisfies the model protocol (``template`` /
+    ``cache_template`` / ``prefill`` / ``decode_step``) with a cumsum-
+    embed recurrent cell small enough that thousands of frames cost
+    milliseconds, while staying fully deterministic under a fixed key.
+    """
+
+    def __init__(self, d: int = 8, vocab: int = 32):
+        self.d = d
+        self.vocab = vocab
+
+    def template(self):
+        from ..models import common as c
+        return {"emb": c.P((self.vocab, self.d), (c.VOCAB, c.EMBED),
+                           init="embed"),
+                "out": c.P((self.d, self.vocab), (c.EMBED, c.VOCAB))}
+
+    def cache_template(self, lanes: int, max_len: int):
+        from ..models import common as c
+        # Leading extent-1 dim on "state" takes _insert_lane's stacked
+        # ([P, lanes, ...]) path; "len" takes the flat [lanes] path.
+        return {"len": c.P((lanes,), (None,), init="zeros",
+                           dtype=jnp.int32),
+                "state": c.P((1, lanes, self.d), (None, None, c.EMBED),
+                             init="zeros")}
+
+    def prefill(self, params, batch, cache):
+        tok = batch["tokens"]                       # [B, S]
+        emb = params["emb"][tok]                    # [B, S, d]
+        states = jnp.tanh(jnp.cumsum(emb, axis=1))  # [B, S, d]
+        logits = states @ params["out"]             # [B, S, V]
+        cache = {"len": jnp.full_like(cache["len"], tok.shape[1]),
+                 "state": jnp.swapaxes(states[:, -1:], 0, 1)}
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        emb = params["emb"][tokens]                 # [lanes, d]
+        state = jnp.tanh(cache["state"][0] + emb)
+        logits = state @ params["out"]              # [lanes, V]
+        cache = {"len": cache["len"] + 1, "state": state[None]}
+        return logits, cache
+
+
+def make_replay_engine(n_lanes: int, *, max_len: int = 64,
+                       decode_tokens: int = 4, seed: int = 0) -> Engine:
+    """Engine over :class:`NullAnalyticsModel` for the replay plane —
+    deterministic under ``seed``, one lane per replayed stream."""
+    model = NullAnalyticsModel()
+    params = init_params(model.template(), jax.random.PRNGKey(seed))
+    return Engine(model, params, n_lanes=n_lanes, max_len=max_len,
+                  decode_tokens=decode_tokens, key=jax.random.PRNGKey(seed))

@@ -14,8 +14,10 @@ validates Theorems 1-2), so every (policy, scenario) pair produces
     the jitted ``lbcd.rollout`` / ``baselines.rollout_*`` scan engine
     (whole horizon in one dispatch by default), the data plane is the
     batched GI/G/1 engine, one ``service.measure_window`` dispatch per
-    plan window (``delay_model`` selects exponential/uniform/gamma
-    delays);
+    plan window (``delay_model`` selects any ``queues.DELAY_MODELS``
+    family, or ``"auto"`` for the telemetry-fitted selector); with
+    ``mode="engine"`` every epoch additionally runs on the REAL
+    continuous-batching Engine (rung 3 of the truth ladder);
   * :func:`replay_suite` — the full stacked suite -> :class:`ReplayResult`
     with ``[K, T]`` predicted and measured fleet-mean AoPI per policy.
 
@@ -108,12 +110,19 @@ def make_controller(policy: str, system, *, v: float = 10.0,
 @dataclasses.dataclass
 class ScenarioReplay:
     """One (policy, scenario) replay: per-epoch fleet means + the service
-    (whose ``reports`` hold per-stream detail and telemetry)."""
+    (whose ``reports`` hold per-stream detail and telemetry).
+
+    ``measured`` is always the GI/G/1 model rung; under ``mode="engine"``
+    ``engine`` additionally carries the real-engine rung of the same
+    epochs (``None`` in mm1 mode), and ``fitted`` the per-epoch family
+    the selector chose when ``delay_model="auto"``."""
     predicted: np.ndarray     # [T] fleet-mean calibrated-prediction AoPI
     measured: np.ndarray      # [T] fleet-mean measured AoPI per epoch
     acc: np.ndarray           # [T] fleet-mean planned accuracy
     service: AnalyticsService
     delay_model: str = "mm1"
+    engine: np.ndarray | None = None   # [T] rung-3 engine AoPI
+    fitted: list | None = None         # [T] fitted family per epoch
 
 
 def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
@@ -124,6 +133,9 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
                   solver_backend: str = "jnp",
                   telemetry_gain: float = 0.0,
                   delay_model: str = "mm1",
+                  true_delay_model: str | None = None,
+                  mode: str = "mm1",
+                  engine_params: Mapping | None = None,
                   replan_threshold: float | None = None,
                   faults: "fault_plane.FaultPlan | None" = None,
                   plan_retries: int = 2,
@@ -137,9 +149,16 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
     planner at window boundaries, so a feedback replay must replan.
     The data plane measures each plan window in ONE batched GI/G/1
     dispatch (``service.measure_window``); ``delay_model`` picks the
-    delay family ("mm1" exponential / "uniform" / "gamma" — the §III-B
-    regime where Theorems 1-2 drift), and ``replan_threshold`` arms
-    divergence-triggered early replanning (see ``AnalyticsService``).
+    delay family (``queues.DELAY_MODELS``, or ``"auto"`` for the fitted
+    selector — ``true_delay_model`` then pins the generating family),
+    and ``replan_threshold`` arms divergence-triggered early replanning
+    (see ``AnalyticsService``). ``mode="engine"`` swaps the data plane
+    for the real continuous-batching Engine (rung 3 of the truth
+    ladder): every epoch is replayed on a deterministic stub-model
+    engine via ``engine_plane.measure_engine_epoch`` AND measured on the
+    GI/G/1 plane, so the returned ``ScenarioReplay`` carries both the
+    ``engine`` and ``measured`` series; ``engine_params`` tunes the
+    engine replay (currently ``frames_cap``).
     Bitwise deterministic in ``(seed, tables, n_epochs)``.
 
     ``faults`` (a :class:`repro.faults.FaultPlan`) injects the plan's
@@ -161,23 +180,36 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
     ctrl = make_controller(policy, system, v=v, p_min=p_min,
                            policy_params=policy_params,
                            solver_backend=solver_backend)
+    engine_params = dict(engine_params or {})
     svc = AnalyticsService(
-        ctrl, mode="mm1", epoch_duration=epoch_duration,
+        ctrl, mode=mode, epoch_duration=epoch_duration,
         frames_cap=frames_cap, seed=seed, plan_window=plan_window,
         tables=system.horizon(n_epochs), telemetry_gain=telemetry_gain,
-        delay_model=delay_model, replan_threshold=replan_threshold,
+        delay_model=delay_model, true_delay_model=true_delay_model,
+        engine_frames_cap=engine_params.get("frames_cap"),
+        replan_threshold=replan_threshold,
         faults=faults, plan_retries=plan_retries,
         plan_deadline=plan_deadline)
     # Every span/metric the service emits below here carries the policy
     # and delay-model labels (replay_suite adds family/scenario on top).
     with obs.label_context(policy=policy, delay_model=delay_model), \
-            obs.span("replay.scenario", n_epochs=n_epochs):
+            obs.span("replay.scenario", n_epochs=n_epochs, mode=mode):
         reps = svc.run(n_epochs)
+    if mode == "engine":
+        # measured stays the GI/G/1 model rung (back-compat); the real
+        # engine's series rides the new column.
+        measured = np.array([r.model_aopi for r in reps])
+        engine_series = np.array([r.measured_aopi for r in reps])
+    else:
+        measured = np.array([r.measured_aopi for r in reps])
+        engine_series = None
     return ScenarioReplay(
         predicted=np.array([r.predicted_aopi for r in reps]),
-        measured=np.array([r.measured_aopi for r in reps]),
+        measured=measured,
         acc=np.array([r.accuracy for r in reps]),
-        service=svc, delay_model=delay_model)
+        service=svc, delay_model=delay_model, engine=engine_series,
+        fitted=([r.fitted_model for r in reps]
+                if delay_model == "auto" else None))
 
 
 @dataclasses.dataclass
@@ -198,6 +230,10 @@ class ReplayResult:
     measured: dict[str, np.ndarray]
     acc: dict[str, np.ndarray]
     delay_model: str = "mm1"
+    mode: str = "mm1"
+    #: policy -> [K, T] real-engine AoPI series (rung 3); empty unless the
+    #: suite replayed with ``mode="engine"``.
+    engine: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     #: policy -> [K] lists of the service's (t, reason) fallback records /
     #: degraded-epoch indices (empty when no fault plan was armed).
     fallbacks: dict[str, list] = dataclasses.field(default_factory=dict)
@@ -212,6 +248,14 @@ class ReplayResult:
         return divergence_series(self.measured[policy],
                                  self.predicted[policy])
 
+    def engine_divergence(self, policy: str,
+                          against: str = "measured") -> np.ndarray:
+        """Per-scenario divergence of the engine rung vs ``against``
+        ("measured" = the GI/G/1 rung, "predicted" = closed form). [K]"""
+        ref = (self.measured if against == "measured"
+               else self.predicted)[policy]
+        return divergence_series(self.engine[policy], ref)
+
 
 def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
                  v: float = 10.0, p_min: float = 0.7,
@@ -222,6 +266,9 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
                  solver_backend: str = "jnp",
                  telemetry_gain: float = 0.0,
                  delay_model: str = "mm1",
+                 true_delay_model: str | None = None,
+                 mode: str = "mm1",
+                 engine_params: Mapping | None = None,
                  replan_threshold: float | None = None,
                  faults: "fault_plane.FaultPlan | None" = None,
                  plan_retries: int = 2,
@@ -259,6 +306,7 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
     predicted: dict[str, list] = {p: [] for p in policies}
     measured: dict[str, list] = {p: [] for p in policies}
     acc: dict[str, list] = {p: [] for p in policies}
+    engine: dict[str, list] = {p: [] for p in policies}
     fallbacks: dict[str, list] = {p: [] for p in policies}
     degraded: dict[str, list] = {p: [] for p in policies}
     errors: dict[tuple, str] = {}
@@ -277,6 +325,8 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
                         solver_backend=solver_backend,
                         telemetry_gain=telemetry_gain,
                         delay_model=delay_model,
+                        true_delay_model=true_delay_model,
+                        mode=mode, engine_params=engine_params,
                         replan_threshold=replan_threshold,
                         faults=faults, plan_retries=plan_retries,
                         plan_deadline=plan_deadline)
@@ -291,12 +341,16 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
                 predicted[policy].append(nan)
                 measured[policy].append(nan.copy())
                 acc[policy].append(nan.copy())
+                if mode == "engine":
+                    engine[policy].append(nan.copy())
                 fallbacks[policy].append([])
                 degraded[policy].append([])
                 continue
             predicted[policy].append(rep.predicted)
             measured[policy].append(rep.measured)
             acc[policy].append(rep.acc)
+            if mode == "engine":
+                engine[policy].append(rep.engine)
             fallbacks[policy].append(list(rep.service.fallbacks))
             degraded[policy].append(list(rep.service.degraded_epochs))
     return ReplayResult(
@@ -305,5 +359,8 @@ def replay_suite(suite_or_tables, policies: Sequence[str] = POLICIES, *,
         predicted={p: np.stack(s) for p, s in predicted.items()},
         measured={p: np.stack(s) for p, s in measured.items()},
         acc={p: np.stack(s) for p, s in acc.items()},
-        delay_model=delay_model, fallbacks=fallbacks, degraded=degraded,
+        delay_model=delay_model, mode=mode,
+        engine=({p: np.stack(s) for p, s in engine.items()}
+                if mode == "engine" else {}),
+        fallbacks=fallbacks, degraded=degraded,
         errors=errors)

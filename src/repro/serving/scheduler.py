@@ -38,6 +38,9 @@ class StreamTelemetry:
     n_frames: np.ndarray     # frames offered to each stream's queue
     n_completed: np.ndarray  # frames whose result was delivered
     aopi_hat: np.ndarray = None  # measured per-stream AoPI over the epoch
+    #: Raw per-stream transmission-delay draws [streams, cap] (zero-padded;
+    #: only set when the service runs the fitted delay-model selector).
+    delay_samples: Optional[np.ndarray] = None
 
     @staticmethod
     def empty(n_streams: int) -> "StreamTelemetry":

@@ -74,7 +74,8 @@ MAX_BATCH_ELEMS = 1 << 25
 
 def measure_window(lam, mu, p, pol, *, epoch_duration: float = 300.0,
                    frames_cap: int = 200_000, frames_floor: int = 200,
-                   seed: int = 0, t0: int = 0, delay_model: str = "mm1"
+                   seed: int = 0, t0: int = 0, delay_model: str = "mm1",
+                   collect_samples: int = 0
                    ) -> tuple[np.ndarray, list[StreamTelemetry]]:
     """Measure epochs ``[t0, t0+E)`` of an N-stream data plane in ONE
     batched device dispatch (``queues.gi_g1_window``; chunked along the
@@ -107,8 +108,9 @@ def measure_window(lam, mu, p, pol, *, epoch_duration: float = 300.0,
         out = queues.gi_g1_window(
             lam[e0:e1], mu[e0:e1], p[e0:e1], pol[e0:e1],
             seed=seed, t0=t0 + e0, n_frames=n_frames, horizon=horizon,
-            delay_model=delay_model)
+            delay_model=delay_model, collect_samples=collect_samples)
         measured[e0:e1] = out["aopi"]
+        samples = out.get("delay_samples")
         for j in range(e1 - e0):
             h_eff = np.maximum(out["horizon"][j], 1e-9)
             tels.append(StreamTelemetry(
@@ -118,7 +120,9 @@ def measure_window(lam, mu, p, pol, *, epoch_duration: float = 300.0,
                 mu_hat=out["n_completed"][j] / h_eff,
                 n_frames=out["n_frames"][j].astype(np.float64),
                 n_completed=out["n_completed"][j].astype(np.float64),
-                aopi_hat=out["aopi"][j].copy()))
+                aopi_hat=out["aopi"][j].copy(),
+                delay_samples=(None if samples is None
+                               else samples[j])))
     return measured, tels
 
 
@@ -191,6 +195,13 @@ class EpochReport:
     per_stream_measured: np.ndarray
     per_stream_predicted: np.ndarray
     telemetry: Optional[StreamTelemetry] = None
+    # Engine mode only: the rung-2 GI/G/1 measurement of the same epoch
+    # (measured_aopi is then the rung-3 engine measurement), so one run
+    # yields all three truth-ladder rungs.
+    model_aopi: Optional[float] = None
+    per_stream_model: Optional[np.ndarray] = None
+    #: Family the fitted selector chose for this epoch (delay_model="auto").
+    fitted_model: Optional[str] = None
 
 
 class AnalyticsService:
@@ -201,6 +212,8 @@ class AnalyticsService:
                  tables: HorizonTables | None = None,
                  telemetry_gain: float = 0.0,
                  delay_model: str = "mm1",
+                 true_delay_model: str | None = None,
+                 engine_frames_cap: int | None = None,
                  replan_threshold: float | None = None,
                  faults: "fault_plane.FaultPlan | None" = None,
                  plan_retries: int = 2,
@@ -216,8 +229,15 @@ class AnalyticsService:
         AoPI correct the next planning window's beliefs (EWMA weight).
         ``delay_model`` selects the data plane's delay family
         (``queues.DELAY_MODELS``; "mm1" keeps the paper's exponential
-        model, "uniform"/"gamma" the §III-B testbed regime where
-        Theorems 1-2 drift). ``replan_threshold`` (relative
+        model, "uniform"/"gamma" the lighter-tailed §III-B testbed
+        regime, "lognormal"/"weibull" the heavy-tail regime) — or
+        ``"auto"``, which fits the family from observed transmission
+        delays each epoch (``queues.fit_delay_model``) and uses the
+        fitted label for observability and, in engine mode, for the
+        GI/G/1 model rung. ``true_delay_model`` pins the *generating*
+        family of the plane (the world); it defaults to ``delay_model``
+        when that is concrete, to "mm1" under "auto". ``replan_threshold``
+        (relative
         measured-vs-predicted divergence, e.g. 0.1) arms
         divergence-triggered replanning: when an epoch's divergence
         crosses it mid-window, the remaining plan window is cut and
@@ -238,10 +258,15 @@ class AnalyticsService:
         if planner not in ("scan", "step"):
             raise ValueError(f"unknown planner {planner!r}; "
                              "known: ('scan', 'step')")
-        if delay_model not in queues.DELAY_MODELS:
-            raise ValueError(
-                f"unknown delay_model {delay_model!r}; "
-                f"known: {queues.DELAY_MODELS}")
+        if mode not in ("mm1", "engine"):
+            raise ValueError(f"unknown mode {mode!r}; "
+                             "known: ('mm1', 'engine')")
+        queues.validate_delay_model(delay_model, allow_auto=True)
+        if true_delay_model is None:
+            true_delay_model = (delay_model
+                                if delay_model != queues.AUTO_DELAY_MODEL
+                                else "mm1")
+        queues.validate_delay_model(true_delay_model)
         # Scan planning needs a whole-horizon engine on the controller AND
         # a horizon source (replay tables, or a system that can pregenerate
         # one); duck-typed systems exposing only capacities(t)/tables(t)
@@ -262,6 +287,11 @@ class AnalyticsService:
         self.tables = tables
         self.telemetry_gain = float(telemetry_gain)
         self.delay_model = delay_model
+        self.true_delay_model = true_delay_model
+        self._auto = delay_model == queues.AUTO_DELAY_MODEL
+        self._fitted_model: str | None = None
+        self.fitted_models: list[tuple[int, str]] = []  # (t, fitted family)
+        self._delay_buf: list[np.ndarray] = []  # unit-mean pooled samples
         self.replan_threshold = (None if replan_threshold is None
                                  else float(replan_threshold))
         self.reports: list = []
@@ -294,6 +324,15 @@ class AnalyticsService:
         self._plan = None
         self._plan_t0 = 0
         self._plan_meas = None               # window-batched measurements
+        from . import engine_plane
+        self.engine_frames_cap = int(
+            engine_plane.ENGINE_FRAMES_CAP if engine_frames_cap is None
+            else engine_frames_cap)
+        if self.mode == "engine" and self.engine is None:
+            # Replay-grade default: the deterministic stub-model engine
+            # with one lane per stream (see engine_plane).
+            from .engine import make_replay_engine
+            self.engine = make_replay_engine(n, seed=seed)
 
     # ------------------------------------------------------------------
     # Planner: lookahead windows as one jitted scan
@@ -501,6 +540,48 @@ class AnalyticsService:
     # ------------------------------------------------------------------
     # Data plane
     # ------------------------------------------------------------------
+    #: Per-stream delay samples surfaced per epoch / pooled for the fit.
+    SAMPLE_CAP = 64
+    SAMPLE_POOL = 8192
+
+    def _obs_model(self) -> str:
+        """The ``delay_model`` obs label: under "auto" it is the *fitted*
+        per-window family (or the bare sentinel until enough samples)."""
+        if self._auto:
+            return self._fitted_model or queues.AUTO_DELAY_MODEL
+        return self.delay_model
+
+    def _measure_model(self) -> str:
+        """Family the GI/G/1 *model* rung measures under in engine mode:
+        the fitted family when the selector is armed (the EWMA-corrected
+        planner then measures under what telemetry says the world is)."""
+        if self._auto:
+            return self._fitted_model or "mm1"
+        return self.delay_model
+
+    def _update_fit(self, t: int, tel: StreamTelemetry | None):
+        """Fold this epoch's raw delay samples into the pooled buffer
+        (per-stream mean-normalized so streams with different rates share
+        one shape) and re-fit the family."""
+        if not self._auto or tel is None or tel.delay_samples is None:
+            return
+        for row in np.asarray(tel.delay_samples, np.float64):
+            row = row[row > 0.0]
+            if row.size >= 4:
+                self._delay_buf.append(row / row.mean())
+        while (sum(a.size for a in self._delay_buf) > self.SAMPLE_POOL
+               and len(self._delay_buf) > 1):
+            self._delay_buf.pop(0)
+        pooled = (np.concatenate(self._delay_buf) if self._delay_buf
+                  else np.empty(0))
+        fit = queues.fit_delay_model(pooled)
+        if fit.residuals:                 # enough samples to trust
+            self._fitted_model = fit.model
+        self.fitted_models.append((t, self._fitted_model or "mm1"))
+        obs.event("service.delay_fit", policy=self._policy, t=t,
+                  model=self._fitted_model or "unfit",
+                  n_samples=fit.n_samples)
+
     def _plane_rates(self, t: int, dec) -> tuple[np.ndarray, np.ndarray]:
         """True arrival rate and accuracy of the chosen configs — from the
         *uncorrected* tables (the planner may be acting on telemetry-scaled
@@ -552,13 +633,14 @@ class AnalyticsService:
         dec = res.decision
         lam_true, p_true = self._plane_rates_window(t0, n_epochs, dec)
         with obs.span("service.measure_window", policy=self._policy,
-                      delay_model=self.delay_model, t0=t0,
+                      delay_model=self._obs_model(), t0=t0,
                       epochs=n_epochs, streams=int(lam_true.shape[-1])):
             return measure_window(
                 lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
                 epoch_duration=self.epoch_duration,
                 frames_cap=self.frames_cap, seed=self.seed, t0=t0,
-                delay_model=self.delay_model)
+                delay_model=self.true_delay_model,
+                collect_samples=self.SAMPLE_CAP if self._auto else 0)
 
     def _measure_epoch(self, t: int, dec):
         """Measured AoPI + telemetry for epoch ``t``. On the scan path the
@@ -577,13 +659,16 @@ class AnalyticsService:
             return measured_w[j], tels[j]
         lam_true, p_true = self._plane_rates(t, dec)
         with obs.span("service.measure_window", policy=self._policy,
-                      delay_model=self.delay_model, t0=t, epochs=1,
+                      delay_model=self._obs_model(), t0=t, epochs=1,
                       streams=int(np.asarray(lam_true).shape[-1])):
-            return measure_mm1(
-                lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
+            measured, tels = measure_window(
+                lam_true[None], np.asarray(dec.mu)[None], p_true[None],
+                np.asarray(dec.pol)[None],
                 epoch_duration=self.epoch_duration,
-                frames_cap=self.frames_cap, seed=self.seed, t=t,
-                delay_model=self.delay_model)
+                frames_cap=self.frames_cap, seed=self.seed, t0=t,
+                delay_model=self.true_delay_model,
+                collect_samples=self.SAMPLE_CAP if self._auto else 0)
+            return measured[0], tels[0]
 
     def _ingest_telemetry(self, t: int, dec, tel: StreamTelemetry):
         """Gate the epoch's measurement through the fault plan before the
@@ -678,11 +763,19 @@ class AnalyticsService:
         # information from epochs < t, so divergence is out-of-sample.
         predicted = self._aopi_scale * np.asarray(dec.aopi)
         tel = None
+        model_meas = None
         if self.mode == "mm1":
             measured, tel = self._measure_epoch(t, dec)
             self._ingest_telemetry(t, dec, tel)
+            self._update_fit(t, tel)
         else:
-            measured = self._run_engine_epoch(rec)
+            measured, tel = self._run_engine_epoch(rec)
+            self._ingest_telemetry(t, dec, tel)
+            self._update_fit(t, tel)
+            # Rung 2 of the same epoch, measured under the (possibly
+            # fitted) model family — one engine run yields all three
+            # truth-ladder columns.
+            model_meas = self._measure_model_rung(t, dec)
         act = self._active_at(t)
         if act is None:
             pred_mean = float(np.mean(predicted))
@@ -695,13 +788,22 @@ class AnalyticsService:
             pred_mean = float(np.sum(predicted * act) / n_live)
             meas_mean = float(np.sum(measured * act) / n_live)
             acc_mean = float(np.sum(np.asarray(dec.acc) * act) / n_live)
+        if act is None:
+            model_mean = (None if model_meas is None
+                          else float(np.mean(model_meas)))
+        else:
+            model_mean = (None if model_meas is None else float(
+                np.sum(model_meas * act) / max(float(act.sum()), 1.0)))
         rep = EpochReport(
             t=t, predicted_aopi=pred_mean,
             measured_aopi=meas_mean,
             accuracy=acc_mean, q=rec.q,
             per_stream_measured=measured,
             per_stream_predicted=predicted,
-            telemetry=tel)
+            telemetry=tel,
+            model_aopi=model_mean,
+            per_stream_model=model_meas,
+            fitted_model=self._fitted_model if self._auto else None)
         self.reports.append(rep)
         div = rep.measured_aopi / max(rep.predicted_aopi, 1e-12) - 1.0
         self.divergences.append(div)
@@ -745,49 +847,54 @@ class AnalyticsService:
                       t=t + 1, divergence=float(div))
 
     # ------------------------------------------------------------------
-    def _run_engine_epoch(self, rec) -> np.ndarray:
-        """Real-engine data plane (small scale; examples/serve_e2e.py)."""
+    def _run_engine_epoch(self, rec
+                          ) -> tuple[np.ndarray, StreamTelemetry]:
+        """Rung 3: the real continuous-batching engine, driven by the
+        discrete-event replay plane (``engine_plane.measure_engine_epoch``)
+        at the *unscaled* truth rates — the same model-vs-measurement
+        split as the batched plane, but with real admits, decode ticks,
+        and preemptions on the Engine's lanes."""
         assert self.engine is not None
+        from . import engine_plane
         dec = rec.decision
-        n = len(dec.lam)
-        rng = np.random.default_rng(self.seed + 7919 * rec.t)
-        tracker = AoPITracker(n)
-        qs = [StreamQueue(i, int(dec.pol[i])) for i in range(n)]
-        # Frame arrival times per stream (exponential inter-arrivals).
-        events = []
-        for i in range(n):
-            lam = max(float(dec.lam[i]), 1e-6)
-            k = max(int(lam * self.epoch_duration), 1)
-            gaps = rng.exponential(1.0 / lam, size=k)
-            ts = np.cumsum(gaps)
-            gen = np.concatenate(([0.0], ts))[:-1]
-            for g_t, a_t in zip(gen, ts):
-                if a_t < self.epoch_duration:
-                    events.append(Frame(i, g_t, a_t))
-        events.sort(key=lambda f: f.arrive_time)
-        step_time = self.epoch_duration / max(
-            len(events) * self.engine.decode_tokens, 1)
-        now, ei = 0.0, 0
-        while now < self.epoch_duration:
-            while ei < len(events) and events[ei].arrive_time <= now:
-                f = events[ei]
-                if qs[f.stream_id].on_arrival(f):
-                    self.engine.preempt_stream(f.stream_id)
-                ei += 1
-            for q in qs:
-                while len(q) and self.engine.free_lanes():
-                    f = q.pop()
-                    toks = rng.integers(
-                        2, 200, size=f.tokens).astype(np.int32)
-                    self.engine.admit(f, toks)
-            for res in self.engine.decode_tick():
-                p = float(np.clip(dec.acc[res.stream_id], 1e-3, 1.0))
-                acc = bool(rng.random() < p)
-                tracker.on_result(res.stream_id, res.frame.gen_time, acc,
-                                  now)
-            now += step_time
-        return np.array([tracker.mean_aopi(i, self.epoch_duration)
-                         for i in range(n)])
+        t = rec.t
+        lam_true, p_true = self._plane_rates(t, dec)
+        act = self._active_at(t)
+        with obs.span("service.measure_engine", policy=self._policy,
+                      delay_model=self._obs_model(), t0=t,
+                      streams=int(np.asarray(lam_true).shape[-1])):
+            out = engine_plane.measure_engine_epoch(
+                self.engine, lam_true, np.asarray(dec.mu), p_true,
+                np.asarray(dec.pol),
+                epoch_duration=self.epoch_duration, seed=self.seed, t=t,
+                delay_model=self.true_delay_model, active=act,
+                frames_cap=self.engine_frames_cap,
+                collect_samples=self.SAMPLE_CAP if self._auto else 0)
+        h_eff = np.maximum(out["horizon"], 1e-9)
+        tel = StreamTelemetry(
+            acc_hat=out["n_accurate"] / np.maximum(out["n_completed"], 1),
+            lam_hat=out["n_frames"] / h_eff,
+            mu_hat=out["n_completed"] / h_eff,
+            n_frames=out["n_frames"].astype(np.float64),
+            n_completed=out["n_completed"].astype(np.float64),
+            aopi_hat=out["aopi"].copy(),
+            delay_samples=out.get("delay_samples"))
+        return out["aopi"], tel
+
+    def _measure_model_rung(self, t: int, dec) -> np.ndarray:
+        """Rung 2 in engine mode: the batched GI/G/1 plane at the same
+        truth rates, under the measurement family (fitted when
+        ``delay_model="auto"``)."""
+        lam_true, p_true = self._plane_rates(t, dec)
+        with obs.span("service.measure_window", policy=self._policy,
+                      delay_model=self._obs_model(), t0=t, epochs=1,
+                      streams=int(np.asarray(lam_true).shape[-1])):
+            measured, _ = measure_mm1(
+                lam_true, np.asarray(dec.mu), p_true, np.asarray(dec.pol),
+                epoch_duration=self.epoch_duration,
+                frames_cap=self.frames_cap, seed=self.seed, t=t,
+                delay_model=self._measure_model())
+        return measured
 
     def run(self, n_epochs: int):
         return [self.run_epoch(t) for t in range(n_epochs)]

@@ -68,12 +68,87 @@ def test_batched_engine_matches_oracle_hypothesis():
 def test_non_exponential_models_drift_from_theorems():
     """The §III-B regime: same means, different shape -> Theorems 1-2 are
     biased (less delay variance means less waiting, so measured < theory
-    under FCFS)."""
+    under FCFS; heavy tails push the other way)."""
     lam, mu, p = 5.0, 10.0, 0.8
     th = float(aopi.aopi(lam, mu, p, aopi.FCFS))
     for dm in ("uniform", "gamma"):
         out = _measure(lam, mu, p, aopi.FCFS, seed=4, delay_model=dm)
         assert out["aopi"] < th * 0.95
+    for dm in queues.HEAVY_TAIL_MODELS:
+        out = _measure(lam, mu, p, aopi.FCFS, seed=4, delay_model=dm)
+        assert out["aopi"] > th * 1.05
+
+
+def test_heavy_tail_samplers_match_target_mean_and_shape():
+    """Mean-matched heavy tails: sampler mean == 1/rate for lognormal and
+    weibull, with the coefficient of variation the family's parameters
+    imply (sigma=1 lognormal: CV = sqrt(e - 1); k=0.7 weibull:
+    CV ~ 1.46) — well above exponential's CV = 1."""
+    import math
+    rng = np.random.default_rng(3)
+    mean = 0.4
+    ln = queues.lognormal_sampler(mean)(rng, 400_000)
+    assert ln.mean() == pytest.approx(mean, rel=0.02)
+    assert ln.std() / ln.mean() == pytest.approx(
+        np.sqrt(np.e - 1.0), rel=0.05)
+    wb = queues.weibull_sampler(mean)(rng, 400_000)
+    assert wb.mean() == pytest.approx(mean, rel=0.02)
+    k = queues.WEIBULL_SHAPE
+    cv = math.sqrt(math.gamma(1 + 2 / k) / math.gamma(1 + 1 / k) ** 2 - 1)
+    assert wb.std() / wb.mean() == pytest.approx(cv, rel=0.05)
+    assert (ln > 0).all() and (wb > 0).all()
+
+
+def test_heavy_tail_samplers_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.floats(0.05, 5.0), st.integers(0, 10_000),
+           st.sampled_from(sorted(queues.HEAVY_TAIL_MODELS)))
+    def inner(mean, seed, dm):
+        rng = np.random.default_rng(seed)
+        maker = (queues.lognormal_sampler if dm == "lognormal"
+                 else queues.weibull_sampler)
+        x = maker(mean)(rng, 200_000)
+        assert x.mean() == pytest.approx(mean, rel=0.05)
+        assert (x > 0).all()
+        assert x.std() > x.mean()      # heavier-tailed than exponential
+
+    inner()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry-fitted delay-model selector
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dm", queues.DELAY_MODELS)
+def test_fit_delay_model_round_trips_every_family(dm):
+    rng = np.random.default_rng(17)
+    mean = 0.4
+    if dm == "mm1":
+        samples = rng.exponential(mean, 4096)
+    else:
+        samples = queues.oracle_samplers(
+            dm, 1.0 / mean, 10.0)["t_sampler"](rng, 4096)
+    fit = queues.fit_delay_model(samples)
+    assert fit.model == dm, fit
+    assert fit.n_samples == 4096
+    assert fit.residuals[dm] == min(fit.residuals.values())
+
+
+def test_fit_delay_model_falls_back_below_min_samples():
+    fit = queues.fit_delay_model(np.array([1.0, 2.0]))
+    assert fit.model == "mm1" and fit.residuals == {}
+    assert queues.fit_delay_model(np.zeros(64)).model == "mm1"
+
+
+def test_validate_delay_model_lists_auto_sentinel():
+    queues.validate_delay_model("auto", allow_auto=True)
+    with pytest.raises(ValueError, match="auto"):
+        queues.validate_delay_model("pareto", allow_auto=True)
+    with pytest.raises(ValueError, match="delay_model"):
+        queues.validate_delay_model("auto")
 
 
 # ---------------------------------------------------------------------------
@@ -199,8 +274,8 @@ def test_telemetry_derives_from_batched_outputs():
 def test_unknown_delay_model_raises():
     with pytest.raises(ValueError, match="delay_model"):
         queues.gi_g1_window([1.0], [2.0], [0.5], [0], n_frames=256,
-                            horizon=10.0, delay_model="weibull")
+                            horizon=10.0, delay_model="pareto")
     with pytest.raises(ValueError, match="delay_model"):
         service.measure_mm1_loop(
             np.ones(1), np.ones(1), np.ones(1) * 0.5, np.zeros(1),
-            delay_model="weibull")
+            delay_model="pareto")

@@ -1,0 +1,217 @@
+"""Truth-ladder rung 3: the real continuous-batching engine driven by the
+discrete-event replay plane (``serving.engine_plane``), the fitted
+delay-model selector at service level, and the engine columns in the
+robustness report."""
+import jax
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.core import aopi, lbcd, profiles, queues
+from repro.serving import engine_plane, make_replay_engine, replay
+from repro.serving.engine import FREE
+from repro.serving.scheduler import Frame
+from repro.serving.service import AnalyticsService
+
+DIMS = dict(n_cameras=5, n_slots=12, n_servers=2,
+            mean_bandwidth_hz=15e6, mean_compute_flops=20e12)
+
+
+def _steady(n=6, lam=0.6, mu=2.0, p=0.8):
+    pol = (np.arange(n) % 2).astype(np.int64)
+    return (np.full(n, lam), np.full(n, mu), np.full(n, p), pol)
+
+
+# ---------------------------------------------------------------------------
+# Parity anchors: engine rung vs GI/G/1 rung vs closed forms
+# ---------------------------------------------------------------------------
+
+def test_engine_epoch_parity_with_closed_forms_and_gi_g1():
+    """Steady family anchor: the three rungs of the truth ladder agree
+    within statistical tolerance (same stochastic process, independent
+    draws)."""
+    lam, mu, p, pol = _steady()
+    eng = make_replay_engine(len(lam))
+    eng_means, gi_means = [], []
+    for t in range(3):
+        out = engine_plane.measure_engine_epoch(
+            eng, lam, mu, p, pol, epoch_duration=300.0, seed=5, t=t)
+        assert out["engine_steps"] > 0
+        eng_means.append(out["aopi"])
+        gi = queues.gi_g1_window([lam], [mu], [p], [pol], seed=6, t0=t,
+                                 n_frames=4096, horizon=300.0)
+        gi_means.append(gi["aopi"][0, 0])
+    eng_aopi = np.mean(eng_means, axis=0)
+    gi_aopi = np.mean(gi_means, axis=0)
+    th = np.array([float(aopi.aopi(l, m, q, w))
+                   for l, m, q, w in zip(lam, mu, p, pol)])
+    # rung 3 vs rung 1 (closed forms) and rung 3 vs rung 2 (GI/G/1).
+    assert eng_aopi.mean() == pytest.approx(th.mean(), rel=0.15)
+    assert eng_aopi.mean() == pytest.approx(gi_aopi.mean(), rel=0.15)
+    # LCFSP < FCFS ordering survives on the engine rung.
+    assert eng_aopi[pol == 1].mean() < eng_aopi[pol == 0].mean()
+
+
+def test_engine_epoch_bitwise_deterministic():
+    """Fresh engines + fixed (seed, t) -> bitwise-identical replay."""
+    lam, mu, p, pol = _steady(n=4)
+    kw = dict(epoch_duration=120.0, seed=9, t=2, frames_cap=64)
+    a = engine_plane.measure_engine_epoch(
+        make_replay_engine(4), lam, mu, p, pol, **kw)
+    b = engine_plane.measure_engine_epoch(
+        make_replay_engine(4), lam, mu, p, pol, **kw)
+    for k in ("aopi", "horizon", "n_frames", "n_completed", "n_accurate"):
+        np.testing.assert_array_equal(a[k], b[k])
+    c = engine_plane.measure_engine_epoch(
+        make_replay_engine(4), lam, mu, p, pol,
+        epoch_duration=120.0, seed=10, t=2, frames_cap=64)
+    assert not np.array_equal(a["aopi"], c["aopi"])
+
+
+def test_engine_epoch_heavy_tail_family():
+    lam, mu, p, pol = _steady(n=4)
+    out = engine_plane.measure_engine_epoch(
+        make_replay_engine(4), lam, mu, p, pol, epoch_duration=120.0,
+        seed=3, frames_cap=96, delay_model="weibull", collect_samples=16)
+    assert np.isfinite(out["aopi"]).all() and (out["aopi"] > 0).all()
+    assert out["delay_samples"].shape == (4, 16)
+    assert (out["delay_samples"] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Lane bookkeeping: churn-under-engine + preempt hygiene
+# ---------------------------------------------------------------------------
+
+def test_churned_out_stream_leaks_no_lane():
+    """PR 8's ``active`` mask reaching the engine path: a stream that
+    churns out mid-sequence gets zeroed outputs, and every lane is FREE
+    after the epoch (the leaked-lane bug this plane fixes)."""
+    lam, mu, p, pol = _steady(n=4)
+    eng = make_replay_engine(4)
+    kw = dict(epoch_duration=120.0, seed=1, frames_cap=64)
+    out0 = engine_plane.measure_engine_epoch(eng, lam, mu, p, pol,
+                                             t=0, **kw)
+    assert (out0["n_completed"] > 0).all()
+    active = np.array([1.0, 0.0, 1.0, 1.0])
+    out1 = engine_plane.measure_engine_epoch(eng, lam, mu, p, pol, t=1,
+                                             active=active, **kw)
+    assert out1["aopi"][1] == 0.0 and out1["n_frames"][1] == 0.0
+    assert (out1["n_completed"][active > 0] > 0).all()
+    assert all(l.status == FREE for l in eng.lanes)
+    # The stream rejoins cleanly on the same engine the next epoch.
+    out2 = engine_plane.measure_engine_epoch(eng, lam, mu, p, pol,
+                                             t=2, **kw)
+    assert (out2["n_completed"] > 0).all()
+    assert all(l.status == FREE for l in eng.lanes)
+
+
+def test_preempt_releases_lane_with_no_stale_state():
+    """``Engine.preempt_stream`` must return the lane to the pool with no
+    leftover bookkeeping — a dirty freed lane poisons the next admit."""
+    eng = make_replay_engine(2, decode_tokens=50)
+    eng.admit(Frame(0, 0.0, 0.0), np.arange(6, dtype=np.int32), lane=0)
+    eng.decode_tick()
+    assert eng.preempt_stream(0) == 1
+    lane = eng.lanes[0]
+    assert lane.status == FREE and lane.stream_id == -1
+    assert lane.frame is None and lane.remaining == 0 and lane.out == []
+    assert eng.utilization == 0.0
+    # Pinned admits respect busy lanes.
+    assert eng.admit(Frame(1, 0.0, 0.0), np.arange(6, dtype=np.int32),
+                     lane=1)
+    assert not eng.admit(Frame(2, 0.0, 0.0), np.arange(6, dtype=np.int32),
+                         lane=1)
+
+
+def test_engine_plane_requires_one_lane_per_stream():
+    lam, mu, p, pol = _steady(n=4)
+    with pytest.raises(ValueError, match="lanes"):
+        engine_plane.measure_engine_epoch(
+            make_replay_engine(2), lam, mu, p, pol, epoch_duration=60.0)
+
+
+# ---------------------------------------------------------------------------
+# Service-level fitted selector (delay_model="auto")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dm", queues.DELAY_MODELS)
+def test_service_auto_selects_generating_family(dm):
+    """Synthetic telemetry generated under each family: the fitted
+    selector recovers the generating family from the service's own
+    delay-sample pool."""
+    system = profiles.EdgeSystem(n_cameras=8, n_servers=2, n_slots=8,
+                                 seed=4)
+    ctrl = lbcd.LBCDController(system, v=10.0, p_min=0.6)
+    svc = AnalyticsService(ctrl, mode="mm1", epoch_duration=1200.0,
+                           delay_model="auto", true_delay_model=dm)
+    reps = svc.run(3)
+    assert svc.fitted_models and svc.fitted_models[-1][1] == dm
+    assert reps[-1].fitted_model == dm
+    assert svc.true_delay_model == dm
+
+
+def test_service_auto_defaults_and_validation():
+    system = profiles.EdgeSystem(n_cameras=4, n_servers=2, n_slots=6,
+                                 seed=0)
+    ctrl = lbcd.LBCDController(system, v=10.0, p_min=0.6)
+    # auto with no explicit truth -> generates under mm1.
+    svc = AnalyticsService(ctrl, delay_model="auto")
+    assert svc.true_delay_model == "mm1"
+    # concrete delay_model -> truth defaults to it; no fitting state.
+    svc2 = AnalyticsService(ctrl, delay_model="gamma")
+    assert svc2.true_delay_model == "gamma" and not svc2.fitted_models
+    with pytest.raises(ValueError, match="delay_model"):
+        AnalyticsService(ctrl, delay_model="auto", true_delay_model="auto")
+
+
+# ---------------------------------------------------------------------------
+# Replay + report: the engine rung rides the suite
+# ---------------------------------------------------------------------------
+
+def test_replay_tables_engine_mode_three_rungs():
+    tab = scenarios.build("steady_ar1", {**DIMS, "n_slots": 4})
+    rep = replay.replay_tables(tab, "lbcd", epoch_duration=90.0, seed=0,
+                               mode="engine",
+                               engine_params={"frames_cap": 24})
+    assert rep.engine is not None
+    assert rep.engine.shape == rep.measured.shape == rep.predicted.shape
+    assert np.isfinite(rep.engine).all() and (rep.engine > 0).all()
+    # measured stays the GI/G/1 rung: distinct series from the engine's.
+    assert not np.array_equal(rep.engine, rep.measured)
+    svc = rep.service
+    assert svc.mode == "engine" and svc.engine_frames_cap == 24
+
+
+def test_sweep_engine_mode_report_columns():
+    s = scenarios.suite(["steady_ar1"], **{**DIMS, "n_slots": 4})
+    res = scenarios.sweep(
+        s, policies=("lbcd", "min"), devices=jax.devices()[:1],
+        dataplane=True,
+        dataplane_params=dict(n_epochs=2, epoch_duration=90.0,
+                              mode="engine",
+                              engine_params={"frames_cap": 24}))
+    assert res.engine_aopi is not None
+    assert set(res.engine_aopi) == {"lbcd", "min"}
+    for p in res.engine_aopi:
+        assert res.engine_aopi[p].shape == res.measured_aopi[p].shape
+        assert np.isfinite(res.engine_aopi[p]).all()
+    rep = scenarios.robustness(res)
+    assert rep.has_engine
+    for p in rep.policies:
+        st = rep.table[p]["steady"]
+        assert st.engine_mean is not None and st.engine_mean > 0
+        assert np.isfinite(st.engine_vs_gi)
+        assert np.isfinite(st.engine_vs_predicted)
+    txt = str(rep)
+    assert "div:gi" in txt and "div:cf" in txt and "truth ladder" in txt
+    # rows gain the 5 engine columns after the measured block.
+    assert len(rep.rows()[0]) == 10 + 5
+
+
+def test_replay_tables_auto_records_fitted_models():
+    tab = scenarios.build("steady_ar1", {**DIMS, "n_slots": 4})
+    rep = replay.replay_tables(tab, "lbcd", epoch_duration=900.0, seed=0,
+                               delay_model="auto",
+                               true_delay_model="uniform")
+    assert rep.fitted is not None and len(rep.fitted) == 4
+    assert rep.fitted[-1] == "uniform"

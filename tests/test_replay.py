@@ -398,7 +398,12 @@ def test_service_rejects_unknown_delay_model():
                                  seed=0)
     ctrl = lbcd.LBCDController(system, v=10.0, p_min=0.6)
     with pytest.raises(ValueError, match="delay_model"):
-        AnalyticsService(ctrl, delay_model="weibull")
+        AnalyticsService(ctrl, delay_model="pareto")
+    # "auto" is a service-level sentinel, not a plane family: the service
+    # accepts it (fitted selector), the plane does not.
+    with pytest.raises(ValueError, match="delay_model"):
+        service.measure_mm1(np.ones(1), np.ones(1), np.ones(1) * 0.5,
+                            np.zeros(1), delay_model="auto")
 
 
 # ---------------------------------------------------------------------------
