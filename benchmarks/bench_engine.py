@@ -1,0 +1,90 @@
+"""Engine-rung throughput (BENCH_engine): DES vs tick-scan.
+
+Measures streams/sec of one engine-rung epoch at fleet sizes
+N in {30, 300, 3000} for the two ``engine_backend`` implementations:
+
+  * ``des``  — the PR-9 host discrete-event replay of the real
+    continuous-batching ``serving.Engine`` (one Python heap event per
+    arrival/completion/preemption);
+  * ``scan`` — the PR-10 tick-scan (``serving.tick_plane``), the same
+    epoch on the same pre-drawn randomness as ONE jitted ``lax.scan``
+    over decode ticks (compile excluded: the dispatch shape is warmed
+    up before timing).
+
+Both backends see the *same* ``frames_cap`` per fleet size so the
+comparison is event-for-event — the two replays are bitwise-identical,
+only the executor differs. The cap shrinks with N to keep the DES arm
+affordable; the scan's own full-cap regime (frames_cap=200_000) is what
+``replay_suite(mode="engine", engine_backend="scan")`` runs in
+production and is reported here as the extra ``scan_full_cap`` row per
+N (no DES column — the DES cannot reach that regime).
+
+The acceptance bar of PR 10 is >= 25x scan/des at N=3000.
+
+The occupancy columns summarize the scan's per-lane busy fraction
+(service time inside the horizon / horizon), the same statistic the
+``engine.occupancy`` obs histogram tracks.
+"""
+import numpy as np
+
+from repro.core import queues
+from repro.serving import engine_plane, tick_plane
+from repro.serving.engine import make_replay_engine
+
+from .common import best_of, emit
+
+EPOCH = 300.0          # the paper's 5-minute slot (seconds)
+
+#: (n_streams, shared frames_cap for the des-vs-scan pair).
+ARMS = ((30, 192), (300, 96), (3000, 24))
+
+
+def _workload(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    lam = rng.uniform(0.2, 0.7, n)               # frames/s
+    mu = np.full(n, 1.5)                         # rho in [0.13, 0.47]
+    p = rng.uniform(0.6, 0.9, n)
+    pol = (np.arange(n) % 2).astype(np.int64)    # half FCFS, half LCFSP
+    return lam, mu, p, pol
+
+
+def run(full: bool = False):
+    repeats = 3 if full else 2
+    rows = []
+    for n, cap in ARMS:
+        lam, mu, p, pol = _workload(n)
+        kw = dict(epoch_duration=EPOCH, seed=0, t=0, frames_cap=cap)
+        des_s = best_of(
+            lambda: engine_plane.measure_engine_epoch(
+                make_replay_engine(n), lam, mu, p, pol, **kw),
+            repeats, block=False)
+        out = tick_plane.measure_engine_epoch_scan(lam, mu, p, pol, **kw)
+        scan_s = best_of(
+            lambda: tick_plane.measure_engine_epoch_scan(
+                lam, mu, p, pol, **kw),
+            repeats, block=False)
+        occ = out["occupancy"]
+        rows.append([n, cap, n / des_s, n / scan_s, des_s / scan_s,
+                     float(occ.mean()), float(np.percentile(occ, 95))])
+        print(f"# N={n:<5d} cap={cap:<4d} des {n / des_s:9.0f} str/s | "
+              f"scan {n / scan_s:9.0f} str/s | {des_s / scan_s:6.1f}x | "
+              f"occ {occ.mean():.3f}", flush=True)
+        # The production regime: full GI/G/1-parity cap, scan only —
+        # queues.frames_budget sizes the effective tick count from the
+        # offered load, exactly as AnalyticsService does per epoch.
+        fcap = queues.frames_budget(float(lam.max()), EPOCH, 200_000)
+        fkw = dict(epoch_duration=EPOCH, seed=0, t=0, frames_cap=fcap)
+        fout = tick_plane.measure_engine_epoch_scan(lam, mu, p, pol, **fkw)
+        fscan_s = best_of(
+            lambda: tick_plane.measure_engine_epoch_scan(
+                lam, mu, p, pol, **fkw),
+            repeats, block=False)
+        focc = fout["occupancy"]
+        rows.append([n, fcap, None, n / fscan_s, None,
+                     float(focc.mean()), float(np.percentile(focc, 95))])
+        print(f"# N={n:<5d} cap={fcap:<4d} scan-only "
+              f"{n / fscan_s:9.0f} str/s", flush=True)
+    emit("BENCH_engine", rows,
+         ["n_streams", "frames_cap", "des_streams_per_sec",
+          "scan_streams_per_sec", "speedup", "occ_mean", "occ_p95"])
+    return rows

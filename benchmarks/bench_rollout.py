@@ -14,17 +14,25 @@ cameras against two legacy arms:
 Compile/warmup time is excluded everywhere. At N=3000 the scan engine
 still runs entirely on device — no host-loop fallback.
 
+Past the legacy-comparison arms, two scale-out rows push the scan
+engine to N in {3x10^4, 10^5} cameras on the camera-tiled pallas slot
+solver (``pallas:tile=<DEFAULT_TILE_N>``, the only backend whose VMEM
+footprint is O(tile) rather than O(N) — see ``BENCH_slot_solver``).
+The per-slot-loop arms are unaffordable there and emit null cells; the
+``solver_backend`` column records which spec produced each row.
+
 Migration note: this bench previously emitted ``scaleout_rollout.json``;
 it now writes ``BENCH_rollout.json`` so the BENCH_* trajectory tracking
 picks it up (old files are not rewritten).
 """
 import jax
 
-from repro.core import lbcd, profiles
+from repro.core import bcd, lbcd, profiles
 
 from .common import best_of, emit
 
 COUNTS = (30, 300, 3000)
+SCALEOUT_COUNTS = (30_000, 100_000)
 
 
 def _system(n, slots):
@@ -61,9 +69,23 @@ def run(full: bool = False):
         shared_sps = _time_legacy(n, slots, legacy_slots, repeats, "fast")
 
         rows.append([n, slots, scan_sps, seed_sps, shared_sps,
-                     scan_sps / seed_sps, scan_sps / shared_sps])
+                     scan_sps / seed_sps, scan_sps / shared_sps, "auto"])
+
+    # --- scale-out: tiled-pallas scan engine only, no legacy arms.
+    tiled_spec = f"pallas:tile={bcd.DEFAULT_TILE_N}"
+    for n in SCALEOUT_COUNTS:
+        slots = 2
+        tables = _system(n, slots).horizon(slots)
+        roll = lambda: lbcd.rollout(tables, 10.0, 0.7,
+                                    solver_backend=tiled_spec)
+        jax.block_until_ready(roll())                            # warmup
+        scan_sps = slots / best_of(roll, 1)
+        rows.append([n, slots, scan_sps, None, None, None, None,
+                     tiled_spec])
+        print(f"# N={n:<7d} tiled scan {scan_sps:8.3f} slots/s",
+              flush=True)
     emit("BENCH_rollout", rows,
          ["n_cameras", "slots", "scan_slots_per_sec",
           "legacy_seed_slots_per_sec", "legacy_shared_slots_per_sec",
-          "speedup_vs_seed", "speedup_vs_shared"])
+          "speedup_vs_seed", "speedup_vs_shared", "solver_backend"])
     return rows

@@ -17,7 +17,7 @@ import sys
 import time
 
 from . import (bench_bandwidth, bench_cameras, bench_compute,
-               bench_dataplane, bench_energy, bench_faults,
+               bench_dataplane, bench_energy, bench_engine, bench_faults,
                bench_frontier, bench_hyperparams, bench_overhead,
                bench_policy, bench_rollout, bench_scenarios,
                bench_slot_solver, bench_validation, common)
@@ -36,6 +36,7 @@ ALL = {
     "BENCH_scenarios": bench_scenarios.run,
     "BENCH_slot_solver": bench_slot_solver.run,
     "BENCH_dataplane": bench_dataplane.run,
+    "BENCH_engine": bench_engine.run,
     "BENCH_faults": bench_faults.run,
 }
 

@@ -33,6 +33,7 @@
 
     PYTHONPATH=src python examples/scenario_suite.py \
         [--smoke] [--dataplane] [--engine] \
+        [--engine-backend des|scan|auto] \
         [--delay-model mm1|uniform|gamma|lognormal|weibull|auto] \
         [--obs DIR]
 """
@@ -40,13 +41,13 @@ import argparse
 
 import jax
 
-from repro import obs, scenarios
+from repro import obs, scenarios, serving
 from repro.core import queues
 
 
 def main(smoke: bool = False, dataplane: bool = False,
          delay_model: str = "mm1", engine: bool = False,
-         obs_dir: str | None = None):
+         engine_backend: str = "scan", obs_dir: str | None = None):
     if obs_dir:
         obs.configure(run_dir=obs_dir)
     dataplane = dataplane or engine
@@ -60,10 +61,18 @@ def main(smoke: bool = False, dataplane: bool = False,
                  else dict(n_epochs=16, epoch_duration=600.0))
     dp_params["delay_model"] = delay_model
     if engine:
-        # The DES pins one lane per stream and replays real decode
-        # steps, so bound its per-epoch work tightly for smoke runs.
         dp_params["mode"] = "engine"
-        dp_params["engine_params"] = {"frames_cap": 24 if smoke else 96}
+        if engine_backend == "des":
+            # The DES pins one lane per stream and replays real decode
+            # steps in Python, so bound its per-epoch work tightly.
+            dp_params["engine_params"] = {"backend": "des",
+                                          "frames_cap": 24 if smoke else 96}
+        else:
+            # The tick-scan backend replays the same engine as one
+            # jitted lax.scan, so it runs at the full frames cap — the
+            # effective per-epoch frame count is still sized by
+            # queues.frames_budget from the offered load.
+            dp_params["engine_params"] = {"backend": engine_backend}
         if smoke:
             dp_params["n_epochs"] = 3
             dp_params["epoch_duration"] = 120.0
@@ -73,7 +82,8 @@ def main(smoke: bool = False, dataplane: bool = False,
           f"({len(jax.devices())} visible device(s))"
           + (f"; data plane: {delay_model} x {dp_params['n_epochs']} "
              f"epochs" if dataplane else "")
-          + ("; rung 3: real engine" if engine else "") + "\n")
+          + (f"; rung 3: engine backend={engine_backend}" if engine
+             else "") + "\n")
 
     rep = scenarios.robustness(res)
     print(rep)
@@ -110,6 +120,13 @@ if __name__ == "__main__":
                     help="also drive every cell through the real "
                          "continuous-batching engine (truth ladder rung "
                          "3; implies --dataplane)")
+    ap.add_argument("--engine-backend", default="scan",
+                    choices=serving.ENGINE_BACKENDS,
+                    help="engine-rung executor: 'scan' (default) is the "
+                         "device-resident tick-scan at the full frames "
+                         "cap; 'des' replays the real host Engine at a "
+                         "tightly-bounded cap; 'auto' picks by epoch "
+                         "frame volume")
     ap.add_argument("--delay-model", default="mm1",
                     choices=queues.DELAY_MODELS + (queues.AUTO_DELAY_MODEL,),
                     help="data-plane delay family (non-exponential models "
@@ -120,4 +137,4 @@ if __name__ == "__main__":
                          "metrics.prom/jsonl, Perfetto trace.json) here")
     args = ap.parse_args()
     main(args.smoke, args.dataplane, args.delay_model, args.engine,
-         args.obs)
+         args.engine_backend, args.obs)

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import functools
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 import jax
@@ -507,16 +507,37 @@ def gi_g1_window(lam, mu, p, pol, *, seed: int = 0, t0: int = 0,
 @dataclass(frozen=True)
 class DelayFit:
     """Result of :func:`fit_delay_model`: the winning family plus the
-    per-family Cramér–von Mises residuals it beat (smaller = closer)."""
+    per-family Cramér–von Mises residuals it beat (smaller = closer)
+    and the winner's fitted shape parameters (``{"sigma": ...}`` for
+    lognormal, ``{"k": ...}`` for weibull, empty for the shape-free
+    families)."""
     model: str
     residuals: dict
     n_samples: int
+    params: dict = field(default_factory=dict)
 
 
-def _family_cdf(x: np.ndarray, delay_model: str) -> np.ndarray:
+#: CvM estimation grids for the shape-parameterized families: the fit
+#: is a joint (family, shape) minimization, not just family selection.
+#: The defaults (LOGNORMAL_SIGMA=1.0, WEIBULL_SHAPE=0.7) are grid
+#: members, so default-parameter worlds round-trip exactly; the weibull
+#: grid stays strictly below k=1 (k=1 IS the exponential — it belongs
+#: to "mm1").
+LOGNORMAL_SIGMA_GRID = (0.5, 0.75, 1.0, 1.25, 1.5)
+WEIBULL_SHAPE_GRID = (0.5, 0.6, 0.7, 0.8, 0.9)
+
+_FAMILY_GRIDS = {"lognormal": ("sigma", LOGNORMAL_SIGMA_GRID),
+                 "weibull": ("k", WEIBULL_SHAPE_GRID)}
+
+
+def _family_cdf(x: np.ndarray, delay_model: str,
+                params: dict | None = None) -> np.ndarray:
     """CDF of the unit-mean member of ``delay_model`` evaluated at ``x``
     (x >= 0). Each family is parameterized exactly as the samplers /
-    ``_delays_from_uniforms`` are, with the mean pinned to 1."""
+    ``_delays_from_uniforms`` are, with the mean pinned to 1; ``params``
+    overrides the shape (``sigma`` for lognormal, ``k`` for weibull),
+    defaulting to the sampler constants."""
+    params = params or {}
     if delay_model == "mm1":
         return -np.expm1(-x)
     if delay_model == "uniform":
@@ -529,30 +550,64 @@ def _family_cdf(x: np.ndarray, delay_model: str) -> np.ndarray:
         return -np.expm1(-k * x) - np.exp(-k * x) * (terms - 1.0)
     if delay_model == "lognormal":
         from scipy.special import ndtr
-        s = LOGNORMAL_SIGMA
+        s = float(params.get("sigma", LOGNORMAL_SIGMA))
         m = -0.5 * s * s
         safe = np.maximum(x, 1e-300)
         return np.where(x > 0.0, ndtr((np.log(safe) - m) / s), 0.0)
     if delay_model == "weibull":
-        k = WEIBULL_SHAPE
+        k = float(params.get("k", WEIBULL_SHAPE))
         scale = 1.0 / math.gamma(1.0 + 1.0 / k)
         return -np.expm1(-np.power(np.maximum(x, 0.0) / scale, k))
     raise ValueError(
         f"unknown delay_model {delay_model!r}; known: {DELAY_MODELS}")
 
 
+def family_cv2(delay_model: str, params: dict | None = None) -> float:
+    """Squared coefficient of variation of a delay family (optionally at
+    fitted shape ``params``) — the tail statistic that drives how far
+    the exponential closed forms drift: 1 for mm1, < 1 for the light
+    §III-B families, > 1 for the heavy tails."""
+    validate_delay_model(delay_model)
+    params = params or {}
+    if delay_model == "mm1":
+        return 1.0
+    if delay_model == "uniform":
+        return UNIFORM_SPREAD ** 2 / 3.0
+    if delay_model == "gamma":
+        return 1.0 / float(GAMMA_SHAPE)
+    if delay_model == "lognormal":
+        s = float(params.get("sigma", LOGNORMAL_SIGMA))
+        return float(np.expm1(s * s))
+    k = float(params.get("k", WEIBULL_SHAPE))
+    g1 = math.gamma(1.0 + 1.0 / k)
+    return math.gamma(1.0 + 2.0 / k) / (g1 * g1) - 1.0
+
+
+def residual_prior(delay_model: str, params: dict | None = None) -> float:
+    """Kingman-style residual scale prior for the planner: GI/G/1
+    waiting time scales like ``(C_a^2 + C_s^2) / 2`` relative to M/M/1,
+    so a fitted family's ``(1 + cv^2) / 2`` (both T and O drawn from the
+    family) is the first-order correction to the exponential closed
+    forms — exactly 1 for mm1, so seeding with it is a no-op when the
+    world matches the paper's model."""
+    return 0.5 * (1.0 + family_cv2(delay_model, params))
+
+
 def fit_delay_model(samples, models: Sequence[str] = DELAY_MODELS,
                     min_samples: int = 8) -> DelayFit:
-    """Pick the delay family with the smallest Cramér–von Mises residual
-    against observed delay samples.
+    """Pick the (delay family, shape parameters) with the smallest
+    Cramér–von Mises residual against observed delay samples.
 
     ``samples`` is any array of positive delay observations (pooled
     inter-completion / transmission times from telemetry; zeros — masked
     dead-lane fill — are dropped). Each candidate family is mean-matched
     to the sample mean, its CDF evaluated at the sorted samples, and the
     mean squared distance to the empirical CDF ``(i - 0.5)/n`` taken as
-    the residual. Falls back to "mm1" (the paper's modeling assumption)
-    below ``min_samples`` observations.
+    the residual; the shape-parameterized families (lognormal sigma,
+    weibull k) additionally minimize over their estimation grids, and
+    the winner's fitted shape is returned on ``DelayFit.params``. Falls
+    back to "mm1" (the paper's modeling assumption) below
+    ``min_samples`` observations.
     """
     x = np.asarray(samples, np.float64).ravel()
     x = x[np.isfinite(x) & (x > 0.0)]
@@ -561,7 +616,17 @@ def fit_delay_model(samples, models: Sequence[str] = DELAY_MODELS,
         return DelayFit("mm1", {}, n)
     x = np.sort(x) / x.mean()                 # mean-matched, unit scale
     ecdf = (np.arange(1, n + 1) - 0.5) / n
-    residuals = {m: float(np.mean((_family_cdf(x, m) - ecdf) ** 2))
-                 for m in models}
+    cvm = lambda m, prm: float(np.mean((_family_cdf(x, m, prm) - ecdf) ** 2))
+    residuals: dict = {}
+    params: dict = {}
+    for m in models:
+        grid = _FAMILY_GRIDS.get(m)
+        if grid is None:
+            residuals[m], params[m] = cvm(m, None), {}
+        else:
+            pname, values = grid
+            cand = {v: cvm(m, {pname: v}) for v in values}
+            v = min(cand, key=cand.get)
+            residuals[m], params[m] = cand[v], {pname: float(v)}
     best = min(residuals, key=residuals.get)
-    return DelayFit(best, residuals, n)
+    return DelayFit(best, residuals, n, params[best])

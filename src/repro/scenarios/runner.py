@@ -266,11 +266,13 @@ def sweep(suite_or_tables: Suite | HorizonTables, v: float = 10.0,
     primary model backing ``measured_aopi``/``divergence()``, the rest
     land in ``measured_by_model`` — see ``serving.replay.replay_tables``).
     ``mode="engine"`` climbs to the truth ladder's third rung: every cell
-    also replays through the real continuous-batching engine, and the
-    rung-3 series land in ``engine_aopi``/``engine_by_model`` (with
-    ``engine_params={"frames_cap": ...}`` bounding DES work per epoch and
-    ``true_delay_model`` picking the plane's generating family when
-    ``delay_model="auto"`` runs the fitted selector).
+    also replays through the engine rung, and the rung-3 series land in
+    ``engine_aopi``/``engine_by_model`` (``engine_params={"backend":
+    "des"|"scan"|"auto", "frames_cap": ...}`` picks the rung's plane —
+    the event-by-event Engine replay or the batched tick-scan at
+    full-suite budgets — and bounds work per epoch; ``true_delay_model``
+    picks the plane's generating family when ``delay_model="auto"`` runs
+    the fitted selector).
     Each extra delay model is a full extra replay, planner included
     (telemetry feedback couples planning to the plane, and at
     ``telemetry_gain > 0`` the per-model plans genuinely differ);

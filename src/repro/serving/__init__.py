@@ -6,6 +6,9 @@ from .scheduler import (FCFS, LCFSP, AoPITracker, Frame, StreamQueue,
                         StreamTelemetry)
 from .service import (AnalyticsService, EpochReport, measure_mm1,
                       measure_mm1_loop, measure_window)
+from .tick_plane import (ENGINE_BACKENDS, measure_engine_epoch_scan,
+                         measure_engine_window_scan, measure_epoch,
+                         resolve_engine_backend)
 
 __all__ = ["Engine", "NullAnalyticsModel", "Result", "make_replay_engine",
            "measure_engine_epoch", "FCFS", "LCFSP", "AoPITracker", "Frame",
@@ -13,4 +16,6 @@ __all__ = ["Engine", "NullAnalyticsModel", "Result", "make_replay_engine",
            "EpochReport", "measure_mm1", "measure_mm1_loop",
            "measure_window", "ReplayResult", "ScenarioReplay",
            "TableSystem", "make_controller", "replay_suite",
-           "replay_tables"]
+           "replay_tables", "ENGINE_BACKENDS", "measure_engine_epoch_scan",
+           "measure_engine_window_scan", "measure_epoch",
+           "resolve_engine_backend"]

@@ -57,19 +57,52 @@ def _frame_tokens(stream: int, k: int, vocab: int,
         np.int32)
 
 
+def draw_streams(lam, mu, live, *, delay_model: str, seed: int, t: int,
+                 frames_cap: int) -> tuple:
+    """Pre-draw every live stream's (T, O, coin) ``[N, frames_cap]``
+    arrays from its collision-free ``stream_seed_sequence(seed, t, i)``
+    stream (identical sampler mapping to the loop oracle). This is THE
+    shared source of randomness for the engine rung: both the DES replay
+    and the tick-scan backend (``tick_plane``) consume these exact draws,
+    which is what makes their traces bitwise-comparable."""
+    n = lam.size
+    frames_cap = int(frames_cap)
+    T = np.zeros((n, frames_cap))
+    O = np.zeros((n, frames_cap))
+    coin = np.ones((n, frames_cap))
+    for i in np.flatnonzero(live):
+        rng = np.random.default_rng(
+            queues.stream_seed_sequence(int(seed), int(t), int(i)))
+        kw = queues.oracle_samplers(delay_model, lam[i], mu[i])
+        ts = kw.get("t_sampler") or (
+            lambda r, m, s=1.0 / lam[i]: r.exponential(s, size=m))
+        os_ = kw.get("o_sampler") or (
+            lambda r, m, s=1.0 / mu[i]: r.exponential(s, size=m))
+        T[i] = ts(rng, frames_cap)
+        O[i] = os_(rng, frames_cap)
+        coin[i] = rng.random(frames_cap)
+    return T, O, coin
+
+
 def measure_engine_epoch(engine: Engine, lam, mu, p, pol, *,
                          epoch_duration: float, seed: int = 0, t: int = 0,
                          delay_model: str = "mm1", active=None,
                          frames_cap: int = ENGINE_FRAMES_CAP,
-                         collect_samples: int = 0) -> dict:
+                         collect_samples: int = 0,
+                         collect_trace: bool = False) -> dict:
     """Measure one epoch of ``N`` streams on the real engine.
 
     Returns the same per-stream stat dict as ``queues.gi_g1_window``
     (each value ``[N]``): ``aopi``/``horizon``/``n_frames``/
-    ``n_completed``/``n_accurate``, plus ``engine_steps`` (batched decode
-    dispatches actually executed) and, when ``collect_samples > 0``,
-    ``delay_samples`` ``[N, collect_samples]`` of raw transmission draws
-    (zero-padded) for the fitted delay-model selector.
+    ``n_completed``/``n_accurate``, plus ``preempts`` (LCFSP arrival
+    preemptions per stream, drain excluded), ``engine_steps`` (batched
+    decode dispatches actually executed) and, when
+    ``collect_samples > 0``, ``delay_samples`` ``[N, collect_samples]``
+    of raw transmission draws (zero-padded) for the fitted delay-model
+    selector. ``collect_trace`` additionally returns ``trace``: the
+    counted completion events as ``(stream, frame, t_done)`` tuples in
+    canonical ``(t_done, stream, frame)`` order — the bitwise parity
+    surface shared with the tick-scan backend.
     """
     queues.validate_delay_model(delay_model)
     lam = np.asarray(lam, np.float64).ravel()
@@ -87,22 +120,8 @@ def measure_engine_epoch(engine: Engine, lam, mu, p, pol, *,
     vocab = int(getattr(engine.model, "vocab", 32))
     frames_cap = int(frames_cap)
 
-    # Pre-draw every stream's delays/coins from its collision-free
-    # stream (identical sampler mapping to the loop oracle).
-    T = np.zeros((n, frames_cap))
-    O = np.zeros((n, frames_cap))
-    coin = np.ones((n, frames_cap))
-    for i in np.flatnonzero(live):
-        rng = np.random.default_rng(
-            queues.stream_seed_sequence(int(seed), int(t), int(i)))
-        kw = queues.oracle_samplers(delay_model, lam[i], mu[i])
-        ts = kw.get("t_sampler") or (
-            lambda r, m, s=1.0 / lam[i]: r.exponential(s, size=m))
-        os_ = kw.get("o_sampler") or (
-            lambda r, m, s=1.0 / mu[i]: r.exponential(s, size=m))
-        T[i] = ts(rng, frames_cap)
-        O[i] = os_(rng, frames_cap)
-        coin[i] = rng.random(frames_cap)
+    T, O, coin = draw_streams(lam, mu, live, delay_model=delay_model,
+                              seed=seed, t=t, frames_cap=frames_cap)
     arrive = np.cumsum(T, axis=1)                 # a_k; gen_k = a_k - T_k
     h_eff = np.where(live, np.minimum(float(epoch_duration),
                                       arrive[:, -1]), 0.0)
@@ -114,6 +133,9 @@ def measure_engine_epoch(engine: Engine, lam, mu, p, pol, *,
     n_arr = np.zeros(n)
     n_done = np.zeros(n)
     n_acc = np.zeros(n)
+    n_pre = np.zeros(n)            # LCFSP arrival preemptions (no drain)
+    trace: list[tuple] = []        # counted completions (i, k, t_done)
+    steps0 = engine._steps
     in_service: list[Optional[int]] = [None] * n  # frame idx on the lane
     version = [0] * n              # invalidates preempted completions
     pending: list[list[int]] = [[] for _ in range(n)]   # FCFS backlog
@@ -164,6 +186,7 @@ def measure_engine_epoch(engine: Engine, lam, mu, p, pol, *,
                     stash.pop(i, None)
                     version[i] += 1               # invalidate completion
                     in_service[i] = None
+                    n_pre[i] += 1
                 admit(i, k, now)
             else:                                 # FCFS: queue or seize
                 if in_service[i] is None:
@@ -181,6 +204,8 @@ def measure_engine_epoch(engine: Engine, lam, mu, p, pol, *,
             in_service[i] = None
             if now <= h_eff[i]:
                 n_done[i] += 1
+                if collect_trace:
+                    trace.append((i, k, now))
                 if coin[i, k] < p[i]:
                     n_acc[i] += 1
                     gen = arrive[i, k] - T[i, k]
@@ -206,11 +231,17 @@ def measure_engine_epoch(engine: Engine, lam, mu, p, pol, *,
         "n_frames": np.where(live, n_arr, 0.0),
         "n_completed": np.where(live, n_done, 0.0),
         "n_accurate": np.where(live, n_acc, 0.0),
+        "preempts": np.where(live, n_pre, 0.0),
         "engine_steps": float(engine._steps),
     }
     if collect_samples:
         cap = min(int(collect_samples), frames_cap)
         out["delay_samples"] = np.where(live[:, None], T[:, :cap], 0.0)
+    if collect_trace:
+        out["trace"] = sorted(trace, key=lambda r: (r[2], r[0], r[1]))
     obs.counter("engine_plane.epochs", delay_model=delay_model).inc()
     obs.histogram("engine_plane.frames").observe(float(n_arr.sum()))
+    obs.counter("engine.ticks", backend="des",
+                delay_model=delay_model).inc(float(engine._steps - steps0))
+    obs.counter("engine.preempts", backend="des").inc(float(n_pre.sum()))
     return out

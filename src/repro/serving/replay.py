@@ -154,11 +154,13 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
     and ``replan_threshold`` arms divergence-triggered early replanning
     (see ``AnalyticsService``). ``mode="engine"`` swaps the data plane
     for the real continuous-batching Engine (rung 3 of the truth
-    ladder): every epoch is replayed on a deterministic stub-model
-    engine via ``engine_plane.measure_engine_epoch`` AND measured on the
-    GI/G/1 plane, so the returned ``ScenarioReplay`` carries both the
-    ``engine`` and ``measured`` series; ``engine_params`` tunes the
-    engine replay (currently ``frames_cap``).
+    ladder): every epoch is replayed on the engine rung AND measured on
+    the GI/G/1 plane, so the returned ``ScenarioReplay`` carries both
+    the ``engine`` and ``measured`` series; ``engine_params`` tunes the
+    engine rung — ``{"backend": "des"|"scan"|"auto", "frames_cap": int}``
+    (see ``tick_plane.ENGINE_BACKENDS``: "des" drives the real
+    stub-model Engine event by event, "scan" the bitwise-compatible
+    batched tick-scan at full-suite frame budgets).
     Bitwise deterministic in ``(seed, tables, n_epochs)``.
 
     ``faults`` (a :class:`repro.faults.FaultPlan`) injects the plan's
@@ -187,6 +189,7 @@ def replay_tables(tables: HorizonTables, policy: str = "lbcd", *,
         tables=system.horizon(n_epochs), telemetry_gain=telemetry_gain,
         delay_model=delay_model, true_delay_model=true_delay_model,
         engine_frames_cap=engine_params.get("frames_cap"),
+        engine_backend=engine_params.get("backend", "auto"),
         replan_threshold=replan_threshold,
         faults=faults, plan_retries=plan_retries,
         plan_deadline=plan_deadline)

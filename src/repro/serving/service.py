@@ -202,6 +202,8 @@ class EpochReport:
     per_stream_model: Optional[np.ndarray] = None
     #: Family the fitted selector chose for this epoch (delay_model="auto").
     fitted_model: Optional[str] = None
+    #: Its fitted shape parameters (sigma/k), when the winner has any.
+    fitted_params: Optional[dict] = None
 
 
 class AnalyticsService:
@@ -214,6 +216,7 @@ class AnalyticsService:
                  delay_model: str = "mm1",
                  true_delay_model: str | None = None,
                  engine_frames_cap: int | None = None,
+                 engine_backend: str = "auto",
                  replan_threshold: float | None = None,
                  faults: "fault_plane.FaultPlan | None" = None,
                  plan_retries: int = 2,
@@ -243,6 +246,18 @@ class AnalyticsService:
         crosses it mid-window, the remaining plan window is cut and
         ``plan_horizon`` re-runs from the next epoch with fresh telemetry
         instead of waiting for the fixed ``plan_window`` boundary.
+
+        ``engine_backend`` selects the engine-rung measurement plane in
+        ``mode="engine"`` (``tick_plane.ENGINE_BACKENDS``): "des" replays
+        the real continuous-batching Engine event by event, "scan" runs
+        the bitwise-compatible batched tick-scan (no Engine instance
+        needed, full-suite frame budgets), "auto" — the default — keeps
+        the DES at smoke scale and switches to the scan above
+        ``tick_plane.AUTO_DES_MAX_FRAMES`` frame events per epoch.
+        ``engine_frames_cap`` defaults per backend: the DES keeps the
+        smoke-sized ``engine_plane.ENGINE_FRAMES_CAP``; the scan gets
+        ``frames_cap`` (GI/G/1-rung parity) — either way the effective
+        per-epoch budget passes through ``queues.frames_budget``.
 
         ``faults`` (a :class:`repro.faults.FaultPlan`) arms the service's
         *behavioral* fault injections — telemetry drops/delays/corruption
@@ -290,6 +305,7 @@ class AnalyticsService:
         self.true_delay_model = true_delay_model
         self._auto = delay_model == queues.AUTO_DELAY_MODEL
         self._fitted_model: str | None = None
+        self._fitted_params: dict = {}       # winner's shape, e.g. sigma/k
         self.fitted_models: list[tuple[int, str]] = []  # (t, fitted family)
         self._delay_buf: list[np.ndarray] = []  # unit-mean pooled samples
         self.replan_threshold = (None if replan_threshold is None
@@ -324,13 +340,24 @@ class AnalyticsService:
         self._plan = None
         self._plan_t0 = 0
         self._plan_meas = None               # window-batched measurements
-        from . import engine_plane
-        self.engine_frames_cap = int(
-            engine_plane.ENGINE_FRAMES_CAP if engine_frames_cap is None
-            else engine_frames_cap)
-        if self.mode == "engine" and self.engine is None:
+        from . import engine_plane, tick_plane
+        # Resolve "auto" against the DES-sized budget (the question auto
+        # answers is "is the event-by-event DES still affordable here?"),
+        # then default the cap per backend: DES keeps the smoke-sized
+        # ENGINE_FRAMES_CAP, the scan runs at GI/G/1-rung parity.
+        des_cap = int(engine_plane.ENGINE_FRAMES_CAP
+                      if engine_frames_cap is None else engine_frames_cap)
+        self.engine_backend = tick_plane.resolve_engine_backend(
+            engine_backend, n_streams=n, frames_cap=des_cap)
+        if engine_frames_cap is None and self.engine_backend == "scan":
+            self.engine_frames_cap = int(frames_cap)
+        else:
+            self.engine_frames_cap = des_cap
+        if (self.mode == "engine" and self.engine is None
+                and self.engine_backend == "des"):
             # Replay-grade default: the deterministic stub-model engine
-            # with one lane per stream (see engine_plane).
+            # with one lane per stream (see engine_plane). The scan
+            # backend needs no Engine instance at all.
             from .engine import make_replay_engine
             self.engine = make_replay_engine(n, seed=seed)
 
@@ -576,11 +603,25 @@ class AnalyticsService:
                   else np.empty(0))
         fit = queues.fit_delay_model(pooled)
         if fit.residuals:                 # enough samples to trust
+            changed = (fit.model != self._fitted_model
+                       or dict(fit.params) != self._fitted_params)
             self._fitted_model = fit.model
+            self._fitted_params = dict(fit.params)
+            if changed:
+                # Feed the fitted (family, shape) into the planner's
+                # residual calibration, not just the labels: seed the
+                # AoPI residual scale halfway toward the family's
+                # Kingman prior (1 + cv^2)/2. Exactly 1 for mm1 — a
+                # no-op when the world matches the paper's model — and
+                # the telemetry EWMA keeps refining from there.
+                prior = queues.residual_prior(fit.model, fit.params)
+                self._aopi_scale = np.clip(
+                    0.5 * (self._aopi_scale + prior), 0.25, 4.0)
         self.fitted_models.append((t, self._fitted_model or "mm1"))
         obs.event("service.delay_fit", policy=self._policy, t=t,
                   model=self._fitted_model or "unfit",
-                  n_samples=fit.n_samples)
+                  n_samples=fit.n_samples,
+                  **{k: float(v) for k, v in fit.params.items()})
 
     def _plane_rates(self, t: int, dec) -> tuple[np.ndarray, np.ndarray]:
         """True arrival rate and accuracy of the chosen configs — from the
@@ -803,7 +844,9 @@ class AnalyticsService:
             telemetry=tel,
             model_aopi=model_mean,
             per_stream_model=model_meas,
-            fitted_model=self._fitted_model if self._auto else None)
+            fitted_model=self._fitted_model if self._auto else None,
+            fitted_params=(dict(self._fitted_params)
+                           if self._auto and self._fitted_params else None))
         self.reports.append(rep)
         div = rep.measured_aopi / max(rep.predicted_aopi, 1e-12) - 1.0
         self.divergences.append(div)
@@ -849,27 +892,46 @@ class AnalyticsService:
     # ------------------------------------------------------------------
     def _run_engine_epoch(self, rec
                           ) -> tuple[np.ndarray, StreamTelemetry]:
-        """Rung 3: the real continuous-batching engine, driven by the
-        discrete-event replay plane (``engine_plane.measure_engine_epoch``)
-        at the *unscaled* truth rates — the same model-vs-measurement
-        split as the batched plane, but with real admits, decode ticks,
-        and preemptions on the Engine's lanes."""
-        assert self.engine is not None
-        from . import engine_plane
+        """Rung 3: the engine-rung measurement plane at the *unscaled*
+        truth rates — the same model-vs-measurement split as the batched
+        plane. ``engine_backend="des"`` replays the real
+        continuous-batching Engine event by event
+        (``engine_plane.measure_engine_epoch``: real admits, decode
+        ticks, preemptions on the lanes); ``"scan"`` runs the
+        bitwise-compatible batched tick-scan
+        (``tick_plane.measure_engine_epoch_scan``) so the rung scales to
+        full-suite frame budgets."""
+        from . import engine_plane, tick_plane
         dec = rec.decision
         t = rec.t
         lam_true, p_true = self._plane_rates(t, dec)
         act = self._active_at(t)
+        # Budget the epoch's frame volume against the backend cap: for
+        # smoke-sized DES caps this resolves to the cap itself; for the
+        # scan's full-suite cap it is the same arrival-coverage budget
+        # the GI/G/1 rung runs on.
+        max_lam = float(np.max(lam_true)) if np.size(lam_true) else 1.0
+        if not np.isfinite(max_lam):
+            max_lam = 1.0
+        frames = queues.frames_budget(max_lam, self.epoch_duration,
+                                      self.engine_frames_cap)
+        kw = dict(epoch_duration=self.epoch_duration, seed=self.seed,
+                  t=t, delay_model=self.true_delay_model, active=act,
+                  frames_cap=frames,
+                  collect_samples=self.SAMPLE_CAP if self._auto else 0)
         with obs.span("service.measure_engine", policy=self._policy,
                       delay_model=self._obs_model(), t0=t,
+                      backend=self.engine_backend,
                       streams=int(np.asarray(lam_true).shape[-1])):
-            out = engine_plane.measure_engine_epoch(
-                self.engine, lam_true, np.asarray(dec.mu), p_true,
-                np.asarray(dec.pol),
-                epoch_duration=self.epoch_duration, seed=self.seed, t=t,
-                delay_model=self.true_delay_model, active=act,
-                frames_cap=self.engine_frames_cap,
-                collect_samples=self.SAMPLE_CAP if self._auto else 0)
+            if self.engine_backend == "scan":
+                out = tick_plane.measure_engine_epoch_scan(
+                    lam_true, np.asarray(dec.mu), p_true,
+                    np.asarray(dec.pol), **kw)
+            else:
+                assert self.engine is not None
+                out = engine_plane.measure_engine_epoch(
+                    self.engine, lam_true, np.asarray(dec.mu), p_true,
+                    np.asarray(dec.pol), **kw)
         h_eff = np.maximum(out["horizon"], 1e-9)
         tel = StreamTelemetry(
             acc_hat=out["n_accurate"] / np.maximum(out["n_completed"], 1),

@@ -151,6 +151,50 @@ def test_validate_delay_model_lists_auto_sentinel():
         queues.validate_delay_model("auto")
 
 
+@pytest.mark.parametrize("dm,pname,truth", [
+    ("lognormal", "sigma", 1.25), ("weibull", "k", 0.5)])
+def test_fit_delay_model_estimates_shape_parameters(dm, pname, truth):
+    """The fitted selector also estimates the family's shape parameter
+    from the CvM grid — off-default shapes are recovered exactly (the
+    grid contains the truth)."""
+    rng = np.random.default_rng(23)
+    mean = 0.4
+    if dm == "lognormal":
+        samples = rng.lognormal(np.log(mean) - truth ** 2 / 2.0, truth,
+                                8192)
+    else:
+        from math import gamma as _g
+        samples = mean / _g(1.0 + 1.0 / truth) * rng.weibull(truth, 8192)
+    fit = queues.fit_delay_model(samples)
+    assert fit.model == dm
+    assert fit.params == {pname: truth}
+
+
+def test_fit_delay_model_default_shapes_and_mm1_have_params():
+    rng = np.random.default_rng(5)
+    fit = queues.fit_delay_model(rng.exponential(0.3, 4096))
+    assert fit.model == "mm1" and fit.params == {}
+    ln = queues.fit_delay_model(
+        queues.oracle_samplers("lognormal", 2.5, 10.0)["t_sampler"](
+            rng, 4096))
+    assert ln.model == "lognormal" and "sigma" in ln.params
+
+
+def test_family_cv2_and_residual_prior():
+    """Squared CoV per family and the Kingman-style residual prior
+    ``(1 + cv^2) / 2`` the planner seeds its AoPI scale from."""
+    assert queues.family_cv2("mm1") == pytest.approx(1.0)
+    assert queues.residual_prior("mm1") == pytest.approx(1.0)
+    # uniform on [0.5m, 1.5m]: cv^2 = spread^2 / 3 < 1 -> prior < 1.
+    assert queues.residual_prior("uniform") < 1.0
+    # heavy tails: cv^2 > 1 -> prior > 1, monotone in sigma.
+    assert queues.residual_prior("weibull", {"k": 0.5}) > \
+        queues.residual_prior("weibull", {"k": 0.9})
+    # lognormal cv^2 = expm1(sigma^2): monotone, crosses 1 at sigma ~ 0.83.
+    assert queues.family_cv2("lognormal", {"sigma": 1.5}) > 1.0 > \
+        queues.family_cv2("lognormal", {"sigma": 0.5})
+
+
 # ---------------------------------------------------------------------------
 # Determinism + key streams
 # ---------------------------------------------------------------------------

@@ -1,14 +1,15 @@
 """Truth-ladder rung 3: the real continuous-batching engine driven by the
-discrete-event replay plane (``serving.engine_plane``), the fitted
-delay-model selector at service level, and the engine columns in the
-robustness report."""
+discrete-event replay plane (``serving.engine_plane``), its batched
+device-resident twin (``serving.tick_plane``), the fitted delay-model
+selector at service level, and the engine columns in the robustness
+report."""
 import jax
 import numpy as np
 import pytest
 
 from repro import scenarios
 from repro.core import aopi, lbcd, profiles, queues
-from repro.serving import engine_plane, make_replay_engine, replay
+from repro.serving import engine_plane, make_replay_engine, replay, tick_plane
 from repro.serving.engine import FREE
 from repro.serving.scheduler import Frame
 from repro.serving.service import AnalyticsService
@@ -131,6 +132,135 @@ def test_engine_plane_requires_one_lane_per_stream():
 
 
 # ---------------------------------------------------------------------------
+# Tick-scan backend: bitwise DES parity, hygiene, compiled shape
+# ---------------------------------------------------------------------------
+
+_TRACE_KEYS = ("aopi", "horizon", "n_frames", "n_completed", "n_accurate",
+               "preempts", "delay_samples")
+
+
+@pytest.mark.parametrize("dm", queues.DELAY_MODELS)
+def test_tick_scan_bitwise_matches_des_every_family(dm):
+    """The tick-scan replays the DES *bitwise* on shared pre-drawn
+    randomness — every stat, every delay sample, and the full completion
+    trace, for every delay family."""
+    lam, mu, p, pol = _steady()
+    kw = dict(epoch_duration=120.0, seed=7, t=1, frames_cap=48,
+              delay_model=dm, collect_samples=8, collect_trace=True)
+    des = engine_plane.measure_engine_epoch(
+        make_replay_engine(len(lam)), lam, mu, p, pol, **kw)
+    scan = tick_plane.measure_engine_epoch_scan(lam, mu, p, pol, **kw)
+    for k in _TRACE_KEYS:
+        np.testing.assert_array_equal(des[k], scan[k], err_msg=k)
+    assert des["trace"] == scan["trace"] and len(scan["trace"]) > 0
+    # The epoch actually exercised the interesting paths.
+    assert (scan["n_completed"] > 0).all()
+    assert scan["preempts"][pol == 1].sum() > 0
+
+
+def test_tick_scan_statistical_parity_with_gi_g1_and_closed_forms():
+    """Same three-rung anchor as the DES test, on the scan backend."""
+    lam, mu, p, pol = _steady()
+    sc_means, gi_means = [], []
+    for t in range(3):
+        out = tick_plane.measure_engine_epoch_scan(
+            lam, mu, p, pol, epoch_duration=300.0, seed=5, t=t)
+        assert out["engine_steps"] > 0
+        sc_means.append(out["aopi"])
+        gi = queues.gi_g1_window([lam], [mu], [p], [pol], seed=6, t0=t,
+                                 n_frames=4096, horizon=300.0)
+        gi_means.append(gi["aopi"][0, 0])
+    sc_aopi = np.mean(sc_means, axis=0)
+    gi_aopi = np.mean(gi_means, axis=0)
+    th = np.array([float(aopi.aopi(l, m, q, w))
+                   for l, m, q, w in zip(lam, mu, p, pol)])
+    assert sc_aopi.mean() == pytest.approx(th.mean(), rel=0.15)
+    assert sc_aopi.mean() == pytest.approx(gi_aopi.mean(), rel=0.15)
+    assert sc_aopi[pol == 1].mean() < sc_aopi[pol == 0].mean()
+
+
+def test_tick_scan_churn_masks_lanes_bitwise():
+    """A churned-out stream zeroes its lane; the surviving lanes are
+    bitwise-unaffected by the mask (independent per-stream key streams),
+    and the masked scan still matches the masked DES bitwise."""
+    lam, mu, p, pol = _steady(n=4)
+    kw = dict(epoch_duration=120.0, seed=1, t=1, frames_cap=64)
+    full = tick_plane.measure_engine_epoch_scan(lam, mu, p, pol, **kw)
+    active = np.array([1.0, 0.0, 1.0, 1.0])
+    mask = tick_plane.measure_engine_epoch_scan(lam, mu, p, pol,
+                                                active=active, **kw)
+    dead, live = active == 0, active > 0
+    for k in ("aopi", "horizon", "n_frames", "n_completed", "preempts"):
+        assert (mask[k][dead] == 0.0).all(), k
+        np.testing.assert_array_equal(mask[k][live], full[k][live],
+                                      err_msg=k)
+    des = engine_plane.measure_engine_epoch(
+        make_replay_engine(4), lam, mu, p, pol, active=active, **kw)
+    np.testing.assert_array_equal(mask["aopi"], des["aopi"])
+
+
+def test_tick_scan_preempt_discipline():
+    """Preemption is an LCFSP-only event on both backends, and the scan
+    counts exactly the DES's preemptions."""
+    lam, mu, p, pol = _steady(n=6, lam=1.2, mu=1.5)
+    kw = dict(epoch_duration=120.0, seed=3, t=0, frames_cap=96)
+    scan = tick_plane.measure_engine_epoch_scan(lam, mu, p, pol, **kw)
+    des = engine_plane.measure_engine_epoch(
+        make_replay_engine(6), lam, mu, p, pol, **kw)
+    np.testing.assert_array_equal(scan["preempts"], des["preempts"])
+    assert (scan["preempts"][pol == 0] == 0.0).all()    # FCFS never
+    assert scan["preempts"][pol == 1].sum() > 0         # LCFSP does
+
+
+def test_tick_scan_compiles_to_single_scan():
+    """The whole epoch is ONE fused ``lax.scan`` over ticks — no
+    per-stream Python loop, no ``while`` in the jaxpr."""
+    s, f = 8, 16
+    arr2 = np.ones((f, s))
+    arr1 = np.ones(s)
+    bools = np.zeros(s, dtype=bool)
+    with np.errstate(all="ignore"):
+        jaxpr = jax.make_jaxpr(
+            lambda *a: tick_plane._tick_scan_impl(*a, collect_trace=False))(
+                arr2, arr2, arr2, arr2, arr2, arr1, bools, arr1, ~bools)
+
+    def prims(jp):
+        for eqn in jp.eqns:
+            yield eqn.primitive.name
+            for v in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                        v, is_leaf=lambda x: hasattr(x, "jaxpr")):
+                    if hasattr(sub, "jaxpr"):
+                        yield from prims(sub.jaxpr)
+
+    names = list(prims(jaxpr.jaxpr))
+    assert names.count("scan") == 1
+    assert "while" not in names
+
+
+def test_resolve_engine_backend_grammar():
+    r = tick_plane.resolve_engine_backend
+    assert r("des", n_streams=10_000, frames_cap=10_000) == "des"
+    assert r("scan", n_streams=1, frames_cap=1) == "scan"
+    # auto: frame volume at/below the DES budget stays on the DES.
+    assert r("auto", n_streams=5, frames_cap=192) == "des"
+    assert r("auto", n_streams=300, frames_cap=200_000) == "scan"
+    with pytest.raises(ValueError, match="engine_backend"):
+        r("vmap", n_streams=1, frames_cap=1)
+
+
+def test_measure_epoch_dispatcher():
+    lam, mu, p, pol = _steady(n=4)
+    kw = dict(epoch_duration=90.0, seed=2, t=0, frames_cap=32)
+    a = tick_plane.measure_epoch(lam, mu, p, pol, backend="scan", **kw)
+    b = tick_plane.measure_epoch(lam, mu, p, pol, backend="des",
+                                 engine=make_replay_engine(4), **kw)
+    np.testing.assert_array_equal(a["aopi"], b["aopi"])
+    with pytest.raises(ValueError, match="engine"):
+        tick_plane.measure_epoch(lam, mu, p, pol, backend="des", **kw)
+
+
+# ---------------------------------------------------------------------------
 # Service-level fitted selector (delay_model="auto")
 # ---------------------------------------------------------------------------
 
@@ -180,6 +310,34 @@ def test_replay_tables_engine_mode_three_rungs():
     assert not np.array_equal(rep.engine, rep.measured)
     svc = rep.service
     assert svc.mode == "engine" and svc.engine_frames_cap == 24
+    # 5 cameras x cap 24 frames sits under the auto budget -> real DES.
+    assert svc.engine_backend == "des" and svc.engine is not None
+
+
+def test_replay_tables_scan_backend_full_cap():
+    """``engine_params={"backend": "scan"}`` rides the whole replay stack
+    at the full GI/G/1-parity frames cap with no host Engine at all."""
+    tab = scenarios.build("steady_ar1", {**DIMS, "n_slots": 4})
+    rep = replay.replay_tables(tab, "lbcd", epoch_duration=90.0, seed=0,
+                               mode="engine",
+                               engine_params={"backend": "scan"})
+    svc = rep.service
+    assert svc.engine_backend == "scan" and svc.engine is None
+    assert svc.engine_frames_cap == 200_000
+    assert rep.engine is not None
+    assert np.isfinite(rep.engine).all() and (rep.engine > 0).all()
+    assert not np.array_equal(rep.engine, rep.measured)
+    # Same cap, same seed -> the two backends are bitwise-identical
+    # through the whole replay stack.
+    des = replay.replay_tables(tab, "lbcd", epoch_duration=90.0, seed=0,
+                               mode="engine",
+                               engine_params={"backend": "des",
+                                              "frames_cap": 24})
+    scan = replay.replay_tables(tab, "lbcd", epoch_duration=90.0, seed=0,
+                                mode="engine",
+                                engine_params={"backend": "scan",
+                                               "frames_cap": 24})
+    np.testing.assert_array_equal(des.engine, scan.engine)
 
 
 def test_sweep_engine_mode_report_columns():
